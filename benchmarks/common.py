@@ -1,0 +1,30 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "bench")
+
+
+def emit(name: str, rows: list[dict], t0: float, derived: str = "") -> None:
+    """Print ``name,us_per_call,derived`` CSV plus a per-row table, and save
+    the rows under reports/bench/<name>.csv."""
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    print(f"{name},{us:.0f},{derived}")
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    if not rows:
+        return
+    keys = list(rows[0])
+    path = os.path.join(REPORT_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+
+
+def rel_err(model: float, sim: float) -> float:
+    return abs(model - sim) / max(abs(sim), 1e-12)

@@ -1,0 +1,49 @@
+"""Paper Fig. 3: stability-region heat map — LHS of Eq. (3) over (M, λ).
+
+Reproduces the paper's trade-off: ~tens of models at slow observation rates
+vs a single model at ~20 obs/s, with the boundary moving from
+model-count-limited to compute-limited as λ grows.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.fg_paper import paper_contact_model, paper_params
+from repro.core.meanfield import solve_fixed_point
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = False) -> list[dict]:
+    cm = paper_contact_model()
+    Ms = [1, 2, 3, 4, 5, 6, 8, 12, 16] if not quick else [1, 2, 4, 8]
+    lams = np.geomspace(1e-3, 60.0, 7 if quick else 13)
+    rows = []
+    for M in Ms:
+        for lam in lams:
+            p = paper_params(lam=float(lam), M=M)
+            sol = solve_fixed_point(p, cm)
+            lhs = float(sol.stability)
+            rows.append(dict(
+                M=M, lam=round(float(lam), 4),
+                stability_lhs=round(lhs, 4) if np.isfinite(lhs) else 1e9,
+                stable=bool(sol.stable),
+            ))
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    # derived: max stable M at the slowest rate; max stable lam at M=1
+    m_max = max((r["M"] for r in rows if r["stable"]), default=0)
+    lam_max = max((r["lam"] for r in rows if r["stable"] and r["M"] == 1),
+                  default=0.0)
+    emit("fig3_stability", rows, t0, f"Mmax={m_max};lam_max_M1={lam_max}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Roofline table: aggregates reports/dryrun/*.json into the §Roofline table
+(per arch x shape x mesh: three terms, dominant bottleneck, useful-FLOPs
+ratio, per-device memory)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import emit
+
+
+def run(report_dir: str = "reports/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        r = json.load(open(path))
+        rf = r["roofline"]
+        rows.append(dict(
+            mesh=r["mesh"], arch=r["arch"], shape=r["shape"], mode=r["mode"],
+            compute_ms=round(rf["compute_s"] * 1e3, 3),
+            memory_ms=round(rf["memory_s"] * 1e3, 3),
+            collective_ms=round(rf["collective_s"] * 1e3, 3),
+            dominant=rf["dominant"].replace("_s", ""),
+            useful_flops=round(r["useful_flops_ratio"], 2),
+            temp_gb=round((r["bytes_per_device"] or 0) / 1e9, 2),
+            xla_flops_dev=f'{r["xla_raw"]["flops_per_device"]:.3g}',
+            coll_bytes_hlo=f'{r["xla_raw"]["collective_bytes"].get("total", 0):.3g}',
+        ))
+    return rows
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run()
+    n_fit = sum(1 for r in rows if r["temp_gb"] <= 16.0)
+    emit("roofline_table", rows, t0, f"combos={len(rows)};fit16gb={n_fit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark harness — one entry per paper table/figure plus the system
+benchmarks. Prints ``name,us_per_call,derived`` CSV lines (one per bench)
+and writes per-bench row CSVs under reports/bench/.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks import (
+    fig1_availability, fig2_capacity, fig3_stability, fig4_staleness,
+    gossip_throughput, roofline_table,
+)
+
+BENCHES = {
+    "fig1": fig1_availability.main,
+    "fig2": fig2_capacity.main,
+    "fig3": fig3_stability.main,
+    "fig4": fig4_staleness.main,
+    "gossip": gossip_throughput.main,
+    "roofline": roofline_table.main,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweeps (CI-sized)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    names = list(BENCHES) if not args.only else args.only.split(",")
+    failures = 0
+    print("name,us_per_call,derived")
+    for n in names:
+        try:
+            BENCHES[n](quick=args.quick)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{n},FAILED,")
+            traceback.print_exc()
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

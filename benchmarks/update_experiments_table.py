@@ -1,0 +1,49 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from reports/dryrun.
+
+Replaces the markdown table between the '| arch |' header and the blank
+line before 'Reading of the table'. Idempotent.
+"""
+
+import glob
+import json
+import re
+
+HEADER = ("| arch | shape | mode | compute ms | memory ms | collective ms "
+          "| dominant | useful | temp GB/dev |")
+
+
+def build_table() -> str:
+    rows = []
+    for path in sorted(glob.glob("reports/dryrun/single_*.json")):
+        r = json.load(open(path))
+        rf = r["roofline"]
+        rows.append((r["arch"], r["shape"], r["mode"],
+                     rf["compute_s"] * 1e3, rf["memory_s"] * 1e3,
+                     rf["collective_s"] * 1e3,
+                     rf["dominant"].replace("_s", ""),
+                     r["useful_flops_ratio"],
+                     (r["bytes_per_device"] or 0) / 1e9))
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda x: (x[0], order[x[1]]))
+    lines = [HEADER, "|---|---|---|---|---|---|---|---|---|"]
+    for a, s, m, c, me, co, d, u, t in rows:
+        lines.append(f"| {a} | {s} | {m} | {c:.2f} | {me:.2f} | {co:.2f} "
+                     f"| **{d}** | {u:.2f} | {t:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    txt = open("EXPERIMENTS.md").read()
+    table = build_table()
+    pat = re.compile(
+        r"\| arch \| shape \| mode \|.*?(?=\n\nReading of the table)",
+        re.DOTALL,
+    )
+    new, n = pat.subn(table, txt)
+    assert n == 1, f"table anchor not found ({n})"
+    open("EXPERIMENTS.md", "w").write(new)
+    print(f"updated table ({table.count(chr(10)) - 1} rows)")
+
+
+if __name__ == "__main__":
+    main()

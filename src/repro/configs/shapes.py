@@ -1,0 +1,54 @@
+"""The 4 assigned input shapes and per-(arch, shape) policy.
+
+``step_kind``:
+  train    — full train_step (fwd + bwd + optimizer [+ gossip round])
+  prefill  — full-sequence forward producing logits (inference prefill)
+  decode   — serve_step: ONE new token against a seq_len-deep cache
+
+long_500k decode requires sub-quadratic attention: SSM/hybrid run natively;
+MLA runs on its compressed latent cache (O(S·r) per token, cache fits);
+pure full-attention dense archs use the sliding-window variant
+(``ArchConfig.long_context_window`` ring cache) — see DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["InputShape", "SHAPES", "get_shape", "long_ctx_policy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    step_kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_shape(name: str) -> InputShape:
+    return SHAPES[name]
+
+
+def long_ctx_policy(cfg) -> tuple[str, int | None]:
+    """How an arch handles the long_500k decode shape.
+
+    Returns (policy, window_override):
+      'native'  — SSM/hybrid/native-SWA: no override needed
+      'mla'     — compressed latent cache, linear per-token cost
+      'swa'     — dense full-attention arch: windowed variant
+    """
+    has_mamba = any(s.kind == "mamba" for s in cfg.pattern)
+    if has_mamba or cfg.window is not None:
+        return "native", None
+    if cfg.is_mla:
+        return "mla", None
+    return "swa", cfg.long_context_window

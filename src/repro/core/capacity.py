@@ -1,0 +1,91 @@
+"""Node stored information (Lemma 4) and FG learning capacity (Problem 1).
+
+* ``node_stored_information`` — Lemma 4: ``M w a min(L/k, λ ∫_0^{τ_l} o dτ)``
+  (an upper bound; real models degrade instead of FIFO-dropping).
+* ``learning_capacity`` — Definition 9 / Problem 1 objective:
+  ``w a min(L/(λ k), ∫_0^{τ_l} o dτ)`` (node stored info over the total
+  observation arrival rate M λ).
+* ``solve_learning_capacity`` — Problem 1. By Proposition 1 the optimum sits
+  at the minimum model size ``L* = L_m``, so the problem reduces to a sweep
+  over the number of models M subject to the Eq. (3) stability constraint —
+  exactly the greedy the paper prescribes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.dde import solve_observation_availability
+from repro.core.meanfield import FGParams, MeanFieldSolution, solve_fixed_point
+from repro.core.mobility import ContactModel
+
+__all__ = [
+    "node_stored_information",
+    "learning_capacity",
+    "CapacityPoint",
+    "solve_learning_capacity",
+]
+
+
+def node_stored_information(
+    p: FGParams, sol: MeanFieldSolution, o_integral: jnp.ndarray
+) -> jnp.ndarray:
+    """Lemma 4 (observations stored per node, ages <= τ_l)."""
+    stored_per_model = jnp.minimum(p.L / p.k, p.lam * o_integral)
+    return p.M * p.w * sol.a * jnp.where(sol.stable, stored_per_model, 0.0)
+
+
+def learning_capacity(
+    p: FGParams, sol: MeanFieldSolution, o_integral: jnp.ndarray
+) -> jnp.ndarray:
+    """Problem 1 objective: stored information per unit total arrival rate."""
+    cap = p.w * sol.a * jnp.minimum(p.L / (p.lam * p.k), o_integral)
+    return jnp.where(sol.stable, cap, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPoint:
+    M: int
+    L: float
+    capacity: jnp.ndarray
+    stored: jnp.ndarray
+    sol: MeanFieldSolution
+
+
+def solve_learning_capacity(
+    p: FGParams,
+    contact: ContactModel,
+    *,
+    L_m: float,
+    M_max: int = 64,
+    dt: float = 0.05,
+) -> CapacityPoint:
+    """Problem 1: maximize capacity over (M, L) with L >= L_m, M >= 1.
+
+    Proposition 1 pins L* = L_m; we sweep M = 1..M_max, skipping unstable
+    points (where the objective is 0 by convention — the system cannot keep
+    up, Definition 9 is at steady state).
+    """
+    best: CapacityPoint | None = None
+    for M in range(1, M_max + 1):
+        pm = p.replace(M=M, L=L_m)
+        sol = solve_fixed_point(pm, contact)
+        if not bool(sol.stable):
+            # Stability LHS grows with M (more training + merging load);
+            # once unstable the sweep can stop (verified monotone in tests).
+            break
+        dde = solve_observation_availability(pm, sol, dt=dt)
+        o_int = dde.integral(pm.tau_l)
+        cap = learning_capacity(pm, sol, o_int)
+        stored = node_stored_information(pm, sol, o_int)
+        point = CapacityPoint(M=M, L=L_m, capacity=cap, stored=stored, sol=sol)
+        if best is None or float(cap) > float(best.capacity):
+            best = point
+    if best is None:  # unstable even at M = 1
+        pm = p.replace(M=1, L=L_m)
+        sol = solve_fixed_point(pm, contact)
+        z = jnp.asarray(0.0)
+        best = CapacityPoint(M=1, L=L_m, capacity=z, stored=z, sol=sol)
+    return best

@@ -1,0 +1,113 @@
+"""Observation-availability delay differential equation (Theorem 1).
+
+Solves, at the mean-field limit and in the substable regime,
+
+    do(τ)/dτ = (b S(a) w^2 / T_S(a)) [ (1-a) o(τ)
+               + a o(τ-d_M) (1 - o(τ-d_M)) ] - (α w / N) o(τ)        (5)
+
+with the paper's initial condition
+
+    o(τ) = 0                      τ < d_I
+    o(τ) = Λ / ceil(a N)          d_I <= τ <= d_I + d_M              (6)
+
+(the paper writes the numerator as ``1 + (Λ - 1)``: the training node plus the
+Λ-1 simultaneous observers). The incorporation rate is R(τ) = λ o(τ).
+
+The delay term is handled with a fixed-step explicit Euler scheme and a ring
+buffer of ``ceil(d_M / dt)`` past samples, carried through ``lax.scan`` — the
+whole solver is jit-able and differentiable w.r.t. the mean-field inputs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meanfield import FGParams, MeanFieldSolution
+
+__all__ = ["DDESolution", "solve_observation_availability"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DDESolution:
+    tau: jnp.ndarray        # (nt,) age grid [s], starting at 0
+    o: jnp.ndarray          # (nt,) observation availability o(τ) in [0, 1]
+    dt: float
+
+    def integral(self, tau_l: float) -> jnp.ndarray:
+        """∫_0^{tau_l} o(τ) dτ — the Lemma 4 incorporation integral."""
+        mask = self.tau <= tau_l
+        return jnp.sum(jnp.where(mask, self.o, 0.0)) * self.dt
+
+    def incorporation_rate(self, lam: float) -> jnp.ndarray:
+        """Theorem 1: R(τ) = λ o(τ)."""
+        return lam * self.o
+
+
+@partial(jax.jit, static_argnames=("n_steps", "n_delay"))
+def _integrate(
+    coeff: jnp.ndarray,      # b S w^2 / T_S
+    a: jnp.ndarray,
+    leak: jnp.ndarray,       # α w / N
+    o0: jnp.ndarray,         # plateau value Λ/ceil(aN)
+    n_steps: int,
+    n_delay: int,
+    dt: float,
+) -> jnp.ndarray:
+    """Euler integration from τ = d_I + d_M onward.
+
+    The carried state is (o_current, ring buffer of the last n_delay values);
+    o(τ - d_M) is the oldest ring-buffer entry. History on [d_I, d_I + d_M] is
+    the constant plateau o0, which also seeds the buffer.
+    """
+    buf0 = jnp.full((n_delay,), o0)
+
+    def step(carry, _):
+        o, buf, head = carry
+        o_delayed = buf[head]  # oldest entry (head points at τ - d_M)
+        do = coeff * ((1.0 - a) * o + a * o_delayed * (1.0 - o_delayed)) - leak * o
+        o_new = jnp.clip(o + dt * do, 0.0, 1.0)
+        buf = buf.at[head].set(o)
+        head = (head + 1) % n_delay
+        return (o_new, buf, head), o_new
+
+    (_, _, _), trace = jax.lax.scan(
+        step, (o0, buf0, jnp.asarray(0)), None, length=n_steps
+    )
+    return trace
+
+
+def solve_observation_availability(
+    p: FGParams,
+    sol: MeanFieldSolution,
+    *,
+    dt: float = 0.05,
+    tau_max: float | None = None,
+) -> DDESolution:
+    """Solve Eq. (5)-(6) on τ ∈ [0, tau_max] (default: the lifetime τ_l)."""
+    tau_max = float(tau_max if tau_max is not None else p.tau_l)
+    n_total = max(int(round(tau_max / dt)) + 1, 2)
+    tau = jnp.arange(n_total) * dt
+
+    d_I = float(sol.d_I)
+    d_M = float(sol.d_M)
+    if not (jnp.isfinite(sol.d_I) and jnp.isfinite(sol.d_M)):
+        # Unstable operating point: observations are never incorporated.
+        return DDESolution(tau=tau, o=jnp.zeros_like(tau), dt=dt)
+
+    o0 = p.Lam / jnp.ceil(jnp.maximum(sol.a * p.N, 1.0))
+    n_pre = min(int(round(d_I / dt)), n_total)            # o = 0 region
+    n_plateau = min(int(round(d_M / dt)) + 1, n_total - n_pre)  # o = o0 region
+    n_delay = max(int(round(d_M / dt)), 1)
+    n_steps = n_total - n_pre - n_plateau
+
+    parts = [jnp.zeros((n_pre,)), jnp.full((n_plateau,), o0)]
+    if n_steps > 0:
+        coeff = sol.b * sol.S * p.w * p.w / jnp.maximum(sol.T_S, 1e-12)
+        leak = p.alpha * p.w / p.N
+        parts.append(_integrate(coeff, sol.a, leak, o0, n_steps, n_delay, dt))
+    o = jnp.concatenate(parts)[:n_total]
+    return DDESolution(tau=tau, o=o, dt=dt)

@@ -1,0 +1,63 @@
+"""Model-merging operators (the paper's *merging* transformation).
+
+The paper defines merging as a transformation of two instances of a model
+whose output's training set is the union of the inputs' training sets; for
+ANNs "the coefficients of the model obtained through merging are derived as a
+weighted average of the coefficients of the merged model instances".
+
+We implement that weighted average with three weighting policies:
+
+* ``uniform``    — plain 0.5/0.5 average (classic gossip averaging);
+* ``obs_count``  — weights proportional to the number of observations each
+  instance has incorporated (FedAvg-style; mirrors the union-of-training-sets
+  semantics: the count of the merged instance is the sum, approximating the
+  union under the paper's "non-unique data points" caveat);
+* ``staleness``  — weights ``exp(-age / tau_l)``: fresher instances dominate,
+  reflecting the paper's observation-lifetime τ_l.
+
+These run inside the gossip protocol (see ``repro.core.gossip``) and are the
+op that the ``gossip_merge`` Pallas kernel fuses on TPU.
+"""
+
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["merge_weights", "merge_pytrees", "MergePolicy"]
+
+MergePolicy = Literal["uniform", "obs_count", "staleness"]
+
+
+def merge_weights(
+    policy: MergePolicy,
+    own_count: jnp.ndarray,
+    peer_count: jnp.ndarray,
+    own_age: jnp.ndarray,
+    peer_age: jnp.ndarray,
+    tau_l: float,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (w_own, w_peer) with w_own + w_peer == 1."""
+    if policy == "uniform":
+        w_own = jnp.asarray(0.5)
+    elif policy == "obs_count":
+        tot = jnp.maximum(own_count + peer_count, 1.0)
+        w_own = own_count / tot
+    elif policy == "staleness":
+        s_own = jnp.exp(-own_age / tau_l)
+        s_peer = jnp.exp(-peer_age / tau_l)
+        w_own = s_own / jnp.maximum(s_own + s_peer, 1e-12)
+    else:
+        raise ValueError(f"unknown merge policy {policy!r}")
+    return w_own, 1.0 - w_own
+
+
+def merge_pytrees(own, peer, w_own, w_peer):
+    """Leafwise weighted average: the ANN merging operation of §III-B."""
+    return jax.tree.map(
+        lambda a, b: (w_own * a.astype(jnp.float32)
+                      + w_peer * b.astype(jnp.float32)).astype(a.dtype),
+        own, peer,
+    )

@@ -1,0 +1,415 @@
+"""Time-slotted Monte-Carlo simulator of Floating Gossip (paper §VI).
+
+This is the validation apparatus the paper uses against its mean-field model,
+re-implemented as a single vectorized ``jax.lax.scan`` over time slots:
+
+* nodes move in a square area under the Random Direction Mobility model with
+  reflections; a circular Replication Zone (RZ) sits at the center;
+* two non-busy nodes in the RZ that *newly* come within the transmission
+  radius establish a D2D connection (setup time ``t0``), snapshot their model
+  instances and exchange them one at a time (``T_L`` each, random order),
+  staying *busy* until the exchange finishes or the contact breaks;
+* every delivered instance whose training set is not a subset of the local
+  one is enqueued for *merging*; locally recorded observations are enqueued
+  for *training*; each node serves one job at a time with non-preemptive
+  priority to merging (service times ``T_M`` / ``T_T``);
+* nodes leaving the RZ drop their instances, queues, and observations.
+
+Observations are tracked explicitly: each model has a ring of ``K_OBS``
+recent observations with birth times; each node keeps a boolean incorporation
+mask per (model, obs slot). Merging ORs masks (training-set union); training
+sets a single bit. This yields, per output sample: model availability, busy
+fraction, per-node stored information (ages <= tau_l), and per-observation
+holder counts from which o(tau) is estimated post-hoc.
+
+All state lives in fixed-shape arrays so the whole run jit-compiles; a run of
+200 nodes x 20k slots takes seconds on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.meanfield import FGParams
+
+__all__ = ["SimConfig", "SimOutputs", "simulate", "estimate_o_of_tau"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Geometry/mobility/discretization of the simulation (paper defaults)."""
+
+    n_nodes: int = 200
+    area_side: float = 200.0
+    rz_radius: float = 100.0
+    r_tx: float = 5.0
+    speed: float = 1.0
+    dir_change_rate: float = 1.0 / 20.0  # RDM heading renewal [1/s]
+    dt: float = 0.25                     # slot [s]
+    n_slots: int = 8000
+    sample_every: int = 8                # output every k slots
+    k_obs: int = 64                      # tracked observations per model
+    q_train: int = 16                    # training queue slots per node
+    q_merge: int = 16                    # merging queue slots per node
+    warmup_frac: float = 0.3             # discarded transient fraction
+
+
+@dataclasses.dataclass
+class SimOutputs:
+    """Per-sample traces (leading axis = sample index)."""
+
+    t: np.ndarray                # (S,) sample times
+    availability: np.ndarray     # (S, M) mean fraction of in-RZ nodes w/ model
+    busy_frac: np.ndarray        # (S,)
+    stored_info: np.ndarray      # (S,) mean obs (age<=tau_l) per in-RZ node
+    obs_birth: np.ndarray        # (S, M, K) birth time of ring slot (-inf empty)
+    obs_holders: np.ndarray      # (S, M, K) #in-RZ nodes having incorporated
+    model_holders: np.ndarray    # (S, M) #in-RZ nodes with the model
+    n_in_rz: np.ndarray          # (S,)
+
+
+def _pairs_from_mutual(scores: jnp.ndarray) -> jnp.ndarray:
+    """Greedy-ish pair matching: i<->j paired iff each is the other's best.
+
+    ``scores`` is (N, N) with +inf for ineligible pairs. Returns partner
+    index per node, or -1. Mutual-best matching misses some simultaneous
+    contacts, which is rare at the paper's densities (validated vs g).
+    """
+    n = scores.shape[0]
+    best = jnp.argmin(scores, axis=1)
+    has = jnp.isfinite(jnp.min(scores, axis=1))
+    mutual = (best[best] == jnp.arange(n)) & has & has[best]
+    return jnp.where(mutual, best, -1)
+
+
+@partial(jax.jit, static_argnames=("cfg", "M", "Lam"))
+def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
+    N, K = cfg.n_nodes, cfg.k_obs
+    QT, QM = cfg.q_train, cfg.q_merge
+    dt = cfg.dt
+    t0, T_L, T_T, T_M = (p_dyn[k] for k in ("t0", "T_L", "T_T", "T_M"))
+    lam = p_dyn["lam"]
+    tau_l = p_dyn["tau_l"]
+    center = jnp.asarray([cfg.area_side / 2.0, cfg.area_side / 2.0])
+
+    k_pos, k_dir, key = jax.random.split(key, 3)
+    pos0 = jax.random.uniform(k_pos, (N, 2), maxval=cfg.area_side)
+    ang0 = jax.random.uniform(k_dir, (N,), maxval=2 * jnp.pi)
+
+    state = dict(
+        pos=pos0,
+        ang=ang0,
+        # --- D2D exchange state ---
+        partner=jnp.full((N,), -1, dtype=jnp.int32),
+        exch_elapsed=jnp.zeros((N,)),        # seconds since connection start
+        exch_total=jnp.zeros((N,)),          # planned t0 + n*T_L
+        snap=jnp.zeros((N, M, K), dtype=bool),       # masks at connection time
+        snap_has=jnp.zeros((N, M), dtype=bool),      # had model at connection
+        order_seed=jnp.zeros((N,), dtype=jnp.uint32),
+        prev_close=jnp.zeros((N, N), dtype=bool),
+        # --- model / observation state ---
+        inc=jnp.zeros((N, M, K), dtype=bool),        # incorporated bits
+        has_model=jnp.zeros((N, M), dtype=bool),
+        obs_birth=jnp.full((M, K), -jnp.inf),
+        obs_head=jnp.zeros((M,), dtype=jnp.int32),
+        # --- compute queues (merge: model id + mask; train: model + slot) ---
+        tq_model=jnp.full((N, QT), -1, dtype=jnp.int32),
+        tq_slot=jnp.zeros((N, QT), dtype=jnp.int32),
+        mq_model=jnp.full((N, QM), -1, dtype=jnp.int32),
+        mq_mask=jnp.zeros((N, QM, K), dtype=bool),
+        serving=jnp.full((N,), -1, dtype=jnp.int32),  # -1 idle, 0 merge, 1 train
+        serv_left=jnp.zeros((N,)),
+        serv_model=jnp.zeros((N,), dtype=jnp.int32),
+        serv_mask=jnp.zeros((N, K), dtype=bool),      # merge payload
+        serv_slot=jnp.zeros((N,), dtype=jnp.int32),   # train payload
+    )
+
+    def step(carry, inp):
+        state, key = carry
+        slot_idx = inp
+        t_now = slot_idx.astype(jnp.float32) * dt
+        key, k_renew, k_head, k_obs, k_who = jax.random.split(key, 5)
+
+        pos, ang = state["pos"], state["ang"]
+        # ---- mobility: RDM with reflections ----
+        renew = jax.random.uniform(k_renew, (N,)) < cfg.dir_change_rate * dt
+        new_ang = jax.random.uniform(k_head, (N,), maxval=2 * jnp.pi)
+        ang = jnp.where(renew, new_ang, ang)
+        vel = cfg.speed * jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+        pos = pos + vel * dt
+        # reflect
+        over = pos > cfg.area_side
+        under = pos < 0.0
+        pos = jnp.where(over, 2 * cfg.area_side - pos, jnp.where(under, -pos, pos))
+        refl = over | under
+        vel = jnp.where(refl, -vel, vel)
+        ang = jnp.arctan2(vel[:, 1], vel[:, 0])
+
+        in_rz = jnp.linalg.norm(pos - center, axis=-1) <= cfg.rz_radius
+
+        # ---- RZ churn: leaving the RZ drops everything ----
+        was_in = state.get("_in_rz_prev", in_rz)
+        left = was_in & ~in_rz
+        inc = jnp.where(left[:, None, None], False, state["inc"])
+        has_model = jnp.where(left[:, None], False, state["has_model"])
+        tq_model = jnp.where(left[:, None], -1, state["tq_model"])
+        mq_model = jnp.where(left[:, None], -1, state["mq_model"])
+        serving = jnp.where(left, -1, state["serving"])
+        serv_left = jnp.where(left, 0.0, state["serv_left"])
+
+        # ---- contact dynamics ----
+        d2 = jnp.sum((pos[:, None, :] - pos[None, :, :]) ** 2, axis=-1)
+        close = (d2 <= cfg.r_tx**2) & in_rz[:, None] & in_rz[None, :]
+        close = close & ~jnp.eye(N, dtype=bool)
+        new_contact = close & ~state["prev_close"]
+
+        busy = state["partner"] >= 0
+        partner = state["partner"]
+
+        # break / completion of ongoing exchanges
+        pidx = jnp.clip(partner, 0, N - 1)
+        still_close = close[jnp.arange(N), pidx] & busy
+        elapsed = jnp.where(busy, state["exch_elapsed"] + dt, 0.0)
+        done = busy & (elapsed >= state["exch_total"])
+        broke = busy & ~still_close & ~done
+        ending = done | broke
+        # deliveries: instances whose cumulative transfer time fit in the
+        # effective contact duration (elapsed for completion, elapsed-dt for a
+        # break — the broken slot did not finish).
+        eff_time = jnp.where(done, state["exch_total"], jnp.maximum(elapsed - dt, 0.0))
+
+        # per (receiver, model): completion offset of the instance in the
+        # sender's random order. order: permutation seeded per connection.
+        def deliveries(order_seed, sender_has, eff):
+            # rank of each model in the sender's send order
+            rnd = jax.random.uniform(
+                jax.random.fold_in(jax.random.PRNGKey(0), order_seed), (M,)
+            )
+            rnd = jnp.where(sender_has, rnd, jnp.inf)
+            rank = jnp.argsort(jnp.argsort(rnd))  # 0-based among all models
+            fin = t0 + (rank + 1).astype(jnp.float32) * T_L
+            return sender_has & (fin <= eff)
+
+        sender_seed = state["order_seed"][pidx]
+        sender_has = state["snap_has"][pidx]
+        delivered = jax.vmap(deliveries)(sender_seed, sender_has, eff_time)
+        delivered = delivered & ending[:, None]
+        sender_mask = state["snap"][pidx]  # (N, M, K)
+
+        # enqueue merge jobs for delivered instances that add information
+        # (Definition: merge only when the received training set is not a
+        # subset of the local one — Y of Definition 4.)
+        adds = delivered & jnp.any(sender_mask & ~inc, axis=-1)
+        # one delivered model can arrive per slot boundary; enqueue each model
+        # sequentially over M (M is small: unrolled python loop at trace time)
+        for m in range(M):
+            do = adds[:, m]
+            free = mq_model < 0
+            first = jnp.argmax(free, axis=-1)
+            can = jnp.any(free, axis=-1) & do
+            sel = (jnp.arange(QM)[None, :] == first[:, None]) & can[:, None]
+            mq_model = jnp.where(sel, m, mq_model)
+            mq_mask = jnp.where(sel[:, :, None], sender_mask[:, m][:, None, :], state["mq_mask"])
+            state["mq_mask"] = mq_mask
+        mq_mask = state["mq_mask"]
+        # NOTE: a received instance is NOT used/propagated until merged
+        # (paper §III-C) — has_model flips only at merge completion below.
+
+        partner = jnp.where(ending, -1, partner)
+        busy = partner >= 0
+
+        # ---- new connections among non-busy, newly-in-contact nodes ----
+        elig = ~busy & in_rz
+        cand = new_contact & elig[:, None] & elig[None, :]
+        scores = jnp.where(cand, d2, jnp.inf)
+        match = _pairs_from_mutual(scores)
+        newly = match >= 0
+        midx = jnp.clip(match, 0, N - 1)
+        # planned exchange: both sides send every non-default instance they
+        # hold (w = 1 case; the subscription cap W is handled by the caller
+        # restricting M). gamma = own + partner instances.
+        n_own = jnp.sum(has_model, axis=-1)
+        n_exch = n_own + n_own[midx]
+        total = t0 + n_exch.astype(jnp.float32) * T_L
+        partner = jnp.where(newly, match, partner)
+        elapsed = jnp.where(newly, 0.0, elapsed)
+        exch_total = jnp.where(newly, total, state["exch_total"])
+        snap = jnp.where(newly[:, None, None], inc, state["snap"])
+        snap_has = jnp.where(newly[:, None], has_model, state["snap_has"])
+        order_seed = jnp.where(
+            newly,
+            (slot_idx.astype(jnp.uint32) * jnp.uint32(2654435761)
+             + jnp.arange(N, dtype=jnp.uint32)),
+            state["order_seed"],
+        )
+
+        # ---- observation generation ----
+        obs_birth, obs_head = state["obs_birth"], state["obs_head"]
+        new_obs = jax.random.uniform(k_obs, (M,)) < lam * dt
+        slot_of = obs_head
+        obs_birth = jnp.where(
+            new_obs[:, None]
+            & (jnp.arange(K)[None, :] == slot_of[:, None]),
+            t_now, obs_birth,
+        )
+        obs_head = jnp.where(new_obs, (obs_head + 1) % K, obs_head)
+        # clear incorporation bits of the recycled slot
+        recycled = new_obs[None, :, None] & (jnp.arange(K)[None, None, :] == slot_of[None, :, None])
+        inc = inc & ~recycled
+
+        # Lam random in-RZ nodes record each new observation -> training queue
+        who_scores = jax.random.uniform(k_who, (M, N)) + (~in_rz)[None, :] * 1e3
+        ranks = jnp.argsort(who_scores, axis=-1)  # (M, N) node ids by score
+        observers = ranks[:, :Lam]                # (M, Lam)
+        for m in range(M):
+            is_obs = jnp.zeros((N,), bool).at[observers[m]].set(True) & in_rz & new_obs[m]
+            free = tq_model < 0
+            first = jnp.argmax(free, axis=-1)
+            can = jnp.any(free, axis=-1) & is_obs
+            sel = (jnp.arange(QT)[None, :] == first[:, None]) & can[:, None]
+            tq_model = jnp.where(sel, m, tq_model)
+            tq_slot = jnp.where(sel, slot_of[m], state["tq_slot"])
+            state["tq_slot"] = tq_slot
+        tq_slot = state["tq_slot"]
+
+        # ---- compute server: finish jobs, then pick next (merge priority) ---
+        serv_left = jnp.where(serving >= 0, serv_left - dt, serv_left)
+        fin = (serving >= 0) & (serv_left <= 0.0)
+        fin_merge = fin & (serving == 0)
+        fin_train = fin & (serving == 1)
+        # merge completion: OR payload into own mask for that model
+        mm = state["serv_model"]
+        onehot_m = jax.nn.one_hot(mm, M, dtype=bool)  # (N, M)
+        merge_apply = fin_merge[:, None, None] & onehot_m[:, :, None] & state["serv_mask"][:, None, :]
+        inc = inc | merge_apply
+        has_model = has_model | (fin_merge[:, None] & onehot_m)
+        # train completion: set own bit
+        onehot_k = jax.nn.one_hot(state["serv_slot"], K, dtype=bool)
+        train_apply = fin_train[:, None, None] & onehot_m[:, :, None] & onehot_k[:, None, :]
+        # only counts if the observation slot was not recycled since
+        fresh = jnp.take_along_axis(
+            obs_birth[None, :, :].repeat(N, 0),
+            state["serv_slot"][:, None, None], axis=2
+        )[:, :, 0] > -jnp.inf
+        train_apply = train_apply & fresh[:, :, None]
+        inc = inc | train_apply
+        has_model = has_model | (fin_train[:, None] & onehot_m & fresh)
+        serving = jnp.where(fin, -1, serving)
+
+        # pick next job: merge queue first
+        idle = serving < 0
+        m_avail = jnp.any(mq_model >= 0, axis=-1)
+        m_first = jnp.argmax(mq_model >= 0, axis=-1)
+        take_m = idle & m_avail
+        sel_m = (jnp.arange(QM)[None, :] == m_first[:, None]) & take_m[:, None]
+        serv_model = jnp.where(
+            take_m, mq_model[jnp.arange(N), m_first], state["serv_model"]
+        )
+        serv_mask = jnp.where(
+            take_m[:, None], mq_mask[jnp.arange(N), m_first], state["serv_mask"]
+        )
+        mq_model = jnp.where(sel_m, -1, mq_model)
+        serving = jnp.where(take_m, 0, serving)
+        serv_left = jnp.where(take_m, T_M, serv_left)
+
+        idle = serving < 0
+        t_avail = jnp.any(tq_model >= 0, axis=-1)
+        t_first = jnp.argmax(tq_model >= 0, axis=-1)
+        take_t = idle & t_avail
+        sel_t = (jnp.arange(QT)[None, :] == t_first[:, None]) & take_t[:, None]
+        serv_model = jnp.where(
+            take_t, tq_model[jnp.arange(N), t_first], serv_model
+        )
+        serv_slot = jnp.where(
+            take_t, tq_slot[jnp.arange(N), t_first], state["serv_slot"]
+        )
+        tq_model = jnp.where(sel_t, -1, tq_model)
+        serving = jnp.where(take_t, 1, serving)
+        serv_left = jnp.where(take_t, T_T, serv_left)
+
+        # ---- outputs ----
+        age = t_now - obs_birth  # (M, K)
+        live = (obs_birth > -jnp.inf) & (age <= tau_l)
+        stored = jnp.sum(inc & live[None, :, :], axis=(1, 2))  # per node
+        n_rz = jnp.maximum(jnp.sum(in_rz), 1)
+        out = dict(
+            availability=jnp.sum(has_model & in_rz[:, None], axis=0) / n_rz,
+            busy_frac=jnp.sum((partner >= 0) & in_rz) / n_rz,
+            stored=jnp.sum(jnp.where(in_rz, stored, 0)) / n_rz,
+            obs_birth=obs_birth,
+            obs_holders=jnp.sum(inc & in_rz[:, None, None], axis=0),
+            model_holders=jnp.sum(has_model & in_rz[:, None], axis=0),
+            n_in_rz=jnp.sum(in_rz),
+        )
+
+        new_state = dict(
+            pos=pos, ang=ang, partner=partner, exch_elapsed=elapsed,
+            exch_total=exch_total, snap=snap, snap_has=snap_has,
+            order_seed=order_seed, prev_close=close, inc=inc,
+            has_model=has_model, obs_birth=obs_birth, obs_head=obs_head,
+            tq_model=tq_model, tq_slot=tq_slot, mq_model=mq_model,
+            mq_mask=mq_mask, serving=serving, serv_left=serv_left,
+            serv_model=serv_model, serv_mask=serv_mask, serv_slot=serv_slot,
+            _in_rz_prev=in_rz,
+        )
+        return (new_state, key), out
+
+    state["_in_rz_prev"] = jnp.linalg.norm(pos0 - center, axis=-1) <= cfg.rz_radius
+    (_, _), outs = jax.lax.scan(
+        step, (state, key), jnp.arange(cfg.n_slots), length=cfg.n_slots
+    )
+    return outs
+
+
+def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
+    """Run the simulator for the FG system ``p`` (uses M, Λ, T_T, T_M, ...)."""
+    if p.W < p.M:
+        raise NotImplementedError(
+            "simulator covers the W >= M (w = 1) regime used in the paper's "
+            "evaluation; pass M = min(M, W) for the general case"
+        )
+    p_dyn = dict(
+        t0=p.t0, T_L=p.T_L, T_T=p.T_T, T_M=p.T_M, lam=p.lam, tau_l=p.tau_l
+    )
+    outs = _run(jax.random.PRNGKey(seed), cfg, p_dyn, int(p.M), int(p.Lam))
+    s = cfg.sample_every
+    sl = slice(s - 1, None, s)
+    t = (np.arange(cfg.n_slots) * cfg.dt)[sl]
+    return SimOutputs(
+        t=t,
+        availability=np.asarray(outs["availability"])[sl],
+        busy_frac=np.asarray(outs["busy_frac"])[sl],
+        stored_info=np.asarray(outs["stored"])[sl],
+        obs_birth=np.asarray(outs["obs_birth"])[sl],
+        obs_holders=np.asarray(outs["obs_holders"])[sl],
+        model_holders=np.asarray(outs["model_holders"])[sl],
+        n_in_rz=np.asarray(outs["n_in_rz"])[sl],
+    )
+
+
+def estimate_o_of_tau(
+    out: SimOutputs, tau_grid: np.ndarray, warmup_frac: float = 0.3
+) -> np.ndarray:
+    """Empirical o(τ): holders-of-observation / holders-of-model at age τ."""
+    s0 = int(len(out.t) * warmup_frac)
+    num = np.zeros_like(tau_grid)
+    den = np.zeros_like(tau_grid)
+    dtau = tau_grid[1] - tau_grid[0]
+    for s in range(s0, len(out.t)):
+        age = out.t[s] - out.obs_birth[s]          # (M, K)
+        valid = np.isfinite(age) & (age >= 0)
+        holders = out.model_holders[s]             # (M,)
+        for m in range(age.shape[0]):
+            if holders[m] == 0:
+                continue
+            bins = (age[m][valid[m]] / dtau).astype(int)
+            frac = out.obs_holders[s][m][valid[m]] / holders[m]
+            ok = bins < len(tau_grid)
+            np.add.at(num, bins[ok], frac[ok])
+            np.add.at(den, bins[ok], 1.0)
+    return np.where(den > 0, num / np.maximum(den, 1), np.nan)

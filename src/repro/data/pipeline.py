@@ -1,0 +1,102 @@
+"""Deterministic synthetic data pipeline (the "observations" substrate).
+
+The paper's observations are generic; for language-model training the
+observation stream is a token stream. ``SyntheticLM`` produces a
+deterministic, seeded, learnable stream: a hidden first-order Markov chain
+over the vocabulary (so models can actually reduce loss, unlike uniform
+noise), generated chunk-wise on host with numpy and placed onto the mesh with
+``jax.make_array_from_callback`` so each data shard materializes only its
+slice — the same pattern a real multi-host loader uses.
+
+For the gossip trainer, ``replica_batches`` reshapes the global batch to a
+leading replica axis (R, per_replica, seq): each FG "node" trains on its own
+observation shard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["DataConfig", "SyntheticLM", "make_global_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    markov_states: int = 64  # structure of the synthetic stream
+
+
+class SyntheticLM:
+    """Seeded Markov token stream with per-step, per-shard determinism."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        s = cfg.markov_states
+        # sparse-ish row-stochastic transition over `s` states, each state
+        # emitting a contiguous vocab bucket -> learnable bigram structure.
+        self._trans = rng.dirichlet(np.full(s, 0.3), size=s).astype(np.float32)
+        self._bucket = cfg.vocab_size // s
+
+    def _tokens(self, batch_idx: np.ndarray, step: int) -> np.ndarray:
+        """(len(batch_idx), seq_len+1) tokens, deterministic in (row, step)."""
+        cfg = self.cfg
+        out = np.empty((len(batch_idx), cfg.seq_len + 1), np.int32)
+        for r, row in enumerate(batch_idx):
+            rng = np.random.default_rng(
+                (cfg.seed * 1_000_003 + step) * 1_000_003 + int(row)
+            )
+            s = rng.integers(self._trans.shape[0])
+            states = np.empty(cfg.seq_len + 1, np.int64)
+            for t in range(cfg.seq_len + 1):
+                states[t] = s
+                s = rng.choice(self._trans.shape[0], p=self._trans[s])
+            offs = rng.integers(0, max(self._bucket, 1), size=cfg.seq_len + 1)
+            out[r] = (states * self._bucket + offs) % cfg.vocab_size
+        return out
+
+    def global_arrays(self, step: int, mesh: Mesh, batch_axes=("data",)):
+        """(tokens, labels) as global arrays sharded batch-wise on ``mesh``."""
+        cfg = self.cfg
+        spec = P(batch_axes, None)
+        sharding = NamedSharding(mesh, spec)
+
+        def cb_tok(index):
+            rows = np.arange(cfg.global_batch)[index[0]]
+            return self._tokens(rows, step)[:, :-1]
+
+        def cb_lab(index):
+            rows = np.arange(cfg.global_batch)[index[0]]
+            return self._tokens(rows, step)[:, 1:]
+
+        shape = (cfg.global_batch, cfg.seq_len)
+        tok = jax.make_array_from_callback(shape, sharding, cb_tok)
+        lab = jax.make_array_from_callback(shape, sharding, cb_lab)
+        return tok, lab
+
+
+def make_global_batch(
+    cfg: DataConfig, step: int, mesh: Mesh, *, replicas: int | None = None,
+    batch_axes=("data",),
+):
+    """Convenience: (tokens, labels), optionally reshaped (R, B/R, S) for the
+    gossip trainer with the replica axis sharded over ``batch_axes``."""
+    ds = SyntheticLM(cfg)
+    tok, lab = ds.global_arrays(step, mesh, batch_axes)
+    if replicas is None:
+        return tok, lab
+    if cfg.global_batch % replicas:
+        raise ValueError(f"{cfg.global_batch=} not divisible by {replicas=}")
+    per = cfg.global_batch // replicas
+    spec = P(batch_axes, None, None)
+    resh = lambda x: jax.device_put(
+        x.reshape(replicas, per, cfg.seq_len), NamedSharding(mesh, spec)
+    )
+    return resh(tok), resh(lab)

@@ -1,0 +1,68 @@
+"""Fused gossip-merge Pallas kernel: the FG merging operation.
+
+Computes ``out = success ? w_own * own + (1 - w_own) * peer : own`` over a
+flat parameter buffer in fp32 accumulation, in one pass — the merge runs
+right after the ppermute delivers the peer replica, so fusing the convex
+combination avoids materializing ``w*own`` / ``(1-w)*peer`` temporaries in
+HBM (the merge is purely memory-bound: 2 reads + 1 write per element).
+
+Scalars (w_own, success) ride in SMEM via PrefetchScalarGridSpec so one
+compiled kernel serves every round's weights.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gossip_merge"]
+
+BLK = 16 * 1024  # 64 KiB fp32 per operand block — 3 operands well under VMEM
+
+
+def _kernel(scalars_ref, own_ref, peer_ref, out_ref):
+    w = scalars_ref[0]
+    success = scalars_ref[1]
+    own = own_ref[...].astype(jnp.float32)
+    peer = peer_ref[...].astype(jnp.float32)
+    merged = w * own + (1.0 - w) * peer
+    out = jnp.where(success > 0.5, merged, own)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gossip_merge(own, peer, w_own, success, *, interpret: bool = True):
+    """own/peer: any-shape arrays (same shape/dtype); w_own, success: scalars."""
+    shape = own.shape
+    flat = own.reshape(-1)
+    pflat = peer.reshape(-1)
+    n = flat.shape[0]
+    nb = -(-n // BLK)
+    pad = nb * BLK - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        pflat = jnp.pad(pflat, (0, pad))
+    scalars = jnp.stack([
+        jnp.asarray(w_own, jnp.float32),
+        jnp.asarray(success, jnp.float32),
+    ])
+
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb,),
+            in_specs=[
+                pl.BlockSpec((BLK,), lambda i, s: (i,)),
+                pl.BlockSpec((BLK,), lambda i, s: (i,)),
+            ],
+            out_specs=pl.BlockSpec((BLK,), lambda i, s: (i,)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((nb * BLK,), own.dtype),
+        interpret=interpret,
+    )(scalars, flat, pflat)
+    return out[:n].reshape(shape)

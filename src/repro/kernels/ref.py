@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["attention_ref", "ssd_ref", "gossip_merge_ref"]
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """Naive softmax attention. q: (B,Sq,H,D); k,v: (B,Skv,H,D) (MHA — GQA
+    head-repeat happens in ops.py before the kernel)."""
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)  # right-aligned positions
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B_, C_, D):
+    """Sequential (token-by-token) SSD recurrence — the exact semantics the
+    chunked kernel must reproduce.
+
+    x: (B,S,H,P), dt: (B,S,H), A: (H,) positive decay, B_/C_: (B,S,H,N),
+    D: (H,). Returns y: (B,S,H,P).
+    """
+    Bb, S, H, P = x.shape
+    N = B_.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp                       # (B,H,P),(B,H),(B,H,N)...
+        decay = jnp.exp(-dtt * A[None, :])          # (B,H)
+        state = decay[..., None, None] * state + jnp.einsum(
+            "bh,bhn,bhp->bhnp", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ct, state)
+        return state, y
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B_.transpose(1, 0, 2, 3).astype(jnp.float32),
+          C_.transpose(1, 0, 2, 3).astype(jnp.float32))
+    st0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(step, st0, xs)
+    y = ys.transpose(1, 0, 2, 3) + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gossip_merge_ref(own, peer, w_own, success):
+    """out = success ? w_own*own + (1-w_own)*peer : own   (fp32 accumulate)."""
+    merged = (w_own * own.astype(jnp.float32)
+              + (1.0 - w_own) * peer.astype(jnp.float32)).astype(own.dtype)
+    return jnp.where(success, merged, own)

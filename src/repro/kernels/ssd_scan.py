@@ -1,0 +1,133 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+One grid step processes one (batch, head) pair; the kernel loops over
+sequence chunks with a ``fori_loop``, carrying the (N, P) SSM state in VMEM
+scratch — the inter-chunk recurrence stays on-chip while the per-chunk
+intra computation (the "duality" quadratic term) runs on the MXU:
+
+  per chunk Q tokens:
+    L        = exp(segsum(dtA))   (Q, Q) causal decay
+    y_intra  = ((C B^T) . L) (dt*x)
+    y_inter  = C state_in . decay_in
+    state    = decay_Q * state_in + (decay_to_end dt B)^T x
+
+VMEM per step (Q=128, N<=128, P<=64, fp32): x/B/C chunks ~192 KB, L 64 KB,
+state 32 KB — comfortably inside VMEM, MXU dims aligned (Q, N, P multiples
+of 8/128 lanes where dtypes require).
+
+The B/C BlockSpec index_map maps head -> SSM group, so grouped B/C are read
+without materializing the head broadcast.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, st_ref, *,
+            n_chunks, Q):
+    # shapes: x (1, n_chunks*Q, P); dt (1, n_chunks*Q); b/c (1, n_chunks*Q, N)
+    P = x_ref.shape[-1]
+    N = b_ref.shape[-1]
+    A = a_ref[0]          # scalar decay rate for this head
+    D = d_ref[0]
+
+    st_ref[...] = jnp.zeros_like(st_ref)
+
+    def body(ci, _):
+        sl = pl.dslice(ci * Q, Q)
+        x = x_ref[0, sl, :].astype(jnp.float32)        # (Q, P)
+        dt = dt_ref[0, sl].astype(jnp.float32)         # (Q,)
+        Bc = b_ref[0, sl, :].astype(jnp.float32)       # (Q, N)
+        Cc = c_ref[0, sl, :].astype(jnp.float32)       # (Q, N)
+
+        dA = dt * A                                    # (Q,)
+        csum = jnp.cumsum(dA)                          # (Q,)
+        # intra-chunk: scores_ij = C_i.B_j * exp(-(csum_i - csum_j)) (i>=j)
+        diff = csum[:, None] - csum[None, :]
+        iota_q = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+        causal = iota_q >= iota_k
+        L = jnp.where(causal, jnp.exp(-jnp.where(causal, diff, 80.0)), 0.0)
+        scores = jax.lax.dot_general(
+            Cc, Bc, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * L                                          # (Q, Q)
+        y = jax.lax.dot_general(
+            scores * dt[None, :], x, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                              # (Q, P)
+
+        # inter-chunk: contribution of the incoming state
+        state = st_ref[...]                            # (N, P)
+        dec_in = jnp.exp(-csum)[:, None]               # (Q, 1)
+        y += dec_in * jax.lax.dot_general(
+            Cc, state, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        # state update: S' = e^{-csum_Q} S + sum_j e^{-(csum_Q-csum_j)} dt_j B_j x_j^T
+        dec_end = jnp.exp(-(csum[-1] - csum))          # (Q,)
+        wB = Bc * (dec_end * dt)[:, None]              # (Q, N)
+        st_ref[...] = jnp.exp(-csum[-1]) * state + jax.lax.dot_general(
+            wB, x, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+        y_ref[0, sl, :] = (y + D * x).astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B_, C_, D, *, chunk: int = 128, interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); A,D: (H,); B_,C_: (B,S,G,N). y: (B,S,H,P)."""
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(chunk, S)
+    n_chunks = -(-S // Q)
+    pad = n_chunks * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = n_chunks * Q
+    rep = H // G
+
+    xt = x.transpose(0, 2, 1, 3).reshape(Bb * H, Sp, P)
+    dtt = dt.transpose(0, 2, 1).reshape(Bb * H, Sp)
+    bt = B_.transpose(0, 2, 1, 3).reshape(Bb * G, Sp, N)
+    ct = C_.transpose(0, 2, 1, 3).reshape(Bb * G, Sp, N)
+    a_rep = jnp.tile(A, Bb)
+    d_rep = jnp.tile(D, Bb)
+
+    kernel = functools.partial(_kernel, n_chunks=n_chunks, Q=Q)
+    y = pl.pallas_call(
+        kernel,
+        grid=(Bb * H,),
+        in_specs=[
+            pl.BlockSpec((1, Sp, P), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, Sp), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            # head -> (batch, group) without materializing the broadcast
+            pl.BlockSpec((1, Sp, N), lambda i, rep=rep, G=G: (
+                (i // (G * rep)) * G + (i % (G * rep)) // rep, 0, 0)),
+            pl.BlockSpec((1, Sp, N), lambda i, rep=rep, G=G: (
+                (i // (G * rep)) * G + (i % (G * rep)) // rep, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, Sp, P), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb * H, Sp, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a_rep, bt, ct, d_rep)
+    return y.reshape(Bb, H, Sp, P).transpose(0, 2, 1, 3)[:, :S]

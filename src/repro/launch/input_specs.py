@@ -1,0 +1,261 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch, shape, mode).
+
+Everything here is allocation-free: abstract params/optimizer-state/caches
+come from ``jax.eval_shape`` and inputs are ``ShapeDtypeStruct``s, so the
+dry-run can lower 52B configs on a laptop CPU.
+
+Sharding policy (DESIGN.md §5):
+  train/prefill  batch -> ("pod","data");  model dims -> "model"
+  decode_32k     batch -> ("pod","data");  cache_seq -> None
+  long_500k      batch -> None; cache_seq -> ("pod","data")  (context parallel)
+  gossip train   leading replica axis -> ("pod","data")
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, param_count
+from repro.configs.shapes import InputShape, long_ctx_policy
+from repro.models.transformer import abstract_cache, abstract_lm
+from repro.sharding.logical import DEFAULT_RULES, Lx, ShardingRules, tree_specs
+
+__all__ = ["DryRunSpec", "build_specs", "pick_train_mode"]
+
+BYTES_PER_DEV_BUDGET = 13.5e9  # leave headroom on a 16 GB v5e chip
+
+
+def _batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def pick_train_mode(cfg: ArchConfig, mesh: Mesh) -> str:
+    """Gossip needs a full replica (+ private moments) per (pod,data) index;
+    fall back to all-reduce + ZeRO-1 when that cannot fit a chip. This is the
+    paper's Prop. 1 constraint (model size limits floating) at pod scale."""
+    n = param_count(cfg)
+    model_par = mesh.shape.get("model", 1)
+    # bf16 params + fp32 mu+nu + bf16 grads, all divided by model parallelism
+    per_dev = n * (2 + 8 + 2) / model_par
+    return "gossip" if per_dev <= BYTES_PER_DEV_BUDGET else "allreduce"
+
+
+@dataclasses.dataclass
+class DryRunSpec:
+    """Everything jit.lower needs: abstract args + in/out shardings."""
+
+    step_kind: str
+    mode: str                 # train: gossip|allreduce; else 'serve'
+    abstract_args: tuple      # positional abstract inputs
+    in_specs: tuple
+    out_specs: Any
+    donate: tuple             # argnums donated
+    meta: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfOpts:
+    """§Perf optimization knobs. Defaults = the optimized configuration;
+    ``baseline()`` reproduces the paper-faithful/naive baseline that the
+    hillclimb measured first (reports/dryrun_baseline)."""
+
+    seq_parallel: bool = True       # shard layer-scan carry seq over "model"
+    ce_chunk: int | None = 512      # chunked cross-entropy
+    grad_accum: int = 8             # microbatch gradient accumulation
+    decode_cache_tp: bool = True    # shard decode cache_seq over "model"
+    gossip_segments: int = 1        # segmented gossip (Prop. 1 lever)
+    gossip_period: int = 1          # merge every k steps
+    gossip_matching: str = "random"  # "hypercube" = optimized variant
+
+    @staticmethod
+    def baseline() -> "PerfOpts":
+        return PerfOpts(seq_parallel=False, ce_chunk=None, grad_accum=1,
+                        decode_cache_tp=False)
+
+
+def _rules_for(shape: InputShape, mesh: Mesh, opts: PerfOpts) -> ShardingRules:
+    baxes = _batch_axes(mesh)
+    if shape.step_kind == "decode" and shape.global_batch < _prod(mesh, baxes):
+        # long-context decode: context-parallel cache, replicated batch
+        cache_axes = tuple(mesh.axis_names) if opts.decode_cache_tp else baxes
+        return DEFAULT_RULES.extend(
+            ("batch", None), ("cache_seq", cache_axes), ("replica", None),
+        )
+    if shape.step_kind == "decode" and opts.decode_cache_tp:
+        # batched decode: cache replicated over "model" wastes ~model_par x
+        # HBM when kv_heads < model_par — shard the cache sequence instead
+        # (flash-decode style partial softmax across the model axis).
+        return DEFAULT_RULES.extend(
+            ("batch", baxes), ("cache_seq", "model"), ("replica", baxes),
+        )
+    return DEFAULT_RULES.extend(("batch", baxes), ("replica", baxes))
+
+
+def _prod(mesh: Mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+def _enc_abstract(cfg: ArchConfig, lead: tuple[int, ...]):
+    if cfg.encoder is None:
+        return None
+    return jax.ShapeDtypeStruct(
+        lead + (cfg.encoder.enc_seq, cfg.d_model), jnp.bfloat16
+    )
+
+
+def build_specs(
+    cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+    mode: str | None = None, gossip_overrides: dict | None = None,
+    opts: PerfOpts | None = None,
+) -> DryRunSpec:
+    from repro.core.gossip import GossipConfig
+    from repro.optim.optimizers import adamw
+    from repro.optim.zero import zero1_adamw
+    from repro.train.trainer import (
+        make_allreduce_step, make_gossip_step, train_shardings,
+    )
+    from repro.serve.engine import make_decode_step, make_prefill_step
+
+    opts = opts if opts is not None else PerfOpts()
+    baxes = _batch_axes(mesh)
+    rules = _rules_for(shape, mesh, opts)
+    B, S = shape.global_batch, shape.seq_len
+    # sequence parallelism: constrain the residual stream's seq dim to the
+    # model axis (per-replica rank-3 view in gossip mode)
+    sp = "model" if (opts.seq_parallel and S % mesh.shape.get("model", 1) == 0) else None
+    act_spec_gossip = P(None, sp, None) if sp else None
+    act_spec_ar = P(baxes, sp, None) if sp else P(baxes, None, None)
+    ce_chunk = opts.ce_chunk if shape.step_kind == "train" else None
+
+    if shape.step_kind == "train":
+        mode = mode or pick_train_mode(cfg, mesh)
+        if mode == "gossip":
+            R = _prod(mesh, baxes)
+            per = B // R
+            opt = adamw(3e-4)
+            abstract, pspecs, opt_abs, ospecs, _ = train_shardings(
+                cfg, mesh, mode="gossip", optimizer=opt, rules=rules
+            )
+            gcfg = GossipConfig(
+                axis_names=baxes, matching=opts.gossip_matching,
+                merge_policy="obs_count",
+                success_prob=0.95, busy_prob=0.02, churn_prob=0.004,
+                segments=opts.gossip_segments, period=opts.gossip_period,
+                **(gossip_overrides or {}),
+            )
+            accum = opts.grad_accum if (B // R) % max(opts.grad_accum, 1) == 0 else 1
+            step, _ = make_gossip_step(
+                cfg, opt, mesh, pspecs, gcfg,
+                has_encoder=cfg.encoder is not None,
+                act_spec=act_spec_gossip, ce_chunk=ce_chunk, accum=accum,
+            )
+            batch_abs = dict(
+                tokens=jax.ShapeDtypeStruct((R, per, S), jnp.int32),
+                labels=jax.ShapeDtypeStruct((R, per, S), jnp.int32),
+            )
+            batch_spec = dict(
+                tokens=P(baxes, None, None), labels=P(baxes, None, None)
+            )
+            enc = _enc_abstract(cfg, (R, per))
+            if enc is not None:
+                batch_abs["enc_embeds"] = enc
+                batch_spec["enc_embeds"] = P(baxes, None, None, None)
+            gstate_abs = dict(
+                count=jax.ShapeDtypeStruct((R,), jnp.float32),
+                age=jax.ShapeDtypeStruct((R,), jnp.float32),
+            )
+            gspec = dict(count=P(baxes), age=P(baxes))
+            args = (abstract, opt_abs, gstate_abs, abstract, batch_abs,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            specs = (pspecs, ospecs, gspec, pspecs, batch_spec, P())
+            out_specs = (pspecs, ospecs, gspec,
+                         dict(loss=P(), loss_max=P(), loss_min=P()))
+            return DryRunSpec(
+                step_kind="train", mode="gossip",
+                abstract_args=args, in_specs=specs, out_specs=out_specs,
+                donate=(0, 1, 2), meta=dict(step=step, replicas=R),
+            )
+        # all-reduce + ZeRO-1
+        opt = zero1_adamw(3e-4, shards=_prod(mesh, tuple(mesh.axis_names)))
+        abstract, pspecs, opt_abs, ospecs, _ = train_shardings(
+            cfg, mesh, mode="allreduce", optimizer=opt, rules=rules
+        )
+        accum = opts.grad_accum if B % max(opts.grad_accum, 1) == 0 else 1
+        step = make_allreduce_step(
+            cfg, opt, has_encoder=cfg.encoder is not None,
+            act_spec=act_spec_ar, ce_chunk=ce_chunk, accum=accum,
+        )
+        batch_abs = dict(
+            tokens=jax.ShapeDtypeStruct((B, S), jnp.int32),
+            labels=jax.ShapeDtypeStruct((B, S), jnp.int32),
+        )
+        batch_spec = dict(tokens=P(baxes, None), labels=P(baxes, None))
+        enc = _enc_abstract(cfg, (B,))
+        if enc is not None:
+            batch_abs["enc_embeds"] = enc
+            batch_spec["enc_embeds"] = P(baxes, None, None)
+        args = (abstract, opt_abs, batch_abs, jax.ShapeDtypeStruct((), jnp.int32))
+        specs = (pspecs, ospecs, batch_spec, P())
+        out_specs = (pspecs, ospecs, dict(loss=P(), ce=P(), aux=P()))
+        return DryRunSpec(
+            step_kind="train", mode="allreduce",
+            abstract_args=args, in_specs=specs, out_specs=out_specs,
+            donate=(0, 1), meta=dict(step=step),
+        )
+
+    # ---- serving shapes: params replicated over batch axes ----
+    abstract, logical = abstract_lm(cfg)
+    pspecs = tree_specs(mesh, abstract, logical, rules)
+
+    if shape.step_kind == "prefill":
+        step = make_prefill_step(cfg, act_spec=act_spec_ar)
+        batch_abs = dict(tokens=jax.ShapeDtypeStruct((B, S), jnp.int32))
+        batch_spec = dict(tokens=P(baxes, None))
+        enc = _enc_abstract(cfg, (B,))
+        if enc is not None:
+            batch_abs["enc_embeds"] = enc
+            batch_spec["enc_embeds"] = P(baxes, None, None)
+        args = (abstract, batch_abs)
+        specs = (pspecs, batch_spec)
+        vocab_ok = cfg.padded_vocab % mesh.shape.get("model", 1) == 0
+        out_spec = P(baxes, "model" if vocab_ok else None)
+        return DryRunSpec(
+            step_kind="prefill", mode="serve",
+            abstract_args=args, in_specs=specs, out_specs=out_spec,
+            donate=(), meta=dict(step=step),
+        )
+
+    # decode
+    policy, w_over = long_ctx_policy(cfg)
+    if shape.name != "long_500k":
+        policy, w_over = "full", None
+    cache_abs, cache_lx = abstract_cache(
+        cfg, B, S, window_override=w_over
+    )
+    cspecs = tree_specs(mesh, cache_abs, cache_lx, rules)
+    step = make_decode_step(cfg, window_override=w_over)
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    batch_sharded = B % max(_prod(mesh, baxes), 1) == 0 and B >= _prod(mesh, baxes)
+    tok_spec = P(baxes, None) if batch_sharded else P()
+    idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
+    args = (abstract, cache_abs, tok_abs, idx_abs)
+    specs = (pspecs, cspecs, tok_spec, P())
+    vocab_ok = cfg.padded_vocab % mesh.shape.get("model", 1) == 0
+    out_logits = P(
+        baxes if batch_sharded else None, None, "model" if vocab_ok else None
+    )
+    out_specs = (out_logits, cspecs)
+    return DryRunSpec(
+        step_kind="decode", mode="serve",
+        abstract_args=args, in_specs=specs, out_specs=out_specs,
+        donate=(1,), meta=dict(step=step, policy=policy, window=w_over),
+    )

@@ -1,0 +1,238 @@
+"""Analytic roofline model per (arch, shape, mesh, mode).
+
+Why analytic: on the CPU backend with scan-over-layers, XLA's
+``cost_analysis`` counts every ``while``-loop body ONCE rather than
+trip-count times, so HLO_FLOPs/bytes undercount by ~n_layers (verified in
+tests/test_roofline.py and documented in EXPERIMENTS.md §Dry-run). The
+analytic model below counts the same quantities from the config — the
+approach MaxText uses for MFU — and the dry-run records BOTH (raw
+cost_analysis + analytic) so the discrepancy is visible.
+
+All outputs are per-device-per-step, matching the roofline terms:
+  compute_s    = flops_dev / PEAK_FLOPS
+  memory_s     = hbm_bytes_dev / HBM_BW
+  collective_s = coll_bytes_dev / (ICI_BW * links)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs.base import ArchConfig, param_count
+from repro.configs.shapes import InputShape, long_ctx_policy
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+__all__ = ["analytic_roofline", "RooflineTerms"]
+
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_dev: float
+    hbm_bytes_dev: float
+    coll_bytes_dev: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    detail: dict
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _attn_flops_token(cfg: ArchConfig, kv_len: float, *, mla_expand: bool) -> float:
+    """Attention score+value FLOPs for ONE query token vs kv_len keys."""
+    if cfg.is_mla:
+        H = cfg.n_heads
+        f = 2 * kv_len * H * (cfg.qk_nope_dim + cfg.qk_rope_dim)  # scores
+        f += 2 * kv_len * H * cfg.v_head_dim                      # values
+        if mla_expand:  # latent -> K/V expansion each step (baseline decode)
+            f += 2 * kv_len * cfg.kv_lora_rank * H * (
+                cfg.qk_nope_dim + cfg.v_head_dim)
+        return f
+    return 4 * kv_len * cfg.n_heads * cfg.hd
+
+
+def _ssd_flops_token(cfg: ArchConfig, decode: bool) -> float:
+    H, N, P, Q = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_chunk
+    if decode:
+        return 2 * H * N * P * 3            # state update + output
+    # intra-chunk (avg Q/2 keys) + state build/apply
+    return 2 * H * (Q / 2 * (N + P)) + 4 * H * N * P
+
+
+def _layer_matmul_params(cfg: ArchConfig, spec) -> float:
+    """Active matmul params of one layer (token-independent weights)."""
+    d = cfg.d_model
+    n = 0.0
+    if spec.kind == "attn":
+        if cfg.is_mla:
+            q_in = cfg.q_lora_rank if cfg.q_lora_rank else d
+            n += d * cfg.kv_lora_rank + d * cfg.qk_rope_dim
+            n += q_in * cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim)
+            n += cfg.kv_lora_rank * cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+            n += cfg.n_heads * cfg.v_head_dim * d
+        else:
+            n += d * cfg.hd * (cfg.n_heads + 2 * cfg.n_kv_heads)
+            n += cfg.n_heads * cfg.hd * d
+    else:
+        di, G, Nst, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+        n += d * (2 * di + 2 * G * Nst + H) + di * d
+    if spec.cross_attn:
+        n += d * cfg.hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * cfg.hd * d
+    mult = 3 if cfg.act == "swiglu" else 2
+    if spec.moe:
+        n += d * cfg.n_experts  # router
+        n += cfg.top_k * cfg.capacity_factor * mult * d * cfg.d_ff
+        n += cfg.n_shared_experts * mult * d * cfg.d_ff
+    elif cfg.d_ff > 0:
+        n += mult * d * cfg.d_ff
+    return n
+
+
+def analytic_roofline(
+    cfg: ArchConfig, shape: InputShape, mesh_shape: dict, *, mode: str,
+    window_override: int | None = None, n_links: int = 4,
+) -> RooflineTerms:
+    d = cfg.d_model
+    n_dev = math.prod(mesh_shape.values())
+    mp = mesh_shape.get("model", 1)
+    dp = n_dev // mp                      # (pod x) data parallelism
+    B, S = shape.global_batch, shape.seq_len
+    decode = shape.step_kind == "decode"
+    train = shape.step_kind == "train"
+
+    window = window_override if window_override is not None else cfg.window
+    policy, w_pol = long_ctx_policy(cfg)
+    if shape.name == "long_500k" and w_pol is not None:
+        window = w_pol
+
+    # tokens processed this step (decode: one per sequence)
+    tokens = B * (1 if decode else S)
+    tokens_dev = tokens / (dp if (not decode or B >= dp) else 1)
+
+    # ---------------- FLOPs (global) ----------------
+    matmul_params = sum(
+        _layer_matmul_params(cfg, s) for s in cfg.pattern
+    ) * cfg.repeats
+    if cfg.encoder is not None and cfg.encoder.n_layers > 0 and not decode:
+        from repro.configs.base import LayerSpec
+        enc_tokens = B * cfg.encoder.enc_seq
+        matmul_enc = _layer_matmul_params(cfg, LayerSpec()) * cfg.encoder.n_layers
+    else:
+        enc_tokens, matmul_enc = 0, 0.0
+
+    fwd = 2 * matmul_params * tokens + 2 * matmul_enc * enc_tokens
+    fwd += 2 * d * cfg.padded_vocab * tokens          # unembed
+    # mixer (attention / SSD) flops
+    mix = 0.0  # per-pattern-worth of mixer FLOPs, all tokens
+    for s in cfg.pattern:
+        if s.kind == "attn":
+            if decode:
+                kv = min(S, window) if window else S
+                mix += _attn_flops_token(
+                    cfg, kv, mla_expand=cfg.is_mla and not cfg.mla_absorb
+                ) * tokens
+            else:
+                # causal average kv length (windowed: ~window/2 ramp + flat)
+                if window is None or window >= S:
+                    avg_kv = S / 2
+                else:
+                    avg_kv = window * (1 - window / (2 * S))
+                mix += _attn_flops_token(cfg, avg_kv, mla_expand=False) * tokens
+        else:
+            mix += _ssd_flops_token(cfg, decode) * tokens
+        if s.cross_attn and cfg.encoder is not None:
+            mix += 4 * cfg.encoder.enc_seq * cfg.n_heads * cfg.hd * tokens
+    mix *= cfg.repeats  # pattern repeats -> all layers
+    fwd += mix
+    if cfg.encoder is not None and cfg.encoder.n_layers > 0 and not decode:
+        fwd += 4 * (cfg.encoder.enc_seq / 2) * cfg.n_heads * cfg.hd * enc_tokens
+
+    if train:
+        flops = fwd * 3                      # fwd + 2x bwd
+        if cfg.remat:
+            flops += fwd                     # recompute fwd under remat
+    else:
+        flops = fwd
+    flops_dev = flops / n_dev
+
+    # ---------------- HBM bytes (per device) ----------------
+    n_params = param_count(cfg)
+    p_dev_model = n_params / mp              # model-sharded share
+    if train:
+        if mode == "gossip":
+            p_dev = p_dev_model              # one replica per data index
+            opt_bytes = 2 * p_dev * F32 * 2  # read+write mu, nu
+            param_rw = p_dev * BF16 * (2 + (1 if cfg.remat else 0)) + p_dev * BF16 * 2
+        else:
+            p_dev = p_dev_model
+            opt_bytes = 2 * (n_params / n_dev) * F32 * 2   # ZeRO shard
+            param_rw = p_dev * BF16 * (2 + (1 if cfg.remat else 0)) + p_dev * BF16 * 2
+        act_bytes = tokens_dev * d * cfg.n_layers * 6 * BF16
+        logits_bytes = tokens_dev * cfg.padded_vocab / mp * BF16 * 2
+        hbm = param_rw + opt_bytes + act_bytes + logits_bytes
+    elif decode:
+        cache_len = min(S, window) if window else S
+        if cfg.is_mla:
+            cache_row = cfg.kv_lora_rank + cfg.qk_rope_dim
+            n_attn = sum(1 for s in cfg.pattern if s.kind == "attn")
+        else:
+            cache_row = 2 * cfg.n_kv_heads * cfg.hd / mp
+            n_attn = sum(1 for s in cfg.pattern if s.kind == "attn")
+        n_attn *= cfg.repeats
+        batch_dev = B / dp if B >= dp else B
+        cache_bytes = batch_dev * cache_len * cache_row * BF16 * n_attn
+        if shape.name == "long_500k" and policy in ("native", "mla") and window is None:
+            cache_bytes /= dp                # context-parallel cache
+        ssm_bytes = 0.0
+        n_ssm = sum(1 for s in cfg.pattern if s.kind == "mamba") * cfg.repeats
+        if n_ssm:
+            ssm_bytes = batch_dev * cfg.ssm_heads * cfg.ssm_state * cfg.ssm_head_dim * F32 * n_ssm * 2
+        hbm = p_dev_model * BF16 + cache_bytes + ssm_bytes
+    else:  # prefill
+        act_bytes = tokens_dev * d * cfg.n_layers * 6 * BF16
+        hbm = p_dev_model * BF16 + act_bytes
+
+    # ---------------- collective bytes (per device) ----------------
+    coll = 0.0
+    tp_per_layer = 2 if mp > 1 else 0        # Megatron fwd all-reduces
+    act_row = d * BF16
+    if train:
+        layers_coll = cfg.n_layers * tp_per_layer * (3 if not cfg.remat else 4)
+        coll += tokens_dev * act_row * layers_coll
+        moe_layers = sum(1 for s in cfg.pattern if s.moe) * cfg.repeats
+        if moe_layers and mp > 1:
+            coll += tokens_dev * cfg.top_k * act_row * 2 * moe_layers * (3 if not cfg.remat else 4)
+        if mode == "gossip":
+            # ppermute of the replica's model shard (send+recv overlap; count tx)
+            coll += p_dev_model * BF16
+        else:
+            coll += 2 * (n_params / mp) * BF16  # RS + AG over data axis
+    elif decode:
+        coll += tokens_dev * act_row * cfg.n_layers * tp_per_layer
+        moe_layers = sum(1 for s in cfg.pattern if s.moe) * cfg.repeats
+        if moe_layers and mp > 1:
+            coll += tokens_dev * cfg.top_k * act_row * 2 * moe_layers
+        if shape.name == "long_500k":
+            coll += cfg.n_layers * cfg.n_heads * 8 * F32  # partial-softmax psum
+    else:
+        coll += tokens_dev * act_row * cfg.n_layers * tp_per_layer
+    terms = dict(
+        compute_s=flops_dev / PEAK_FLOPS,
+        memory_s=hbm / HBM_BW,
+        collective_s=coll / (ICI_BW * n_links),
+    )
+    dominant = max(terms, key=lambda k: terms[k])
+    return RooflineTerms(
+        flops_dev=flops_dev, hbm_bytes_dev=hbm, coll_bytes_dev=coll,
+        dominant=dominant, detail=dict(
+            tokens=tokens, matmul_params=matmul_params, window=window,
+            policy=policy if shape.name == "long_500k" else "full",
+            mode=mode,
+        ), **terms,
+    )

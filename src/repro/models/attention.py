@@ -1,0 +1,253 @@
+"""GQA attention: blockwise (flash-style) training path + KV-cache decode.
+
+The training/prefill path is an online-softmax scan over KV chunks — the
+same algorithm the Pallas ``flash_attention`` kernel implements on TPU —
+so 32k-token prefill never materializes an (S x S) score matrix. GQA is
+computed on (B, S, Hkv, G, D) shapes so KV heads are never repeated in
+memory. Sliding-window masking supports the SWA archs and the long_500k
+windowed variant; decode uses a ring-buffer cache of window size.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPES, dense_init, rope, rope_at
+from repro.sharding.logical import Lx
+
+__all__ = [
+    "init_gqa", "gqa_forward", "gqa_decode", "init_kv_cache",
+    "blockwise_attention",
+]
+
+NEG_INF = -1e30
+
+
+def head_constraint(x, head_axis: int):
+    """Pin the heads dim of an activation to the "model" mesh axis when the
+    current (abstract) mesh has one and the head count divides it.
+
+    Without this, GSPMD derives a partial {8,2}-style sharding from the fused
+    qkv projection and then hits "involuntary full rematerialization" inside
+    the attention scan — replicating multi-GB probability tensors (§Perf
+    iteration: llama-3.2-vision train 48.5 GB/dev -> see EXPERIMENTS.md).
+    """
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover - old jax
+        return x
+    if mesh is None or not mesh.axis_names or "model" not in mesh.axis_names:
+        return x
+    if x.shape[head_axis] % mesh.shape["model"] != 0:
+        return x
+    from jax.sharding import PartitionSpec as P
+    # other dims UNCONSTRAINED — pinning them to None would *replicate* the
+    # batch dim of every attention intermediate (glm4 prefill: 8.6 GB f32
+    # score tensors with global batch; §Perf iteration)
+    spec = [P.UNCONSTRAINED] * x.ndim
+    spec[head_axis] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def init_gqa(key, cfg, *, cross: bool = False):
+    d, hd, H, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = DTYPES[cfg.dtype]
+    params = dict(
+        wq=dense_init(ks[0], d, H * hd, None, dt)[0],
+        wk=dense_init(ks[1], d, Hkv * hd, None, dt)[0],
+        wv=dense_init(ks[2], d, Hkv * hd, None, dt)[0],
+        wo=dense_init(ks[3], H * hd, d, None, dt, scale=(H * hd) ** -0.5)[0],
+    )
+    logical = dict(
+        wq=Lx("embed", "qkv"), wk=Lx("embed", "qkv"), wv=Lx("embed", "qkv"),
+        wo=Lx("qkv", "embed"),
+    )
+    return params, logical
+
+
+def blockwise_attention(
+    q, k, v, *, causal: bool, window: int | None = None,
+    q_offset=0, chunk: int = 1024, valid_len=None,
+):
+    """Online-softmax attention.
+
+    q: (B, Sq, Hkv, G, D); k, v: (B, Skv, Hkv, D). Positions of q are
+    ``q_offset + arange(Sq)``; k positions are ``arange(Skv)``.
+    ``valid_len`` (scalar) masks out unwritten cache slots.
+    Returns (B, Sq, Hkv, G, D).
+    """
+    B, Sq, Hkv, G, D = q.shape
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    n_chunks = -(-Skv // chunk)
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+
+    scale = D ** -0.5
+    q32 = q.astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, c_idx = inp
+        k_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", q32, kb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        mask = jnp.ones((Sq, chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= q_pos[:, None] - k_pos[None, :] < window
+        mask &= (k_pos < Skv)[None, :]
+        if valid_len is not None:
+            mask &= (k_pos < valid_len)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hkv, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def _split_heads(x, H, hd):
+    return x.reshape(*x.shape[:-1], H, hd)
+
+
+def gqa_forward(
+    params, cfg, x, *, causal=True, window=None, kv_src=None, positions=None,
+    chunk: int = 1024,
+):
+    """Full-sequence attention. ``kv_src`` != None -> cross-attention.
+
+    KV heads are repeated up to H before the blockwise scan: the repeat is a
+    (cheap, sharded) broadcast and it keeps every attention intermediate on
+    a clean heads-over-"model" layout — see ``head_constraint``.
+    """
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Hkv
+    src = x if kv_src is None else kv_src
+    q = _split_heads(x @ params["wq"], H, hd)
+    k = _split_heads(src @ params["wk"], Hkv, hd)
+    v = _split_heads(src @ params["wv"], Hkv, hd)
+    if kv_src is None:  # RoPE only for self-attention
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    q = head_constraint(q, 2)
+    k = head_constraint(k, 2)
+    v = head_constraint(v, 2)
+    qg = q.reshape(B, S, H, 1, hd)
+    out = blockwise_attention(
+        qg, k, v, causal=causal and kv_src is None, window=window, chunk=chunk
+    )
+    out = head_constraint(out.reshape(B, S, H, hd), 2)
+    return out.reshape(B, S, H * hd) @ params["wo"]
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, *, window: int | None, dtype):
+    """Ring-buffer KV cache for one attention layer.
+
+    ``window`` bounds physical cache length (SWA); ``index`` counts tokens
+    written so far (absolute position of the next token).
+    """
+    L = min(max_len, window) if window else max_len
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    cache = dict(
+        k=jnp.zeros((batch, L, Hkv, hd), dtype),
+        v=jnp.zeros((batch, L, Hkv, hd), dtype),
+    )
+    logical = dict(
+        k=Lx("batch", "cache_seq", "kv_heads", None),
+        v=Lx("batch", "cache_seq", "kv_heads", None),
+    )
+    return cache, logical
+
+
+def gqa_decode(params, cfg, x, cache, index, *, window=None, chunk: int = 2048):
+    """One-token decode. x: (B, 1, d); index: scalar #tokens already cached.
+
+    Keys are stored post-RoPE, so ring-buffer eviction needs no re-rotation.
+    Returns (out (B,1,d), new_cache).
+    """
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Hkv
+    L = cache["k"].shape[1]
+
+    q = _split_heads(x @ params["wq"], H, hd)
+    k = _split_heads(x @ params["wk"], Hkv, hd)
+    v = _split_heads(x @ params["wv"], Hkv, hd)
+    q = rope_at(q, index, cfg.rope_theta)
+    k = rope_at(k, index, cfg.rope_theta)
+
+    slot = jnp.mod(index, L)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    # validity: slots < min(index+1, L); window masking is implied by ring
+    # eviction (only the last L=window keys are physically present).
+    n_valid = jnp.minimum(index + 1, L)
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    out = blockwise_attention(
+        qg, ck, cv, causal=False, window=None, valid_len=n_valid, chunk=chunk
+    )
+    out = out.reshape(B, 1, H * hd)
+    return out @ params["wo"], dict(k=ck, v=cv)
+
+
+def init_cross_cache(cfg, batch: int, enc_seq: int, dtype):
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    cache = dict(
+        k=jnp.zeros((batch, enc_seq, Hkv, hd), dtype),
+        v=jnp.zeros((batch, enc_seq, Hkv, hd), dtype),
+    )
+    logical = dict(
+        k=Lx("batch", None, "kv_heads", None),
+        v=Lx("batch", None, "kv_heads", None),
+    )
+    return cache, logical
+
+
+def cross_prefill(params, cfg, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    Hkv, hd = cfg.n_kv_heads, cfg.hd
+    k = _split_heads(enc_out @ params["wk"], Hkv, hd)
+    v = _split_heads(enc_out @ params["wv"], Hkv, hd)
+    return dict(k=k, v=v)
+
+
+def cross_decode(params, cfg, x, cross_cache, chunk: int = 2048):
+    """One-token cross-attention against a fixed encoder cache."""
+    B = x.shape[0]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // Hkv
+    q = _split_heads(x @ params["wq"], H, hd).reshape(B, 1, Hkv, G, hd)
+    out = blockwise_attention(
+        q, cross_cache["k"], cross_cache["v"], causal=False, chunk=chunk
+    )
+    return out.reshape(B, 1, H * hd) @ params["wo"]

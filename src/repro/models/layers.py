@@ -1,0 +1,92 @@
+"""Shared neural building blocks (pure JAX, param-dict style).
+
+Every ``init_*`` returns ``(params, logical)`` where ``logical`` mirrors the
+param tree with ``Lx`` leaves naming each dimension for the sharding rules.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.logical import Lx
+
+__all__ = [
+    "dense_init", "rmsnorm_init", "rmsnorm", "embed_init",
+    "rope", "rope_at", "swiglu_init", "ffn_apply", "DTYPES",
+]
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def dense_init(key, d_in: int, d_out: int, lx: Lx, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+    return w, lx
+
+
+def rmsnorm_init(d: int, dtype):
+    return jnp.ones((d,), dtype), Lx("embed")
+
+
+def rmsnorm(x, scale, eps: float):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return w, Lx("vocab", "embed")
+
+
+def _rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, jnp.float32) / head_dim)
+
+
+def rope(x, positions, theta: float):
+    """Apply rotary embeddings. x: (..., S, H, D), positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = _rope_freqs(d, theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def rope_at(x, pos_scalar, theta: float):
+    """Rotary for a single decode position. x: (B, 1, H, D)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos_scalar, jnp.int32)
+    return rope(x, positions, theta)
+
+
+def swiglu_init(key, d: int, d_ff: int, dtype, act: str = "swiglu"):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        params = dict(
+            wi=dense_init(ks[0], d, d_ff, None, dtype)[0],
+            wg=dense_init(ks[1], d, d_ff, None, dtype)[0],
+            wo=dense_init(ks[2], d_ff, d, None, dtype, scale=d_ff**-0.5)[0],
+        )
+        logical = dict(
+            wi=Lx("embed", "mlp"), wg=Lx("embed", "mlp"), wo=Lx("mlp", "embed")
+        )
+    else:  # gelu
+        params = dict(
+            wi=dense_init(ks[0], d, d_ff, None, dtype)[0],
+            wo=dense_init(ks[2], d_ff, d, None, dtype, scale=d_ff**-0.5)[0],
+        )
+        logical = dict(wi=Lx("embed", "mlp"), wo=Lx("mlp", "embed"))
+    return params, logical
+
+
+def ffn_apply(params, x, act: str = "swiglu"):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    else:
+        h = jax.nn.gelu(x @ params["wi"])
+    return h @ params["wo"]

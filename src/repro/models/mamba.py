@@ -1,0 +1,219 @@
+"""Mamba-2 (SSD — state-space duality) mixer, chunked for TPU.
+
+Implements the SSD block-decomposition algorithm of the Mamba-2 paper
+(arXiv:2405.21060): the sequence is split into chunks of ``Q`` tokens; the
+intra-chunk part is a (masked) quadratic attention-like product and the
+inter-chunk part carries an (H, P, N) state through a ``lax.scan`` — exactly
+the structure the ``ssd_scan`` Pallas kernel implements per-chunk on TPU.
+
+Shapes follow the paper: x (B,S,H,P), dt (B,S,H), A (H,) negative decay,
+B/C (B,S,G,N) with G groups broadcast over heads. Decode keeps the SSM state
+(B,H,P,N) plus a (conv_kernel-1)-deep convolution tail — O(1) per token, the
+reason mamba runs long_500k natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPES, dense_init, rmsnorm_init, rmsnorm
+from repro.sharding.logical import Lx
+
+__all__ = ["init_mamba", "mamba_forward", "init_mamba_cache", "mamba_decode"]
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.conv_kernel
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * di + 2 * G * N + H   # z, x, B, C, dt
+    conv_ch = di + 2 * G * N
+    params = dict(
+        in_proj=dense_init(ks[0], d, d_in_proj, None, dt)[0],
+        conv_w=(jax.random.normal(ks[1], (K, conv_ch), jnp.float32) * K**-0.5).astype(dt),
+        conv_b=jnp.zeros((conv_ch,), dt),
+        A_log=jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        D=jnp.ones((H,), jnp.float32),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+        norm=rmsnorm_init(di, dt)[0],
+        out_proj=dense_init(ks[2], di, d, None, dt, scale=di**-0.5)[0],
+    )
+    logical = dict(
+        in_proj=Lx("embed", "state"),
+        conv_w=Lx(None, "state"), conv_b=Lx("state"),
+        A_log=Lx(None), D=Lx(None), dt_bias=Lx(None),
+        norm=Lx("state"),
+        out_proj=Lx("state", "embed"),
+    )
+    return params, logical
+
+
+def _split_proj(cfg, proj):
+    di, G, N, H = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    z, xBC, dt_raw = jnp.split(proj, [di, di + di + 2 * G * N], axis=-1)
+    return z, xBC, dt_raw
+
+
+def _causal_conv(xBC, w, b, prev_tail=None):
+    """Depthwise causal conv along seq. xBC: (B,S,ch); w: (K,ch)."""
+    K = w.shape[0]
+    if prev_tail is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = prev_tail
+    xp = jnp.concatenate([pad, xBC], axis=1)              # (B, S+K-1, ch)
+    out = sum(
+        xp[:, i : i + xBC.shape[1]] * w[i][None, None, :] for i in range(K)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _ssd_chunked(x, dt, A, B_, C_, D, chunk):
+    """SSD scan. x:(B,S,H,P) dt:(B,S,H) A:(H,) B_,C_:(B,S,G,N) -> y:(B,S,H,P).
+
+    Reference implementation in fp32; the Pallas kernel (kernels/ssd_scan.py)
+    computes the same per-chunk math on TPU.
+    """
+    Bb, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Q = min(chunk, S)
+    n_chunks = -(-S // Q)
+    pad = n_chunks * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = n_chunks * Q
+    rep = H // G
+
+    xc = x.reshape(Bb, n_chunks, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, n_chunks, Q, H).astype(jnp.float32)
+    Bc = B_.reshape(Bb, n_chunks, Q, G, N).astype(jnp.float32)
+    Cc = C_.reshape(Bb, n_chunks, Q, G, N).astype(jnp.float32)
+    # broadcast groups over heads
+    Bh = jnp.repeat(Bc, rep, axis=3)                       # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+
+    def scan_body(st_in, inp):
+        # Everything here is PER CHUNK — materializing the (Q,Q) decay for
+        # all chunks at once costs B*nc*Q^2*H floats (jamba train: 137 GB/
+        # device; §Perf iteration 4) while per-chunk it is a few MB.
+        x_c, dt_c, B_c, C_c = inp                           # (B,Q,H,P) etc.
+        dA = dt_c * A[None, None, :]                        # (B,Q,H)
+        csum = jnp.cumsum(dA, axis=1)
+        # intra-chunk: mask BEFORE exp (masked lanes overflow and poison
+        # the backward with inf*0 otherwise — smoke-test regression).
+        Lmat = csum[:, :, None, :] - csum[:, None, :, :]    # (B,Q,Q,H)
+        Ldecay = jnp.where(mask, jnp.exp(-jnp.where(mask, Lmat, 80.0)), 0.0)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", C_c, B_c)
+        y = jnp.einsum("bqkh,bkh,bkhp->bqhp", scores * Ldecay, dt_c, x_c)
+        # inter-chunk contribution of the incoming state
+        dec_in = jnp.exp(-csum)                             # (B,Q,H)
+        y += jnp.einsum("bqhn,bhnp,bqh->bqhp", C_c, st_in, dec_in)
+        # state update
+        dec_end = jnp.exp(-(csum[:, -1:, :] - csum))        # (B,Q,H)
+        st_new = jnp.einsum("bqh,bqh,bqhn,bqhp->bhnp", dec_end, dt_c, B_c, x_c)
+        st_out = st_new + jnp.exp(-csum[:, -1, :])[:, :, None, None] * st_in
+        return st_out, y
+
+    st0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    xs = (
+        xc.transpose(1, 0, 2, 3, 4),
+        dtc.transpose(1, 0, 2, 3),
+        Bh.transpose(1, 0, 2, 3, 4),
+        Ch.transpose(1, 0, 2, 3, 4),
+    )
+    final_state, y = jax.lax.scan(scan_body, st0, xs)
+    y = y.transpose(1, 0, 2, 3, 4)                          # (B,nc,Q,H,P)
+    y = y + D[None, None, None, :, None] * xc
+    y = y.reshape(Bb, Sp, H, P)[:, :S]
+    return y, final_state
+
+
+def mamba_forward(params, cfg, u, *, return_state: bool = False):
+    """u: (B, S, d_model) -> (B, S, d_model)."""
+    Bb, S, d = u.shape
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    proj = u @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    from repro.models.attention import head_constraint
+    xs, B_, C_ = jnp.split(xBC, [di, di + G * N], axis=-1)
+    x = head_constraint(xs.reshape(Bb, S, H, P), 2)
+    B_ = B_.reshape(Bb, S, G, N)
+    C_ = C_.reshape(Bb, S, G, N)
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    A = jnp.exp(params["A_log"])
+    y, state = _ssd_chunked(x, dt, A, B_, C_, params["D"], cfg.ssm_chunk)
+    y = head_constraint(y, 2)
+    y = y.reshape(Bb, S, di).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, state
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    conv_ch = di + 2 * G * N
+    cache = dict(
+        state=jnp.zeros((batch, H, N, P), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_kernel - 1, conv_ch), dtype),
+    )
+    logical = dict(
+        # SSM-state heads shard over "model" (e.g. jamba's 128 heads; falls
+        # back to replication when H doesn't divide, e.g. mamba2-130m's 24)
+        state=Lx("batch", "heads", None, None),
+        conv=Lx("batch", None, "state"),
+    )
+    return cache, logical
+
+
+def mamba_decode(params, cfg, u, cache):
+    """One-token recurrent step. u: (B, 1, d)."""
+    Bb = u.shape[0]
+    di, G, N, H, P = (cfg.d_inner, cfg.ssm_groups, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.ssm_head_dim)
+    proj = u @ params["in_proj"]
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    # conv over the cached tail + current input
+    tail = cache["conv"]                                    # (B, K-1, ch)
+    xp = jnp.concatenate([tail, xBC.astype(tail.dtype)], axis=1)  # (B, K, ch)
+    w = params["conv_w"]
+    conv_out = jnp.einsum("bkc,kc->bc", xp.astype(jnp.float32),
+                          w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xBC1 = jax.nn.silu(conv_out)[:, None, :].astype(u.dtype)
+    new_tail = xp[:, 1:]
+
+    xs, B_, C_ = jnp.split(xBC1, [di, di + G * N], axis=-1)
+    x = xs.reshape(Bb, H, P).astype(jnp.float32)
+    B_ = B_.reshape(Bb, G, N).astype(jnp.float32)
+    C_ = C_.reshape(Bb, G, N).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(B_, rep, axis=1)                        # (B,H,N)
+    Ch = jnp.repeat(C_, rep, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = jnp.exp(params["A_log"])
+    decay = jnp.exp(-dt * A[None, :])                       # (B,H)
+
+    st = cache["state"]
+    st = decay[:, :, None, None] * st + jnp.einsum(
+        "bh,bhn,bhp->bhnp", dt, Bh, x
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, st) + params["D"][None, :, None] * x
+    y = y.reshape(Bb, 1, di).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, dict(state=st, conv=new_tail)

@@ -1,0 +1,179 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed-KV decode.
+
+MLA compresses keys/values into a ``kv_lora_rank``-dim latent ``c_kv`` plus a
+shared RoPE key ``k_r``; the decode cache stores only (c_kv, k_r) — the whole
+point of MLA's cache reduction. Two decode strategies:
+
+* ``expand`` (baseline): up-project the latent cache to per-head K/V every
+  step — simple, but O(S · r · H · d) expansion work per token;
+* ``absorb`` (optimized, ``cfg.mla_absorb``): fold W_uk into the query and
+  W_uv into the output so attention runs directly in latent space —
+  O(S · (r + d_r)) per head per token. This is a §Perf hillclimb lever for
+  decode_32k on deepseek-v2-lite.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPES, dense_init, rope, rope_at
+from repro.sharding.logical import Lx
+
+__all__ = ["init_mla", "mla_forward", "init_mla_cache", "mla_decode"]
+
+NEG_INF = -1e30
+
+
+def init_mla(key, cfg):
+    d = cfg.d_model
+    H, r = cfg.n_heads, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 6)
+    q_in = cfg.q_lora_rank if cfg.q_lora_rank else d
+    params = dict(
+        wdkv=dense_init(ks[0], d, r, None, dt)[0],          # x -> latent
+        wkr=dense_init(ks[1], d, dr, None, dt)[0],          # x -> shared rope key
+        wuk=dense_init(ks[2], r, H * dn, None, dt)[0],      # latent -> K_nope
+        wuv=dense_init(ks[3], r, H * dv, None, dt)[0],      # latent -> V
+        wq=dense_init(ks[4], q_in, H * (dn + dr), None, dt)[0],
+        wo=dense_init(ks[5], H * dv, d, None, dt, scale=(H * dv) ** -0.5)[0],
+    )
+    logical = dict(
+        wdkv=Lx("embed", None), wkr=Lx("embed", None),
+        wuk=Lx(None, "qkv"), wuv=Lx(None, "qkv"),
+        wq=Lx("embed", "qkv"), wo=Lx("qkv", "embed"),
+    )
+    if cfg.q_lora_rank:
+        params["wdq"], logical["wdq"] = (
+            dense_init(ks[4], d, cfg.q_lora_rank, None, dt)[0], Lx("embed", None)
+        )
+    return params, logical
+
+
+def _project_q(params, cfg, x, positions):
+    B, S, _ = x.shape
+    H, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    xin = x @ params["wdq"] if cfg.q_lora_rank else x
+    q = (xin @ params["wq"]).reshape(B, S, H, dn + dr)
+    q_n, q_r = q[..., :dn], q[..., dn:]
+    q_r = rope(q_r, positions, cfg.rope_theta)
+    return q_n, q_r
+
+
+def mla_forward(params, cfg, x, *, causal=True, chunk: int = 1024):
+    """Training/prefill path (expanded, flash-style over KV chunks)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    q_n, q_r = _project_q(params, cfg, x, positions)
+    c = x @ params["wdkv"]                                   # (B,S,r)
+    k_r = rope(
+        (x @ params["wkr"])[:, :, None, :], positions, cfg.rope_theta
+    )                                                        # (B,S,1,dr)
+    k_n = (c @ params["wuk"]).reshape(B, S, H, dn)
+    v = (c @ params["wuv"]).reshape(B, S, H, dv)
+
+    scale = (dn + dr) ** -0.5
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        padk = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        k_n, v, k_r = padk(k_n), padk(v), padk(k_r)
+    kc = k_n.reshape(B, n_chunks, chunk, H, dn).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, H, dv).transpose(1, 0, 2, 3, 4)
+    krc = k_r.reshape(B, n_chunks, chunk, 1, dr).transpose(1, 0, 2, 3, 4)
+
+    qn32 = q_n.astype(jnp.float32) * scale
+    qr32 = q_r.astype(jnp.float32) * scale
+    q_pos = jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, krb, ci = inp
+        k_pos = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bkhd->bqhk", qn32, kb.astype(jnp.float32))
+        s += jnp.einsum("bqhd,bkzd->bqhk", qr32, krb.astype(jnp.float32))
+        mask = (q_pos[:, None] >= k_pos[None, :]) if causal else jnp.ones((S, chunk), bool)
+        mask &= (k_pos < S)[None, :]
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhk,bkhd->bqhd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, H), jnp.float32)
+    acc0 = jnp.zeros((B, S, H, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, krc, jnp.arange(n_chunks))
+    )
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    return out.reshape(B, S, H * dv) @ params["wo"]
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype):
+    cache = dict(
+        c=jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        kr=jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    )
+    logical = dict(
+        c=Lx("batch", "cache_seq", None), kr=Lx("batch", "cache_seq", None)
+    )
+    return cache, logical
+
+
+def mla_decode(params, cfg, x, cache, index):
+    """One-token decode against the compressed (c, k_r) cache."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    L = cache["c"].shape[1]
+    scale = (dn + dr) ** -0.5
+
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q_n, q_r = _project_q(params, cfg, x, pos)               # (B,1,H,dn/(dr))
+    c_new = x @ params["wdkv"]                               # (B,1,r)
+    kr_new = rope((x @ params["wkr"])[:, :, None, :], pos, cfg.rope_theta)[:, :, 0, :]
+
+    cc = jax.lax.dynamic_update_slice_in_dim(
+        cache["c"], c_new.astype(cache["c"].dtype), index, axis=1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), index, axis=1)
+    valid = (jnp.arange(L) <= index)[None, None, :]          # (1,1,L)
+
+    if cfg.mla_absorb:
+        # fold W_uk into q: q_lat (B,H,r); attention runs in latent space
+        wuk = params["wuk"].reshape(r, H, dn)
+        q_lat = jnp.einsum("bhd,rhd->bhr", q_n[:, 0].astype(jnp.float32),
+                           wuk.astype(jnp.float32))
+        s = jnp.einsum("bhr,blr->bhl", q_lat, cc.astype(jnp.float32)) * scale
+        s += jnp.einsum("bhd,bld->bhl", q_r[:, 0].astype(jnp.float32),
+                        ckr.astype(jnp.float32)) * scale
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhl,blr->bhr", p, cc.astype(jnp.float32))  # latent ctx
+        wuv = params["wuv"].reshape(r, H, dv)
+        out = jnp.einsum("bhr,rhd->bhd", ctx, wuv.astype(jnp.float32))
+    else:
+        # baseline: expand the latent cache to per-head K/V each step
+        k_n = (cc @ params["wuk"]).reshape(B, L, H, dn)
+        v = (cc @ params["wuv"]).reshape(B, L, H, dv)
+        s = jnp.einsum("bhd,blhd->bhl", q_n[:, 0].astype(jnp.float32),
+                       k_n.astype(jnp.float32)) * scale
+        s += jnp.einsum("bhd,bld->bhl", q_r[:, 0].astype(jnp.float32),
+                        ckr.astype(jnp.float32)) * scale
+        s = jnp.where(valid, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhl,blhd->bhd", p, v.astype(jnp.float32))
+
+    out = out.reshape(B, 1, H * dv).astype(x.dtype)
+    return out @ params["wo"], dict(c=cc, kr=ckr)

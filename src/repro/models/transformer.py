@@ -1,0 +1,393 @@
+"""Generic decoder(-encoder) LM over a repeating pattern of LayerSpecs.
+
+Layers are *stacked* per pattern position and executed with
+``jax.lax.scan`` over the repeat axis, so HLO size and compile time are
+bounded by pattern length, not depth (40-layer configs compile like
+1-pattern-length configs). Activation checkpointing (``cfg.remat``) wraps
+the scan body.
+
+Covers the whole assigned zoo through ArchConfig:
+dense GQA / SWA / MLA / MoE / Mamba-2 SSD / hybrid patterns / encoder-decoder
+(Whisper backbone) / VLM cross-attention. Decode is one-token with
+ring-buffer KV caches (SWA), compressed MLA caches, or SSM state.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import mla as mla_mod
+from repro.models.layers import (
+    DTYPES, embed_init, ffn_apply, rmsnorm, rmsnorm_init, swiglu_init,
+)
+from repro.models.moe import init_moe, moe_apply
+from repro.sharding.logical import Lx
+
+__all__ = [
+    "init_lm", "abstract_lm", "lm_forward", "lm_loss", "encoder_forward",
+    "init_cache", "abstract_cache", "lm_decode_step",
+]
+
+
+# --------------------------------------------------------------------------
+# per-layer init / apply
+# --------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig, spec: LayerSpec):
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 6)
+    p, lx = {}, {}
+    p["norm_mix"], lx["norm_mix"] = rmsnorm_init(cfg.d_model, dt)
+    if spec.kind == "attn":
+        if cfg.is_mla:
+            p["attn"], lx["attn"] = mla_mod.init_mla(ks[0], cfg)
+        else:
+            p["attn"], lx["attn"] = attn.init_gqa(ks[0], cfg)
+    else:
+        p["mamba"], lx["mamba"] = mam.init_mamba(ks[0], cfg)
+    if spec.cross_attn:
+        p["norm_cross"], lx["norm_cross"] = rmsnorm_init(cfg.d_model, dt)
+        p["cross"], lx["cross"] = attn.init_gqa(ks[1], cfg, cross=True)
+    if spec.moe:
+        p["norm_ffn"], lx["norm_ffn"] = rmsnorm_init(cfg.d_model, dt)
+        p["moe"], lx["moe"] = init_moe(ks[2], cfg)
+    elif cfg.d_ff > 0:
+        p["norm_ffn"], lx["norm_ffn"] = rmsnorm_init(cfg.d_model, dt)
+        p["ffn"], lx["ffn"] = swiglu_init(ks[2], cfg.d_model, cfg.d_ff, dt, cfg.act)
+    return p, lx
+
+
+def _block_forward(p, cfg: ArchConfig, spec: LayerSpec, x, enc_out, window, chunk):
+    aux = jnp.asarray(0.0, jnp.float32)
+    h = rmsnorm(x, p["norm_mix"], cfg.norm_eps)
+    if spec.kind == "attn":
+        if cfg.is_mla:
+            h = mla_mod.mla_forward(p["attn"], cfg, h, chunk=chunk)
+        else:
+            h = attn.gqa_forward(
+                p["attn"], cfg, h, causal=True, window=window, chunk=chunk
+            )
+    else:
+        h = mam.mamba_forward(p["mamba"], cfg, h)
+    x = x + h
+    if spec.cross_attn:
+        h = rmsnorm(x, p["norm_cross"], cfg.norm_eps)
+        h = attn.gqa_forward(
+            p["cross"], cfg, h, causal=False, kv_src=enc_out, chunk=chunk
+        )
+        x = x + h
+    if spec.moe:
+        h = rmsnorm(x, p["norm_ffn"], cfg.norm_eps)
+        h, moe_aux = moe_apply(p["moe"], cfg, h)
+        aux += moe_aux
+        x = x + h
+    elif cfg.d_ff > 0:
+        h = rmsnorm(x, p["norm_ffn"], cfg.norm_eps)
+        x = x + ffn_apply(p["ffn"], h, cfg.act)
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# model init
+# --------------------------------------------------------------------------
+
+def _init_stack(key, cfg: ArchConfig, spec: LayerSpec, n: int, box: dict, tag: str):
+    keys = jax.random.split(key, n)
+
+    def one(k):
+        params, lx = _init_block(k, cfg, spec)
+        box[tag] = lx
+        return params
+
+    params = jax.vmap(one)(keys)
+    logical = jax.tree.map(lambda l: Lx("layers", *l.axes), box[tag])
+    return params, logical
+
+
+def init_lm(cfg: ArchConfig, key):
+    """Returns (params, logical). Wrap in eval_shape via ``abstract_lm``."""
+    dt = DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 4 + len(cfg.pattern))
+    p, lx = {}, {}
+    p["embed"], lx["embed"] = embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dt)
+    box: dict = {}
+    blocks, blocks_lx = [], []
+    for i, spec in enumerate(cfg.pattern):
+        bp, blx = _init_stack(ks[1 + i], cfg, spec, cfg.repeats, box, f"pos{i}")
+        blocks.append(bp)
+        blocks_lx.append(blx)
+    p["blocks"], lx["blocks"] = tuple(blocks), tuple(blocks_lx)
+    p["norm_f"], lx["norm_f"] = rmsnorm_init(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        w = (jax.random.normal(ks[-2], (cfg.d_model, cfg.padded_vocab), jnp.float32)
+             * cfg.d_model ** -0.5).astype(dt)
+        p["unembed"], lx["unembed"] = w, Lx("embed", "vocab")
+    if cfg.encoder is not None and cfg.encoder.n_layers > 0:
+        espec = LayerSpec(kind="attn")
+        ep, elx = _init_stack(
+            ks[-1], cfg, espec, cfg.encoder.n_layers, box, "enc"
+        )
+        p["encoder"], lx["encoder"] = ep, elx
+        p["enc_norm"], lx["enc_norm"] = rmsnorm_init(cfg.d_model, dt)
+    return p, lx
+
+
+def abstract_lm(cfg: ArchConfig):
+    """(abstract params, logical) without allocating anything."""
+    box = {}
+
+    def f(key):
+        params, lx = init_lm(cfg, key)
+        box["lx"] = lx
+        return params
+
+    abstract = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return abstract, box["lx"]
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+def encoder_forward(cfg: ArchConfig, params, enc_embeds, chunk: int = 1024):
+    """Encoder stack over stub frontend embeddings (B, T_enc, d)."""
+    if "encoder" not in params:
+        return enc_embeds  # VLM: the ViT is the stub; embeds are enc_out
+    espec = LayerSpec(kind="attn")
+
+    def body(x, bp):
+        x, _ = _block_forward(
+            bp, cfg, espec, x, None, None, chunk
+        )
+        return x, None
+
+    x, _ = jax.lax.scan(body, enc_embeds, params["encoder"])
+    return rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def hidden_forward(
+    cfg: ArchConfig, params, tokens, *, enc_embeds=None,
+    window_override: int | None = None, chunk: int = 1024, act_spec=None,
+):
+    """tokens (B, S) -> final hidden states (B, S, d). Returns (x, aux).
+
+    ``act_spec`` (a PartitionSpec) enables sequence parallelism: the layer
+    scan carry is constrained to it between blocks, so the checkpointed
+    residual stream is sharded (typically seq over the "model" axis) instead
+    of being replicated across model-parallel ranks — a ~model_par x
+    reduction of activation memory under remat (EXPERIMENTS.md §Perf).
+    """
+    x = params["embed"][tokens]
+    window = window_override if window_override is not None else cfg.window
+    enc_out = None
+    if cfg.encoder is not None:
+        assert enc_embeds is not None, f"{cfg.name} needs encoder embeddings"
+        enc_out = encoder_forward(cfg, params, enc_embeds, chunk)
+
+    constrain = (
+        (lambda t: jax.lax.with_sharding_constraint(t, act_spec))
+        if act_spec is not None else (lambda t: t)
+    )
+    x = constrain(x)
+
+    # Remat at PER-LAYER granularity: checkpointing only the scan body would
+    # keep every pattern position's intermediates alive simultaneously in
+    # backward (pattern length 5-8 for VLM/jamba => 5-8x the working set,
+    # §Perf iteration 3); per-position checkpoints bound it to one layer.
+    def block(i, spec):
+        def fn(bp_i, x):
+            y, a = _block_forward(bp_i, cfg, spec, x, enc_out, window, chunk)
+            return constrain(y), a
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    blocks = [block(i, s) for i, s in enumerate(cfg.pattern)]
+
+    def body(carry, bp):
+        x, aux = carry
+        for i in range(len(cfg.pattern)):
+            x, a = blocks[i](bp[i], x)
+            aux += a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.asarray(0.0, jnp.float32)), params["blocks"]
+    )
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_forward(
+    cfg: ArchConfig, params, tokens, *, enc_embeds=None,
+    window_override: int | None = None, chunk: int = 1024, act_spec=None,
+):
+    """tokens (B, S) -> logits (B, S, padded_vocab). Returns (logits, aux)."""
+    x, aux = hidden_forward(
+        cfg, params, tokens, enc_embeds=enc_embeds,
+        window_override=window_override, chunk=chunk, act_spec=act_spec,
+    )
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    )
+    logits = x @ unembed
+    return logits, aux
+
+
+def lm_loss(cfg: ArchConfig, params, tokens, labels, *, enc_embeds=None,
+            window_override=None, chunk: int = 1024, act_spec=None,
+            ce_chunk: int | None = None):
+    """Mean next-token cross-entropy (+ MoE aux). Labels use real vocab ids;
+    the pad region of the vocab is unreachable and therefore just unused.
+
+    ``ce_chunk``: chunked cross-entropy — the (S, padded_vocab) logits are
+    never materialized for the whole sequence; the unembed matmul + softmax
+    run per seq-chunk inside a rematerialized scan. This trades one extra
+    unembed matmul in backward for O(S/ce_chunk) logits memory — the
+    dominant train-memory term for the 100k-256k-vocab archs (§Perf).
+    """
+    x, aux = hidden_forward(
+        cfg, params, tokens, enc_embeds=enc_embeds,
+        window_override=window_override, chunk=chunk, act_spec=act_spec,
+    )
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+    if ce_chunk is None or ce_chunk >= x.shape[1]:
+        logits = (x @ unembed).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        ce = jnp.mean(logz - gold)
+        return ce + aux, (ce, aux)
+
+    B, S, _ = x.shape
+    n = S // ce_chunk
+    assert S % ce_chunk == 0, f"{S=} not divisible by {ce_chunk=}"
+    xc = x.reshape(B, n, ce_chunk, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, ce_chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_ce(carry, inp):
+        xb, lb = inp
+        logits = (xb @ unembed).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(chunk_ce, jnp.asarray(0.0, jnp.float32), (xc, lc))
+    ce = total / (B * S)
+    return ce + aux, (ce, aux)
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               window_override: int | None = None):
+    """Cache pytree mirroring params['blocks'] (stacked per position)."""
+    dt = DTYPES[cfg.dtype]
+    window = window_override if window_override is not None else cfg.window
+    caches, logicals = [], []
+    for spec in cfg.pattern:
+        c, l = {}, {}
+        if spec.kind == "attn":
+            if cfg.is_mla:
+                c["kv"], l["kv"] = mla_mod.init_mla_cache(cfg, batch, max_len, dt)
+            else:
+                c["kv"], l["kv"] = attn.init_kv_cache(
+                    cfg, batch, max_len, window=window, dtype=dt
+                )
+        else:
+            c["ssm"], l["ssm"] = mam.init_mamba_cache(cfg, batch, dt)
+        if spec.cross_attn:
+            enc_seq = cfg.encoder.enc_seq if cfg.encoder else 0
+            c["cross"], l["cross"] = attn.init_cross_cache(cfg, batch, enc_seq, dt)
+        # stack along the repeat axis
+        c = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.repeats,) + x.shape), c)
+        l = jax.tree.map(lambda x: Lx("layers", *x.axes), l)
+        caches.append(c)
+        logicals.append(l)
+    return tuple(caches), tuple(logicals)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+                   window_override: int | None = None):
+    box = {}
+
+    def f():
+        cache, lx = init_cache(
+            cfg, batch, max_len, window_override=window_override
+        )
+        box["lx"] = lx
+        return cache
+
+    abstract = jax.eval_shape(f)
+    return abstract, box["lx"]
+
+
+def prefill_cross_caches(cfg: ArchConfig, params, cache, enc_embeds,
+                         chunk: int = 1024):
+    """Populate cross-attention K/V from encoder output (serving prefill)."""
+    enc_out = encoder_forward(cfg, params, enc_embeds, chunk)
+    new_cache = list(cache)
+    for i, spec in enumerate(cfg.pattern):
+        if not spec.cross_attn:
+            continue
+        def one(bp):
+            return attn.cross_prefill(bp["cross"], cfg, enc_out)
+        cc = jax.vmap(one)(params["blocks"][i])
+        c = dict(new_cache[i])
+        c["cross"] = cc
+        new_cache[i] = c
+    return tuple(new_cache), enc_out
+
+
+def lm_decode_step(cfg: ArchConfig, params, cache, token, index, *,
+                   window_override: int | None = None, chunk: int = 2048):
+    """One decode step. token (B, 1) int32; index: tokens generated so far.
+
+    Returns (logits (B, 1, padded_vocab), new_cache).
+    """
+    x = params["embed"][token]
+
+    # scan over the repeat axis; body applies all pattern positions
+    def scan_body(x, inp):
+        bps, bcs = inp  # tuples over pattern positions (sliced at repeat k)
+        out_cs = []
+        for i, spec in enumerate(cfg.pattern):
+            p_i, c_i = bps[i], dict(bcs[i])
+            h = rmsnorm(x, p_i["norm_mix"], cfg.norm_eps)
+            if spec.kind == "attn":
+                if cfg.is_mla:
+                    h, c_i["kv"] = mla_mod.mla_decode(
+                        p_i["attn"], cfg, h, c_i["kv"], index
+                    )
+                else:
+                    h, c_i["kv"] = attn.gqa_decode(
+                        p_i["attn"], cfg, h, c_i["kv"], index, chunk=chunk
+                    )
+            else:
+                h, c_i["ssm"] = mam.mamba_decode(p_i["mamba"], cfg, h, c_i["ssm"])
+            x = x + h
+            if spec.cross_attn:
+                h = rmsnorm(x, p_i["norm_cross"], cfg.norm_eps)
+                h = attn.cross_decode(p_i["cross"], cfg, h, c_i["cross"], chunk)
+                x = x + h
+            if spec.moe:
+                h = rmsnorm(x, p_i["norm_ffn"], cfg.norm_eps)
+                h, _ = moe_apply(p_i["moe"], cfg, h)
+                x = x + h
+            elif cfg.d_ff > 0:
+                h = rmsnorm(x, p_i["norm_ffn"], cfg.norm_eps)
+                x = x + ffn_apply(p_i["ffn"], h, cfg.act)
+            out_cs.append(c_i)
+        return x, tuple(out_cs)
+
+    x, new_cache = jax.lax.scan(scan_body, x, (params["blocks"], cache))
+    x = rmsnorm(x, params["norm_f"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return x @ unembed, new_cache

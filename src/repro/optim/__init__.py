@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adamw, sgd, clip_by_global_norm
+)
+from repro.optim.schedules import (  # noqa: F401
+    cosine_schedule, linear_warmup, constant_schedule
+)

@@ -1,0 +1,112 @@
+"""Minimal pytree optimizers (no optax in this environment).
+
+``Optimizer`` is an (init, update) pair operating on parameter pytrees;
+``update`` takes the step index so schedules stay functional/jit-friendly.
+State layout mirrors optax (per-leaf moments), so checkpoints are portable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "sgd", "clip_by_global_norm"]
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class _Out:
+    """Opaque (non-pytree) per-leaf result bundle — params trees may contain
+    tuples/dicts of their own, so results must not be pytree nodes."""
+
+    __slots__ = ("p", "mu", "nu")
+
+    def __init__(self, p, mu, nu):
+        self.p, self.mu, self.nu = p, mu, nu
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def adamw(
+    lr: Schedule | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float | None = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return dict(
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def update(grads, state, params, step):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1**t
+        c2 = 1.0 - b2**t
+        lr_t = lr_fn(step)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            step_ = (mu / c1) / (jnp.sqrt(nu / c2) + eps)
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return _Out((p.astype(jnp.float32) - lr_t * step_).astype(p.dtype), mu, nu)
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        new_params = jax.tree.map(lambda o: o.p, out)
+        new_mu = jax.tree.map(lambda o: o.mu, out)
+        new_nu = jax.tree.map(lambda o: o.nu, out)
+        return new_params, dict(mu=new_mu, nu=new_nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Schedule | float, *, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        if momentum == 0.0:
+            return dict()
+        return dict(vel=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+                params, grads,
+            )
+            return new_params, state
+        new_vel = jax.tree.map(
+            lambda v, g: momentum * v + g.astype(jnp.float32), state["vel"], grads
+        )
+        new_params = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr_t * v).astype(p.dtype),
+            params, new_vel,
+        )
+        return new_params, dict(vel=new_vel)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,3 @@
+from repro.serve.engine import (  # noqa: F401
+    make_prefill_step, make_decode_step, ServeEngine,
+)

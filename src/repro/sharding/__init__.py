@@ -1,0 +1,3 @@
+from repro.sharding.logical import (  # noqa: F401
+    ShardingRules, DEFAULT_RULES, GOSSIP_RULES, spec_for, tree_specs,
+)

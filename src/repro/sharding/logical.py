@@ -1,0 +1,160 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Every parameter/activation dimension carries a *logical* name; rules map
+logical names to mesh axes. ``spec_for`` checks divisibility of the concrete
+dimension by the mesh-axis product and falls back to replication (None) when
+it does not divide — e.g. minitron's 24 query heads on a 16-way model axis —
+recording the fallback so the dry-run report can list them (DESIGN.md §5).
+
+Logical axes used by the model zoo:
+  batch       global batch                      -> data (+pod)
+  replica     gossip replica axis               -> data (+pod)
+  seq         sequence (activations)            -> None (or data, context-par.)
+  cache_seq   KV-cache sequence                 -> data for long-context decode
+  embed       d_model                           -> None (weights' input dim)
+  mlp         feed-forward hidden               -> model
+  heads       query heads                       -> model
+  kv_heads    KV heads                          -> model (falls back often)
+  qkv         fused head*head_dim features      -> model
+  vocab       (padded) vocabulary               -> model
+  experts     MoE experts                       -> model (expert parallelism)
+  state       SSM state / conv channels         -> model
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules", "DEFAULT_RULES", "GOSSIP_RULES", "spec_for", "tree_specs",
+    "Lx",
+]
+
+Axis = str | tuple[str, ...] | None
+
+
+class Lx:
+    """Opaque logical-axes annotation (NOT a pytree node, so trees of Lx
+    leaves mirror parameter trees one-to-one)."""
+
+    __slots__ = ("axes",)
+
+    def __init__(self, *axes: str | None):
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"Lx{self.axes}"
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple[tuple[str, Axis], ...]
+
+    def lookup(self, logical: str | None) -> Axis:
+        if logical is None:
+            return None
+        for name, axis in self.rules:
+            if name == logical:
+                return axis
+        return None
+
+    def extend(self, *extra: tuple[str, Axis]) -> "ShardingRules":
+        return ShardingRules(rules=tuple(extra) + self.rules)
+
+
+DEFAULT_RULES = ShardingRules(rules=(
+    ("batch", ("pod", "data")),
+    ("replica", ("pod", "data")),
+    ("seq", None),
+    ("cache_seq", None),
+    ("embed", None),
+    ("mlp", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("qkv", "model"),
+    ("vocab", "model"),
+    ("experts", "model"),
+    # fallback TP dim: used only when the experts dim itself cannot shard
+    # (e.g. granite's 40 experts on a 16-way axis) — spec_for skips axes
+    # already consumed by an earlier dim of the same tensor.
+    ("expert_mlp", "model"),
+    ("state", "model"),
+))
+
+# Gossip mode: the replica axis spans (pod, data); everything else identical.
+GOSSIP_RULES = DEFAULT_RULES
+
+_FALLBACKS: list[tuple[str, str, int, int]] = []  # (logical, axis, dim, size)
+
+
+def fallback_log() -> list[tuple[str, str, int, int]]:
+    return list(_FALLBACKS)
+
+
+def clear_fallback_log() -> None:
+    _FALLBACKS.clear()
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape.get(a, 1) for a in axis)
+    return mesh.shape.get(axis, 1)
+
+
+def _present(mesh: Mesh, axis: Axis) -> Axis:
+    """Drop mesh axes that do not exist on this mesh (e.g. 'pod' on 1 pod)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh.shape)
+        return kept if kept else None
+    return axis if axis in mesh.shape else None
+
+
+def spec_for(
+    mesh: Mesh, logical_axes: tuple[str | None, ...], shape: tuple[int, ...],
+    rules: ShardingRules = DEFAULT_RULES,
+) -> P:
+    """PartitionSpec for a tensor with the given logical axes and shape."""
+    if len(logical_axes) != len(shape):
+        raise ValueError(f"{logical_axes=} does not match {shape=}")
+    entries = []
+    used: set[str] = set()
+    for logical, dim in zip(logical_axes, shape):
+        axis = _present(mesh, rules.lookup(logical))
+        members = (
+            () if axis is None else
+            (axis,) if isinstance(axis, str) else tuple(axis)
+        )
+        if axis is not None and any(a in used for a in members):
+            axis = None  # a mesh axis may shard only one dim of a tensor
+        size = _axis_size(mesh, axis)
+        if axis is not None and dim % size != 0:
+            _FALLBACKS.append((str(logical), str(axis), dim, size))
+            axis = None
+        if axis is not None:
+            used.update(members)
+        entries.append(axis)
+    return P(*entries)
+
+
+def tree_specs(mesh: Mesh, abstract_params: Any, logical_tree: Any,
+               rules: ShardingRules = DEFAULT_RULES) -> Any:
+    """Map a pytree of ``Lx`` annotations + abstract shapes to PartitionSpecs.
+
+    ``logical_tree`` mirrors ``abstract_params`` with ``Lx`` leaves; an extra
+    leading logical axis in an ``Lx`` (e.g. the layer-stack axis from
+    scan-over-layers, or the gossip replica axis) may be expressed by the
+    caller having already matched ranks — ranks must agree.
+    """
+    return jax.tree.map(
+        lambda leaf, lx: spec_for(mesh, lx.axes, leaf.shape, rules),
+        abstract_params, logical_tree,
+    )

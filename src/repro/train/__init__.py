@@ -1,0 +1,3 @@
+from repro.train.trainer import (  # noqa: F401
+    TrainMode, make_allreduce_step, make_gossip_step, train_shardings,
+)

@@ -1,0 +1,135 @@
+"""Per-assigned-architecture smoke tests (assignment requirement f).
+
+Each instantiates a REDUCED variant of the same family (pattern-length
+layers, d_model<=512, <=4 experts), runs one forward and one train step on
+CPU, and asserts output shapes + no NaNs. The FULL configs are exercised
+via the dry-run only.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch_config, list_archs
+from repro.configs.base import param_count, reduced
+from repro.models.transformer import init_lm, lm_forward, lm_loss
+from repro.optim.optimizers import adamw
+
+ARCHS = [
+    "minitron-4b", "glm4-9b", "jamba-v0.1-52b", "whisper-small",
+    "granite-moe-3b-a800m", "h2o-danube-3-4b", "deepseek-v2-lite-16b",
+    "mamba2-130m", "llama-3.2-vision-11b", "phi3-medium-14b",
+]
+
+
+def test_registry_has_all_assigned():
+    assert set(ARCHS) <= set(list_archs())
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def _batch(cfg, key, B=2, S=16):
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.encoder is not None:
+        kw["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.encoder.enc_seq, cfg.d_model), jnp.float32
+        ) * 0.1
+    return tok, kw
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch, key):
+    cfg = reduced(get_arch_config(arch))
+    assert cfg.d_model <= 512 and cfg.n_experts <= 4
+    params, _ = init_lm(cfg, key)
+    tok, kw = _batch(cfg, key)
+
+    logits, aux = lm_forward(cfg, params, tok, **kw)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+
+    opt = adamw(1e-3)
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return lm_loss(cfg, p, tok, tok, **kw)[0]
+
+    loss0, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss0)), f"{arch}: non-finite loss"
+    new_params, state = opt.update(grads, state, params, jnp.asarray(0))
+    loss1 = loss_fn(new_params)
+    assert np.isfinite(float(loss1)), f"{arch}: non-finite post-step loss"
+    # one step on the same batch should not increase loss (lr small)
+    assert float(loss1) <= float(loss0) + 0.05
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_matches_init(arch, key):
+    """configs.base.param_count (used for rooflines) matches actual init."""
+    cfg = reduced(get_arch_config(arch))
+    params, _ = init_lm(cfg, key)
+    actual = sum(l.size for l in jax.tree.leaves(params))
+    predicted = param_count(cfg)
+    assert abs(actual - predicted) / actual < 0.02, (
+        f"{arch}: param_count {predicted} vs actual {actual}"
+    )
+
+
+@pytest.mark.parametrize("arch", ["minitron-4b", "jamba-v0.1-52b",
+                                  "deepseek-v2-lite-16b", "whisper-small"])
+def test_smoke_decode_matches_forward(arch, key):
+    from repro.models.transformer import (
+        init_cache, lm_decode_step, prefill_cross_caches,
+    )
+    cfg = reduced(get_arch_config(arch))
+    params, _ = init_lm(cfg, key)
+    tok, kw = _batch(cfg, key, S=6)
+    cache, _ = init_cache(cfg, 2, 16)
+    if cfg.encoder is not None:
+        cache, _ = prefill_cross_caches(cfg, params, cache, kw["enc_embeds"])
+    outs = []
+    for t in range(6):
+        lg, cache = lm_decode_step(cfg, params, cache, tok[:, t:t + 1], t)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    ref, _ = lm_forward(cfg, params, tok, **kw)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(ref), rtol=5e-3, atol=5e-3
+    )
+
+
+def test_exact_assigned_numbers():
+    """The full configs carry the exact assigned hyperparameters."""
+    c = get_arch_config("minitron-4b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 3072, 24, 8, 9216, 256000)
+    c = get_arch_config("glm4-9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 4096, 32, 2, 13696, 151552)
+    c = get_arch_config("jamba-v0.1-52b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k) == (32, 4096, 16, 2)
+    assert sum(1 for s in c.pattern if s.kind == "attn") * c.repeats == 4  # 1:7
+    c = get_arch_config("whisper-small")
+    assert (c.n_layers, c.d_model, c.encoder.n_layers, c.encoder.enc_seq) == (
+        12, 768, 12, 1500)
+    c = get_arch_config("granite-moe-3b-a800m")
+    assert (c.n_experts, c.top_k, c.d_ff) == (40, 8, 512)
+    c = get_arch_config("h2o-danube-3-4b")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (24, 3840, 32000)
+    assert c.window is not None  # SWA
+    c = get_arch_config("deepseek-v2-lite-16b")
+    assert (c.kv_lora_rank, c.n_experts, c.top_k, c.n_shared_experts) == (
+        512, 64, 6, 2)
+    c = get_arch_config("mamba2-130m")
+    assert (c.n_layers, c.d_model, c.ssm_state, c.d_ff) == (24, 768, 128, 0)
+    c = get_arch_config("llama-3.2-vision-11b")
+    assert (c.n_layers, c.d_model, c.vocab_size) == (40, 4096, 128256)
+    assert sum(1 for s in c.pattern if s.cross_attn) * c.repeats == 8
+    c = get_arch_config("phi3-medium-14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff) == (
+        40, 5120, 40, 10, 17920)

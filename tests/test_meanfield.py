@@ -1,0 +1,100 @@
+"""Unit tests for the Lemma 1-3 mean-field machinery."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fg_paper import paper_contact_model, paper_params
+from repro.core.meanfield import (
+    merge_arrival_rate, queueing_delays, solve_fixed_point, transfer_stats,
+)
+
+CM = paper_contact_model()
+
+
+def test_contact_model_matches_theory():
+    # E[t_c] = pi * r_tx / (2 * E|v_rel|) with E|v_rel| = 4v/pi
+    v_rel = 4.0 / np.pi
+    expect = np.pi * 5.0 / (2 * v_rel)
+    assert abs(float(CM.mean_duration) - expect) / expect < 0.01
+    # g = 2 r v_rel D
+    assert abs(float(CM.g) - 2 * 5.0 * v_rel * 5e-3) < 1e-6
+    # pdf integrates to 1
+    assert abs(float(jnp.sum(CM.pdf * CM.weights)) - 1.0) < 1e-5
+
+
+@pytest.mark.parametrize("lam", [0.01, 0.05, 0.2])
+@pytest.mark.parametrize("M", [1, 4])
+def test_fixed_point_in_unit_interval(lam, M):
+    p = paper_params(lam=lam, M=M)
+    sol = solve_fixed_point(p, CM)
+    assert 0.0 < float(sol.a) <= 1.0
+    assert 0.0 < float(sol.b) < 1.0
+    assert 0.0 < float(sol.S) <= 1.0
+    assert float(sol.T_S) > 0.0
+
+
+def test_fixed_point_is_fixed():
+    """The returned a satisfies Eq. (1) to float32 resolution."""
+    p = paper_params(lam=0.05, M=2)
+    sol = solve_fixed_point(p, CM, iters=400)
+    S, T_S = transfer_stats(sol.a, p, CM)
+    denom = sol.b * p.N * S * p.w
+    H = 1.0 - T_S * (p.alpha + p.lam * p.Lam) / denom
+    a_next = 0.5 * (H + jnp.sqrt(H * H + 4.0 * T_S * p.lam * p.Lam / denom))
+    assert abs(float(a_next) - float(sol.a)) < 1e-4
+
+
+def test_fixed_point_independent_of_start():
+    """Lemma 1: unique solution regardless of trajectory/initial condition."""
+    from repro.core.meanfield import _fixed_point_iterate
+    p = paper_params(lam=0.05, M=2)
+    p_dyn = dict(
+        N=jnp.asarray(p.N), alpha=jnp.asarray(p.alpha), lam=jnp.asarray(p.lam),
+        Lam=jnp.asarray(p.Lam), M=jnp.asarray(float(p.M)), w=jnp.asarray(p.w),
+        T_T=jnp.asarray(p.T_T), T_M=jnp.asarray(p.T_M), t0=jnp.asarray(p.t0),
+        T_L=jnp.asarray(p.T_L),
+    )
+    outs = [
+        _fixed_point_iterate(jnp.asarray(a0), p_dyn, CM.t_grid, CM.pdf,
+                             CM.weights, CM.g, 400)[0]
+        for a0 in (0.01, 0.5, 0.99)
+    ]
+    assert max(abs(float(x) - float(outs[0])) for x in outs) < 1e-4
+
+
+def test_stability_monotone_in_load():
+    """Fig. 3 structure: the stability LHS grows with M and with lambda."""
+    prev = 0.0
+    for M in (1, 4, 8, 16):
+        sol = solve_fixed_point(paper_params(lam=0.05, M=M), CM)
+        assert float(sol.stability) >= prev - 1e-6
+        prev = float(sol.stability)
+    prev = 0.0
+    for lam in (0.01, 0.05, 0.1, 0.2):
+        sol = solve_fixed_point(paper_params(lam=lam, M=1), CM)
+        assert float(sol.stability) >= prev - 1e-6
+        prev = float(sol.stability)
+
+
+def test_queueing_low_load_limits():
+    """As load -> 0: d_M -> T_M and d_I -> T_T (M/D/1 with empty queues)."""
+    p = paper_params(lam=1e-5, M=1)
+    d_M, d_I = queueing_delays(jnp.asarray(1e-6), p)
+    assert abs(float(d_M) - p.T_M) < 0.05 * p.T_M
+    assert abs(float(d_I) - p.T_T) < 0.05 * p.T_T
+
+
+def test_queueing_unstable_returns_inf():
+    p = paper_params(lam=0.05, M=1)
+    d_M, d_I = queueing_delays(jnp.asarray(1.0 / p.T_M + 1.0), p)
+    assert not np.isfinite(float(d_M))
+    assert not np.isfinite(float(d_I))
+
+
+def test_merge_rate_formula():
+    p = paper_params(lam=0.05, M=3)
+    sol = solve_fixed_point(p, CM)
+    r = merge_arrival_rate(sol.a, sol.b, sol.S, p, CM)
+    expect = p.M * float(sol.a) * float(sol.S) * p.w**2 * float(CM.g) * (1 - float(sol.b))**2
+    assert abs(float(r) - expect) < 1e-8

@@ -1,0 +1,50 @@
+"""Hypothesis property tests for the merge operators (paper §III-B)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.merge import merge_pytrees, merge_weights
+
+finite = st.floats(0.0, 1e6, allow_nan=False, allow_infinity=False)
+
+
+@given(c1=finite, c2=finite, a1=finite, a2=finite,
+       policy=st.sampled_from(["uniform", "obs_count", "staleness"]))
+@settings(max_examples=60, deadline=None)
+def test_weights_form_convex_combination(c1, c2, a1, a2, policy):
+    w1, w2 = merge_weights(policy, jnp.asarray(c1), jnp.asarray(c2),
+                           jnp.asarray(a1), jnp.asarray(a2), tau_l=300.0)
+    w1, w2 = float(w1), float(w2)
+    assert 0.0 <= w1 <= 1.0 and 0.0 <= w2 <= 1.0
+    assert abs(w1 + w2 - 1.0) < 1e-5
+
+
+@given(c1=st.floats(1.0, 1e4), c2=st.floats(1.0, 1e4))
+@settings(max_examples=40, deadline=None)
+def test_obs_count_weight_matches_fedavg(c1, c2):
+    w1, _ = merge_weights("obs_count", jnp.asarray(c1), jnp.asarray(c2),
+                          jnp.asarray(0.0), jnp.asarray(0.0), tau_l=1.0)
+    assert abs(float(w1) - c1 / (c1 + c2)) < 1e-5
+
+
+@given(data=st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                     min_size=1, max_size=8),
+       w=st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_merge_is_elementwise_convex(data, w):
+    """merged values lie between the two inputs (no overshoot)."""
+    a = jnp.asarray(data, jnp.float32)
+    b = a[::-1]
+    out = merge_pytrees({"x": a}, {"x": b}, jnp.asarray(w), jnp.asarray(1 - w))
+    lo = np.minimum(np.asarray(a), np.asarray(b)) - 1e-4
+    hi = np.maximum(np.asarray(a), np.asarray(b)) + 1e-4
+    assert np.all(np.asarray(out["x"]) >= lo)
+    assert np.all(np.asarray(out["x"]) <= hi)
+
+
+def test_merge_idempotent_on_equal_instances():
+    """Merging identical instances is a no-op (same training set)."""
+    a = {"w": jnp.arange(8, dtype=jnp.float32)}
+    out = merge_pytrees(a, a, jnp.asarray(0.37), jnp.asarray(0.63))
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(a["w"]), rtol=1e-6)

@@ -1,0 +1,78 @@
+"""Analytic roofline model sanity + the documented cost_analysis caveat."""
+
+import pytest
+
+from repro.configs import get_arch_config
+from repro.configs.shapes import get_shape
+from repro.launch.roofline import analytic_roofline
+
+MESH = {"data": 16, "model": 16}
+
+
+def _terms(arch, shape, mode="gossip"):
+    return analytic_roofline(
+        get_arch_config(arch), get_shape(shape), MESH, mode=mode
+    )
+
+
+def test_flops_scale_with_depth():
+    a = _terms("minitron-4b", "train_4k")
+    cfg = get_arch_config("minitron-4b")
+    b = analytic_roofline(
+        cfg.replace(n_layers=64), get_shape("train_4k"), MESH, mode="gossip"
+    )
+    ratio = b.flops_dev / a.flops_dev
+    assert 1.6 < ratio < 2.1  # ~2x layers -> ~2x flops (embed/unembed const)
+
+
+def test_decode_flops_tiny_vs_train():
+    tr = _terms("glm4-9b", "train_4k")
+    de = _terms("glm4-9b", "decode_32k", mode="serve")
+    assert de.flops_dev < tr.flops_dev / 1e3
+
+
+def test_decode_is_memory_bound():
+    for arch in ("glm4-9b", "phi3-medium-14b", "jamba-v0.1-52b"):
+        t = _terms(arch, "decode_32k", mode="serve")
+        assert t.dominant == "memory_s", (arch, t.dominant)
+
+
+def test_moe_active_flops_below_dense_equivalent():
+    """MoE FLOPs follow active params (top-k), not total experts."""
+    moe = _terms("deepseek-v2-lite-16b", "train_4k")
+    from repro.configs.base import param_count
+    cfg = get_arch_config("deepseek-v2-lite-16b")
+    n_active = param_count(cfg, active_only=True)
+    n_total = param_count(cfg)
+    assert n_active < 0.45 * n_total
+    # flops should be much closer to 6*N_active*D than 6*N_total*D
+    tokens = 256 * 4096
+    implied = moe.flops_dev * 256 / (6 * tokens)
+    assert implied < 0.6 * n_total
+
+
+def test_swa_long_context_flops_bounded():
+    """long_500k with a window must not scale with the 524288 cache."""
+    cfg = get_arch_config("phi3-medium-14b")
+    long = analytic_roofline(cfg, get_shape("long_500k"), MESH, mode="serve",
+                             window_override=8192)
+    short = analytic_roofline(cfg, get_shape("decode_32k"), MESH, mode="serve",
+                              window_override=8192)
+    # per-token mixer work identical; only batch differs (1 vs 128)
+    assert long.flops_dev < short.flops_dev
+
+
+def test_gossip_vs_allreduce_collectives():
+    g = _terms("minitron-4b", "train_4k", mode="gossip")
+    a = _terms("minitron-4b", "train_4k", mode="allreduce")
+    # gossip exchanges one model shard per round; allreduce RS+AG = 2 shards
+    assert g.coll_bytes_dev < a.coll_bytes_dev
+
+
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k", "decode_32k"])
+def test_terms_positive(shape):
+    for arch in ("minitron-4b", "mamba2-130m", "whisper-small"):
+        mode = "gossip" if shape == "train_4k" else "serve"
+        t = _terms(arch, shape, mode=mode)
+        assert t.compute_s >= 0 and t.memory_s > 0
+        assert t.dominant in ("compute_s", "memory_s", "collective_s")

@@ -1,0 +1,64 @@
+"""Integration: the Monte-Carlo simulator validates the mean-field model
+(the paper's §VI / Fig. 1 methodology) at the default operating point.
+
+Tolerances encode the paper's own finding: mean-field is accurate but
+*slightly optimistic* relative to the finite-N simulation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs.fg_paper import paper_contact_model, paper_params
+from repro.core.capacity import node_stored_information
+from repro.core.dde import solve_observation_availability
+from repro.core.meanfield import solve_fixed_point
+from repro.core.simulator import SimConfig, simulate
+
+
+@pytest.fixture(scope="module")
+def run():
+    p = paper_params(lam=0.05, M=1)
+    cm = paper_contact_model()
+    sol = solve_fixed_point(p, cm)
+    dde = solve_observation_availability(p, sol)
+    out = simulate(p, SimConfig(n_slots=6000, sample_every=24), seed=0)
+    s0 = len(out.t) // 2
+    return p, sol, dde, out, s0
+
+
+def test_population_matches(run):
+    p, sol, dde, out, s0 = run
+    n_sim = float(out.n_in_rz[s0:].mean())
+    assert abs(n_sim - p.N) / p.N < 0.05  # uniform-mobility geometry
+
+
+def test_availability_matches(run):
+    p, sol, dde, out, s0 = run
+    a_sim = float(out.availability[s0:].mean())
+    a_mf = float(sol.a)
+    assert abs(a_mf - a_sim) / a_sim < 0.15
+    assert a_mf >= a_sim - 0.02  # mean-field optimistic, not pessimistic
+
+
+def test_busy_prob_matches(run):
+    p, sol, dde, out, s0 = run
+    b_sim = float(out.busy_frac[s0:].mean())
+    assert abs(float(sol.b) - b_sim) / max(b_sim, 1e-6) < 0.5  # both ~1%
+
+
+def test_stored_info_matches(run):
+    p, sol, dde, out, s0 = run
+    mf = float(node_stored_information(p, sol, dde.integral(p.tau_l)))
+    sim = float(out.stored_info[s0:].mean())
+    assert sim > 0
+    # short CI run hasn't fully filled the tau_l=300 s window; the 12k-slot
+    # benchmark (fig1) gets within ~30%. Here: same order + optimistic side.
+    assert mf / sim < 2.0
+    assert mf >= sim - 0.5
+
+
+def test_substable_regime_holds(run):
+    """The operating point satisfies Definition 4's preconditions."""
+    p, sol, dde, out, s0 = run
+    assert float(sol.stability) < 0.5   # well inside stability
+    assert float(sol.S) > 0.95          # transfers essentially always fit
