@@ -12,7 +12,7 @@ import time
 import numpy as np
 
 from repro.configs.fg_paper import paper_contact_model, paper_params
-from repro.core.meanfield import solve_fixed_point
+from repro.core.meanfield import solve_fixed_point_batch
 
 from benchmarks.common import emit
 
@@ -21,17 +21,21 @@ def run(quick: bool = False) -> list[dict]:
     cm = paper_contact_model()
     Ms = [1, 2, 3, 4, 5, 6, 8, 12, 16] if not quick else [1, 2, 4, 8]
     lams = np.geomspace(1e-3, 60.0, 7 if quick else 13)
+    # the whole (M x lambda) heat map is one vmapped solve (M is purely
+    # arithmetic in the mean-field path)
+    grid = [(M, float(lam)) for M in Ms for lam in lams]
+    sols = solve_fixed_point_batch(
+        [paper_params(lam=lam, M=M) for M, lam in grid], cm
+    )
+    lhss = np.asarray(sols.stability)
+    stables = np.asarray(sols.stable)
     rows = []
-    for M in Ms:
-        for lam in lams:
-            p = paper_params(lam=float(lam), M=M)
-            sol = solve_fixed_point(p, cm)
-            lhs = float(sol.stability)
-            rows.append(dict(
-                M=M, lam=round(float(lam), 4),
-                stability_lhs=round(lhs, 4) if np.isfinite(lhs) else 1e9,
-                stable=bool(sol.stable),
-            ))
+    for (M, lam), lhs, stable in zip(grid, lhss, stables):
+        rows.append(dict(
+            M=M, lam=round(lam, 4),
+            stability_lhs=round(float(lhs), 4) if np.isfinite(lhs) else 1e9,
+            stable=bool(stable),
+        ))
     return rows
 
 

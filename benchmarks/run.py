@@ -13,7 +13,7 @@ import traceback
 
 from benchmarks import (
     fig1_availability, fig2_capacity, fig3_stability, fig4_staleness,
-    gossip_throughput, roofline_table,
+    gossip_throughput, roofline_table, sim_engine,
 )
 
 BENCHES = {
@@ -23,6 +23,7 @@ BENCHES = {
     "fig4": fig4_staleness.main,
     "gossip": gossip_throughput.main,
     "roofline": roofline_table.main,
+    "sim_engine": sim_engine.main,
 }
 
 

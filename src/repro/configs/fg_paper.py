@@ -17,7 +17,7 @@ from __future__ import annotations
 import math
 
 from repro.core.meanfield import FGParams
-from repro.core.mobility import ContactModel, rdm_contact_model
+from repro.core.mobility import ContactModel, contact_model_for
 
 AREA_SIDE = 200.0        # m
 RZ_RADIUS = 100.0        # m
@@ -36,8 +36,22 @@ DENSITY = N_TOTAL / AREA_SIDE**2
 N_RZ = DENSITY * math.pi * RZ_RADIUS**2
 
 
-def paper_contact_model(speed: float = SPEED_DEFAULT, nt: int = 512) -> ContactModel:
-    return rdm_contact_model(speed=speed, r_tx=R_TX, density=DENSITY, nt=nt)
+def paper_contact_model(
+    speed: float = SPEED_DEFAULT,
+    nt: int = 512,
+    mobility: str = "rdm",
+    street_spacing: float = 25.0,
+) -> ContactModel:
+    """Analytic contact model at the paper geometry.
+
+    ``mobility`` selects the analytic twin of any simulation mobility model
+    (``rdm`` — the paper's own — ``rwp``, ``manhattan``); see
+    ``repro.core.mobility.CONTACT_MODELS``.
+    """
+    return contact_model_for(
+        mobility, speed=speed, r_tx=R_TX, density=DENSITY, nt=nt,
+        street_spacing=street_spacing, area_side=AREA_SIDE,
+    )
 
 
 def paper_params(

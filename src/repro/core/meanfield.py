@@ -38,6 +38,7 @@ __all__ = [
     "MeanFieldSolution",
     "transfer_stats",
     "solve_fixed_point",
+    "solve_fixed_point_batch",
     "merge_arrival_rate",
     "queueing_delays",
     "stability_lhs",
@@ -99,6 +100,13 @@ class MeanFieldSolution:
     @property
     def stable(self) -> jnp.ndarray:
         return self.stability <= 1.0
+
+    def point(self, i: int) -> "MeanFieldSolution":
+        """Scalar slice of a batched solution (``solve_fixed_point_batch``)."""
+        return MeanFieldSolution(**{
+            f.name: jnp.asarray(getattr(self, f.name))[i]
+            for f in dataclasses.fields(self)
+        })
 
 
 def transfer_stats(
@@ -203,13 +211,54 @@ def solve_fixed_point(
     )
 
 
+def _merge_rate(a, b, S, *, M, w, g):
+    """Array-based Lemma 2 core: r = M a S w^2 g (1 - b)^2."""
+    return M * a * S * w * w * g * (1.0 - b) ** 2
+
+
 def merge_arrival_rate(
     a: jnp.ndarray, b: jnp.ndarray, S: jnp.ndarray, p: FGParams,
     contact: ContactModel,
 ) -> jnp.ndarray:
     """Lemma 2: r = M a S w^2 g (1 - b)^2."""
-    w = p.w
-    return p.M * a * S * w * w * contact.g * (1.0 - b) ** 2
+    return _merge_rate(a, b, S, M=p.M, w=p.w, g=contact.g)
+
+
+def _delays(r, *, M, w, lam, Lam, N, T_T, T_M):
+    """Array-based Eq. (4) core shared by the scalar and batched solvers."""
+    lam_t = M * w * lam * Lam / N  # training-task arrival rate
+    rho_m = r * T_M
+    rho_t = lam_t * T_T
+
+    ok = (rho_m < 1.0) & (rho_t < 1.0)
+    safe_m = jnp.where(ok, 1.0 - rho_m, 1.0)
+    safe_t = jnp.where(ok, 1.0 - rho_t, 1.0)
+
+    d_M = T_M + r * T_M**2 / (2.0 * safe_m) + lam_t * T_T**2
+    d_I = (
+        r * T_M**2 / (2.0 * safe_m) + T_T + lam_t * T_T**2 / (2.0 * safe_t)
+    ) / safe_m
+    inf = jnp.asarray(jnp.inf)
+    return jnp.where(ok, d_M, inf), jnp.where(ok, d_I, inf)
+
+
+def _stability(r, *, M, w, lam, Lam, N, alpha, T_T, T_M):
+    """Array-based Eq. (3) core shared by the scalar and batched solvers."""
+    lam_t = M * w * lam * Lam / N
+    rho = r * T_M + lam_t * T_T
+
+    rho_m = r * T_M
+    rho_t = lam_t * T_T
+    ok = (rho_m < 1.0) & (rho_t < 1.0)
+    safe_m = jnp.where(ok, 1.0 - rho_m, 1.0)
+    safe_t = jnp.where(ok, 1.0 - rho_t, 1.0)
+    sojourn = N / alpha
+    term2 = (
+        1.0 / (sojourn * 2.0 * safe_m)
+        * (r * T_M**2 / safe_m + T_T * (2.0 - rho_t) / safe_t)
+    )
+    lhs = jnp.maximum(rho, term2)
+    return jnp.where(ok, lhs, jnp.asarray(jnp.inf)), rho
 
 
 def queueing_delays(r: jnp.ndarray, p: FGParams) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -220,20 +269,9 @@ def queueing_delays(r: jnp.ndarray, p: FGParams) -> tuple[jnp.ndarray, jnp.ndarr
     Outside the stability region the denominators go non-positive; we clamp
     and report +inf so downstream code sees "unstable" rather than garbage.
     """
-    lam_t = p.M * p.w * p.lam * p.Lam / p.N  # training-task arrival rate
-    rho_m = r * p.T_M
-    rho_t = lam_t * p.T_T
-
-    ok = (rho_m < 1.0) & (rho_t < 1.0)
-    safe_m = jnp.where(ok, 1.0 - rho_m, 1.0)
-    safe_t = jnp.where(ok, 1.0 - rho_t, 1.0)
-
-    d_M = p.T_M + r * p.T_M**2 / (2.0 * safe_m) + lam_t * p.T_T**2
-    d_I = (
-        r * p.T_M**2 / (2.0 * safe_m) + p.T_T + lam_t * p.T_T**2 / (2.0 * safe_t)
-    ) / safe_m
-    inf = jnp.asarray(jnp.inf)
-    return jnp.where(ok, d_M, inf), jnp.where(ok, d_I, inf)
+    return _delays(
+        r, M=p.M, w=p.w, lam=p.lam, Lam=p.Lam, N=p.N, T_T=p.T_T, T_M=p.T_M
+    )
 
 
 def stability_lhs(
@@ -247,17 +285,50 @@ def stability_lhs(
     the subscription factor w (the printed Eq. (3) drops it in one spot; with
     the paper's evaluation setup W >= M, i.e. w == 1, the two readings agree).
     """
-    lam_t = p.M * p.w * p.lam * p.Lam / p.N
-    rho = r * p.T_M + lam_t * p.T_T
-
-    rho_m = r * p.T_M
-    rho_t = lam_t * p.T_T
-    ok = (rho_m < 1.0) & (rho_t < 1.0)
-    safe_m = jnp.where(ok, 1.0 - rho_m, 1.0)
-    safe_t = jnp.where(ok, 1.0 - rho_t, 1.0)
-    term2 = (
-        1.0 / (p.sojourn * 2.0 * safe_m)
-        * (r * p.T_M**2 / safe_m + p.T_T * (2.0 - rho_t) / safe_t)
+    return _stability(
+        r, M=p.M, w=p.w, lam=p.lam, Lam=p.Lam, N=p.N, alpha=p.alpha,
+        T_T=p.T_T, T_M=p.T_M,
     )
-    lhs = jnp.maximum(rho, term2)
-    return jnp.where(ok, lhs, jnp.asarray(jnp.inf)), rho
+
+
+def solve_fixed_point_batch(
+    ps: list[FGParams], contact: ContactModel, *, iters: int = 200
+) -> MeanFieldSolution:
+    """Solve Lemma 1-3 for a whole scenario grid in one vmapped program.
+
+    All scenarios share the contact model (it enters only through the
+    quadrature grids); every ``FGParams`` field may vary across the batch —
+    including ``M``, which is purely arithmetic here (unlike the simulator,
+    where it sets array shapes). Returns a ``MeanFieldSolution`` whose
+    fields carry a leading axis of ``len(ps)``.
+
+    This is what turns the paper-figure sweeps (``benchmarks/fig2``-``fig4``)
+    from a serial per-point loop into one compiled batch.
+    """
+    p_dyn = {
+        k: jnp.asarray(v)
+        for k, v in dict(
+            N=[p.N for p in ps], alpha=[p.alpha for p in ps],
+            lam=[p.lam for p in ps], Lam=[p.Lam for p in ps],
+            M=[float(p.M) for p in ps], w=[p.w for p in ps],
+            T_T=[p.T_T for p in ps], T_M=[p.T_M for p in ps],
+            t0=[p.t0 for p in ps], T_L=[p.T_L for p in ps],
+        ).items()
+    }
+    a0 = jnp.full((len(ps),), 0.5)
+    a, b, S, T_S = jax.vmap(
+        lambda a0_i, pd: _fixed_point_iterate(
+            a0_i, pd, contact.t_grid, contact.pdf, contact.weights,
+            contact.g, iters,
+        )
+    )(a0, p_dyn)
+    kw = dict(
+        M=p_dyn["M"], w=p_dyn["w"], lam=p_dyn["lam"], Lam=p_dyn["Lam"],
+        N=p_dyn["N"], T_T=p_dyn["T_T"], T_M=p_dyn["T_M"],
+    )
+    r = _merge_rate(a, b, S, M=p_dyn["M"], w=p_dyn["w"], g=contact.g)
+    d_M, d_I = _delays(r, **kw)
+    lhs, rho = _stability(r, alpha=p_dyn["alpha"], **kw)
+    return MeanFieldSolution(
+        a=a, b=b, S=S, T_S=T_S, r=r, d_M=d_M, d_I=d_I, stability=lhs, rho=rho
+    )

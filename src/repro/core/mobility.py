@@ -1,31 +1,50 @@
-"""Contact statistics for the Random Direction Mobility (RDM) model.
+"""Analytic contact statistics per mobility model (registry).
 
 The Floating Gossip analysis (Lemma 1) takes two mobility inputs:
 
 * ``g``      — mean contact rate observed by each node, and
 * ``f(t_c)`` — the pdf of the duration of a contact,
 
-both assumed identical for all nodes (paper §III-C). For nodes moving on the
-plane with constant speed ``v`` and i.i.d. uniform directions (the paper's RDM
-with boundary reflections, which preserves the uniform spatial distribution),
-both quantities have closed forms that we expose here, discretized on a grid
-so the ``S(a)``/``T_S(a)`` integrals of Lemma 1 become weighted sums.
+both assumed identical for all nodes (paper §III-C). The paper evaluates
+Random Direction mobility only; this module exposes a *registry* of contact
+models — one analytic counterpart per simulation mobility model in
+``repro.sim.mobility`` — so the mean-field pipeline and the Monte-Carlo
+simulator select matching physics by the same name:
 
-Derivations (standard gas-model results, validated against the simulator in
-``tests/test_meanfield_vs_sim.py``):
+``rdm`` — Random Direction with reflections (uniform stationary density):
+  * relative speed of two nodes with speed ``v`` and independent uniform
+    headings: ``|v_rel| = 2 v |sin(theta/2)|``, so ``E|v_rel| = 4 v / pi``;
+  * meeting rate for transmission radius ``r_tx`` and density ``D``:
+    a node sweeps a band of width ``2 r_tx`` at the mean relative speed,
+    ``g = 2 r_tx * E|v_rel| * D`` contacts per second per node;
+  * contact duration: uniform impact parameter ``u ~ U(0, r_tx)`` crossed
+    at speed ``V = E|v_rel|`` along a chord ``c(u) = 2 sqrt(r_tx^2 - u^2)``.
 
-* relative speed of two nodes with speed ``v`` and independent uniform
-  headings: ``|v_rel| = 2 v |sin(theta/2)|`` with ``theta ~ U(0, 2pi)``, so
-  ``E|v_rel| = 4 v / pi``.
-* pairwise meeting rate for transmission radius ``r_tx`` and node density
-  ``D``: a node sweeps a band of width ``2 r_tx`` at the mean relative speed,
-  hence ``g = 2 r_tx * E|v_rel| * D`` contacts per second per node.
-* contact duration: conditioned on a contact, the impact parameter ``u`` is
-  uniform on ``(0, r_tx)`` and the relative trajectory traverses a chord of
-  length ``c(u) = 2 sqrt(r_tx^2 - u^2)`` at speed ``V``, so
-  ``t_c = c(u) / V`` with support ``(0, 2 r_tx / V]``.  Using ``V = E|v_rel|``
-  (the paper's f(t_c) is left generic; we validate this choice empirically),
-  the pdf is ``f(t) = V^2 t / (4 r_tx sqrt(r_tx^2 - (V t / 2)^2))``.
+``rwp`` — Random Waypoint (no pause): headings are still approximately
+  uniform, but the stationary node density is center-peaked. Using the
+  polynomial approximation f(x, y) ∝ x(a-x)y(a-y) (Bettstetter et al.),
+  the per-node mean contact rate gains the pair-concentration factor
+  ``kappa = a^2 ∫ f^2 = 1.44`` over the uniform case; durations keep the
+  chord law at ``V = 4 v / pi``.
+
+``manhattan`` — axis-aligned movement on a street grid with spacing ``s``
+  (``s > 2 sqrt(2) r_tx`` assumed, so parallel streets do not interact):
+  * same-street encounters: street linear density ``eta`` (``D s / 2`` on
+    an infinite grid; ``D a / (2 n_s)`` for ``n_s`` streets per direction
+    on a finite ``a x a`` area) and mean parallel relative speed ``v``
+    (half the pairs are head-on at ``2 v``), rate ``eta v``; each is a
+    head-on pass of fixed duration ``2 r_tx / 2v = r_tx / v``;
+  * perpendicular encounters at intersections: a node crosses street lines
+    at rate ``v / s`` and captures perpendicular movers within ``sqrt(2)
+    r_tx`` of the intersection (min pair distance of perpendicular
+    trajectories offset by ``Δ`` is ``|Δ|/sqrt(2)``), a window of
+    ``2 sqrt(2) r_tx eta`` nodes — total ``sqrt(2) r_tx D v``,
+    independent of the grid pitch; durations follow the chord law at
+    ``V = sqrt(2) v`` (the min distance is uniform on ``(0, r_tx)``);
+  * total ``g = eta v + sqrt(2) r_tx D v``.
+
+All three are validated against the simulator's measured contact rates in
+``tests/test_sim_mobility.py``.
 """
 
 from __future__ import annotations
@@ -34,7 +53,18 @@ import dataclasses
 
 import jax.numpy as jnp
 
-__all__ = ["ContactModel", "rdm_contact_model"]
+__all__ = [
+    "ContactModel",
+    "rdm_contact_model",
+    "rwp_contact_model",
+    "manhattan_contact_model",
+    "CONTACT_MODELS",
+    "contact_model_for",
+]
+
+#: Pair-concentration factor of the RWP stationary density: a^2 ∫ f^2 with
+#: the normalized polynomial approximation f = (36/a^6) x(a-x) y(a-y).
+RWP_DENSITY_FACTOR = 1.44
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,12 +90,35 @@ class ContactModel:
         return jnp.sum(fn(self.t_grid) * self.pdf * self.weights)
 
 
+def _chord_cdf(t, v_rel: float, r_tx: float):
+    """P(t_c <= t) for a chord crossed at speed ``v_rel`` with uniform
+    impact parameter: 1 - sqrt(1 - (v_rel t / (2 r_tx))^2)."""
+    x = jnp.clip(v_rel * t / (2.0 * r_tx), 0.0, 1.0)
+    return 1.0 - jnp.sqrt(jnp.clip(1.0 - x * x, 0.0, 1.0))
+
+
+def _chord_bins(v_rel: float, r_tx: float, nt: int, t_max: float | None = None):
+    """Bin (centers, widths, masses) of the chord-duration distribution.
+
+    The density is integrable but unbounded at ``t_max``, so bins carry
+    exact CDF masses rather than midpoint densities.
+    """
+    t_max = 2.0 * r_tx / v_rel if t_max is None else t_max
+    edges = jnp.linspace(0.0, t_max, nt + 1)
+    centers = 0.5 * (edges[:-1] + edges[1:])
+    widths = edges[1:] - edges[:-1]
+    mass = _chord_cdf(edges[1:], v_rel, r_tx) - _chord_cdf(edges[:-1], v_rel, r_tx)
+    mass = mass / jnp.sum(mass)
+    return centers, widths, mass
+
+
 def rdm_contact_model(
     *,
     speed: float,
     r_tx: float,
     density: float,
     nt: int = 512,
+    **_geometry,
 ) -> ContactModel:
     """Analytic contact model for Random Direction mobility.
 
@@ -77,24 +130,104 @@ def rdm_contact_model(
     """
     v_rel = 4.0 * speed / jnp.pi
     g = 2.0 * r_tx * v_rel * density
-
-    t_max = 2.0 * r_tx / v_rel
-    # Bin centers; the density is integrable but unbounded at t_max, so we use
-    # exact bin masses (difference of the CDF) rather than midpoint densities.
-    edges = jnp.linspace(0.0, t_max, nt + 1)
-    centers = 0.5 * (edges[:-1] + edges[1:])
-    widths = edges[1:] - edges[:-1]
-
-    # CDF: P(t_c <= t) = P(c <= V t) = P(u >= sqrt(r^2 - (Vt/2)^2))
-    #                  = 1 - sqrt(1 - (V t / (2 r))^2).
-    def cdf(t):
-        x = jnp.clip(v_rel * t / (2.0 * r_tx), 0.0, 1.0)
-        return 1.0 - jnp.sqrt(jnp.clip(1.0 - x * x, 0.0, 1.0))
-
-    mass = cdf(edges[1:]) - cdf(edges[:-1])
-    mass = mass / jnp.sum(mass)
-    pdf = mass / widths
-
+    centers, widths, mass = _chord_bins(float(v_rel), r_tx, nt)
     return ContactModel(
-        g=jnp.asarray(g), t_grid=centers, pdf=pdf, weights=widths
+        g=jnp.asarray(g), t_grid=centers, pdf=mass / widths, weights=widths
     )
+
+
+def rwp_contact_model(
+    *,
+    speed: float,
+    r_tx: float,
+    density: float,
+    nt: int = 512,
+    **_geometry,
+) -> ContactModel:
+    """Analytic contact model for Random Waypoint (no pause) mobility.
+
+    Identical to RDM except for the center-peaked stationary density, which
+    multiplies the mean pairwise meeting rate by ``RWP_DENSITY_FACTOR``.
+    """
+    v_rel = 4.0 * speed / jnp.pi
+    g = RWP_DENSITY_FACTOR * 2.0 * r_tx * v_rel * density
+    centers, widths, mass = _chord_bins(float(v_rel), r_tx, nt)
+    return ContactModel(
+        g=jnp.asarray(g), t_grid=centers, pdf=mass / widths, weights=widths
+    )
+
+
+def manhattan_contact_model(
+    *,
+    speed: float,
+    r_tx: float,
+    density: float,
+    street_spacing: float = 25.0,
+    area_side: float | None = None,
+    nt: int = 512,
+    **_geometry,
+) -> ContactModel:
+    """Analytic contact model for Manhattan-grid mobility.
+
+    Mixture of head-on same-street passes (point mass at ``r_tx / v``) and
+    perpendicular intersection crossings (chord law at ``sqrt(2) v``); see
+    the module docstring for the derivation. Assumes
+    ``street_spacing > 2 sqrt(2) r_tx``.
+
+    With ``area_side`` given, the linear street density uses the exact
+    finite grid (``n_s = area_side / s + 1`` streets per direction, so
+    ``eta = D area_side / (2 n_s)``); otherwise the infinite-grid
+    idealization ``eta = D s / 2``. The intersection term is independent of
+    the grid pitch either way (the crossing rate and the per-crossing
+    capture window trade off exactly).
+    """
+    s = street_spacing
+    if area_side is not None:
+        n_streets = round(area_side / s) + 1
+        eta = density * area_side / (2.0 * n_streets)
+    else:
+        eta = density * s / 2.0
+    rate_par = eta * speed
+    rate_perp = density * speed * jnp.sqrt(2.0) * r_tx
+    g = rate_par + rate_perp
+    w_par = rate_par / g
+    w_perp = rate_perp / g
+
+    v_cross = float(jnp.sqrt(2.0) * speed)
+    # support of the perpendicular chord: 2 r / v_cross = sqrt(2) r / v,
+    # which also contains the head-on duration r / v.
+    centers, widths, mass = _chord_bins(v_cross, r_tx, nt)
+    mass = w_perp * mass
+    t_head_on = r_tx / speed
+    head_bin = jnp.clip(
+        jnp.searchsorted(centers + 0.5 * widths, t_head_on), 0, nt - 1
+    )
+    mass = mass.at[head_bin].add(w_par)
+    return ContactModel(
+        g=jnp.asarray(g), t_grid=centers, pdf=mass / widths, weights=widths
+    )
+
+
+#: name -> analytic builder; the same names key the simulation mobility
+#: registry in ``repro.sim.mobility``.
+CONTACT_MODELS = {
+    "rdm": rdm_contact_model,
+    "rwp": rwp_contact_model,
+    "manhattan": manhattan_contact_model,
+}
+
+
+def contact_model_for(name: str, **kwargs) -> ContactModel:
+    """Build the analytic ContactModel paired with mobility model ``name``.
+
+    Geometry kwargs not used by a given model (e.g. ``street_spacing`` for
+    ``rdm``) are accepted and ignored, so callers can pass one uniform
+    geometry description for any model.
+    """
+    try:
+        builder = CONTACT_MODELS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown mobility model {name!r}; known: {sorted(CONTACT_MODELS)}"
+        ) from None
+    return builder(**kwargs)

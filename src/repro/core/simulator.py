@@ -1,85 +1,48 @@
-"""Time-slotted Monte-Carlo simulator of Floating Gossip (paper §VI).
+"""Backward-compatible shim over the modular engine in ``repro.sim``.
 
-This is the validation apparatus the paper uses against its mean-field model,
-re-implemented as a single vectorized ``jax.lax.scan`` over time slots:
+The time-slotted Monte-Carlo simulator of Floating Gossip (paper §VI) used
+to live here as one monolithic ``lax.scan`` step; it is now composed from
+the subsystems in ``repro.sim`` (state / mobility / contacts / compute /
+observations / engine), which adds pluggable mobility models and batched
+multi-seed / multi-scenario runs (``repro.sim.simulate_batch``). This
+module keeps the original import surface:
 
-* nodes move in a square area under the Random Direction Mobility model with
-  reflections; a circular Replication Zone (RZ) sits at the center;
-* two non-busy nodes in the RZ that *newly* come within the transmission
-  radius establish a D2D connection (setup time ``t0``), snapshot their model
-  instances and exchange them one at a time (``T_L`` each, random order),
-  staying *busy* until the exchange finishes or the contact breaks;
-* every delivered instance whose training set is not a subset of the local
-  one is enqueued for *merging*; locally recorded observations are enqueued
-  for *training*; each node serves one job at a time with non-preemptive
-  priority to merging (service times ``T_M`` / ``T_T``);
-* nodes leaving the RZ drop their instances, queues, and observations.
+    from repro.core.simulator import SimConfig, SimOutputs, simulate
 
-Observations are tracked explicitly: each model has a ring of ``K_OBS``
-recent observations with birth times; each node keeps a boolean incorporation
-mask per (model, obs slot). Merging ORs masks (training-set union); training
-sets a single bit. This yields, per output sample: model availability, busy
-fraction, per-node stored information (ages <= tau_l), and per-observation
-holder counts from which o(tau) is estimated post-hoc.
-
-All state lives in fixed-shape arrays so the whole run jit-compiles; a run of
-200 nodes x 20k slots takes seconds on CPU.
+``_legacy_run`` below preserves the pre-refactor monolithic step verbatim
+(single mobility model, Python-unrolled enqueue loops over M). It exists
+solely as the behavioural reference for the engine equivalence test
+(``tests/test_sim_engine.py``) and will be removed once a few releases
+have pinned the engine against it.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.meanfield import FGParams
+from repro.sim.engine import (  # noqa: F401  (re-exported public API)
+    BatchSimOutputs,
+    SimConfig,
+    SimOutputs,
+    simulate,
+    simulate_batch,
+)
+from repro.sim.observations import estimate_o_of_tau  # noqa: F401
 
-__all__ = ["SimConfig", "SimOutputs", "simulate", "estimate_o_of_tau"]
-
-
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    """Geometry/mobility/discretization of the simulation (paper defaults)."""
-
-    n_nodes: int = 200
-    area_side: float = 200.0
-    rz_radius: float = 100.0
-    r_tx: float = 5.0
-    speed: float = 1.0
-    dir_change_rate: float = 1.0 / 20.0  # RDM heading renewal [1/s]
-    dt: float = 0.25                     # slot [s]
-    n_slots: int = 8000
-    sample_every: int = 8                # output every k slots
-    k_obs: int = 64                      # tracked observations per model
-    q_train: int = 16                    # training queue slots per node
-    q_merge: int = 16                    # merging queue slots per node
-    warmup_frac: float = 0.3             # discarded transient fraction
-
-
-@dataclasses.dataclass
-class SimOutputs:
-    """Per-sample traces (leading axis = sample index)."""
-
-    t: np.ndarray                # (S,) sample times
-    availability: np.ndarray     # (S, M) mean fraction of in-RZ nodes w/ model
-    busy_frac: np.ndarray        # (S,)
-    stored_info: np.ndarray      # (S,) mean obs (age<=tau_l) per in-RZ node
-    obs_birth: np.ndarray        # (S, M, K) birth time of ring slot (-inf empty)
-    obs_holders: np.ndarray      # (S, M, K) #in-RZ nodes having incorporated
-    model_holders: np.ndarray    # (S, M) #in-RZ nodes with the model
-    n_in_rz: np.ndarray          # (S,)
+__all__ = [
+    "SimConfig",
+    "SimOutputs",
+    "BatchSimOutputs",
+    "simulate",
+    "simulate_batch",
+    "estimate_o_of_tau",
+]
 
 
 def _pairs_from_mutual(scores: jnp.ndarray) -> jnp.ndarray:
-    """Greedy-ish pair matching: i<->j paired iff each is the other's best.
-
-    ``scores`` is (N, N) with +inf for ineligible pairs. Returns partner
-    index per node, or -1. Mutual-best matching misses some simultaneous
-    contacts, which is rare at the paper's densities (validated vs g).
-    """
     n = scores.shape[0]
     best = jnp.argmin(scores, axis=1)
     has = jnp.isfinite(jnp.min(scores, axis=1))
@@ -88,7 +51,9 @@ def _pairs_from_mutual(scores: jnp.ndarray) -> jnp.ndarray:
 
 
 @partial(jax.jit, static_argnames=("cfg", "M", "Lam"))
-def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
+def _legacy_run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
+    """Pre-refactor monolithic step (reference implementation — see module
+    docstring). Supports RDM mobility only."""
     N, K = cfg.n_nodes, cfg.k_obs
     QT, QM = cfg.q_train, cfg.q_merge
     dt = cfg.dt
@@ -104,29 +69,26 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
     state = dict(
         pos=pos0,
         ang=ang0,
-        # --- D2D exchange state ---
         partner=jnp.full((N,), -1, dtype=jnp.int32),
-        exch_elapsed=jnp.zeros((N,)),        # seconds since connection start
-        exch_total=jnp.zeros((N,)),          # planned t0 + n*T_L
-        snap=jnp.zeros((N, M, K), dtype=bool),       # masks at connection time
-        snap_has=jnp.zeros((N, M), dtype=bool),      # had model at connection
+        exch_elapsed=jnp.zeros((N,)),
+        exch_total=jnp.zeros((N,)),
+        snap=jnp.zeros((N, M, K), dtype=bool),
+        snap_has=jnp.zeros((N, M), dtype=bool),
         order_seed=jnp.zeros((N,), dtype=jnp.uint32),
         prev_close=jnp.zeros((N, N), dtype=bool),
-        # --- model / observation state ---
-        inc=jnp.zeros((N, M, K), dtype=bool),        # incorporated bits
+        inc=jnp.zeros((N, M, K), dtype=bool),
         has_model=jnp.zeros((N, M), dtype=bool),
         obs_birth=jnp.full((M, K), -jnp.inf),
         obs_head=jnp.zeros((M,), dtype=jnp.int32),
-        # --- compute queues (merge: model id + mask; train: model + slot) ---
         tq_model=jnp.full((N, QT), -1, dtype=jnp.int32),
         tq_slot=jnp.zeros((N, QT), dtype=jnp.int32),
         mq_model=jnp.full((N, QM), -1, dtype=jnp.int32),
         mq_mask=jnp.zeros((N, QM, K), dtype=bool),
-        serving=jnp.full((N,), -1, dtype=jnp.int32),  # -1 idle, 0 merge, 1 train
+        serving=jnp.full((N,), -1, dtype=jnp.int32),
         serv_left=jnp.zeros((N,)),
         serv_model=jnp.zeros((N,), dtype=jnp.int32),
-        serv_mask=jnp.zeros((N, K), dtype=bool),      # merge payload
-        serv_slot=jnp.zeros((N,), dtype=jnp.int32),   # train payload
+        serv_mask=jnp.zeros((N, K), dtype=bool),
+        serv_slot=jnp.zeros((N,), dtype=jnp.int32),
     )
 
     def step(carry, inp):
@@ -142,7 +104,6 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
         ang = jnp.where(renew, new_ang, ang)
         vel = cfg.speed * jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
         pos = pos + vel * dt
-        # reflect
         over = pos > cfg.area_side
         under = pos < 0.0
         pos = jnp.where(over, 2 * cfg.area_side - pos, jnp.where(under, -pos, pos))
@@ -152,7 +113,7 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
 
         in_rz = jnp.linalg.norm(pos - center, axis=-1) <= cfg.rz_radius
 
-        # ---- RZ churn: leaving the RZ drops everything ----
+        # ---- RZ churn ----
         was_in = state.get("_in_rz_prev", in_rz)
         left = was_in & ~in_rz
         inc = jnp.where(left[:, None, None], False, state["inc"])
@@ -171,27 +132,20 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
         busy = state["partner"] >= 0
         partner = state["partner"]
 
-        # break / completion of ongoing exchanges
         pidx = jnp.clip(partner, 0, N - 1)
         still_close = close[jnp.arange(N), pidx] & busy
         elapsed = jnp.where(busy, state["exch_elapsed"] + dt, 0.0)
         done = busy & (elapsed >= state["exch_total"])
         broke = busy & ~still_close & ~done
         ending = done | broke
-        # deliveries: instances whose cumulative transfer time fit in the
-        # effective contact duration (elapsed for completion, elapsed-dt for a
-        # break — the broken slot did not finish).
         eff_time = jnp.where(done, state["exch_total"], jnp.maximum(elapsed - dt, 0.0))
 
-        # per (receiver, model): completion offset of the instance in the
-        # sender's random order. order: permutation seeded per connection.
         def deliveries(order_seed, sender_has, eff):
-            # rank of each model in the sender's send order
             rnd = jax.random.uniform(
                 jax.random.fold_in(jax.random.PRNGKey(0), order_seed), (M,)
             )
             rnd = jnp.where(sender_has, rnd, jnp.inf)
-            rank = jnp.argsort(jnp.argsort(rnd))  # 0-based among all models
+            rank = jnp.argsort(jnp.argsort(rnd))
             fin = t0 + (rank + 1).astype(jnp.float32) * T_L
             return sender_has & (fin <= eff)
 
@@ -199,14 +153,10 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
         sender_has = state["snap_has"][pidx]
         delivered = jax.vmap(deliveries)(sender_seed, sender_has, eff_time)
         delivered = delivered & ending[:, None]
-        sender_mask = state["snap"][pidx]  # (N, M, K)
+        sender_mask = state["snap"][pidx]
 
-        # enqueue merge jobs for delivered instances that add information
-        # (Definition: merge only when the received training set is not a
-        # subset of the local one — Y of Definition 4.)
         adds = delivered & jnp.any(sender_mask & ~inc, axis=-1)
-        # one delivered model can arrive per slot boundary; enqueue each model
-        # sequentially over M (M is small: unrolled python loop at trace time)
+        # sequential enqueue over M (unrolled python loop at trace time)
         for m in range(M):
             do = adds[:, m]
             free = mq_model < 0
@@ -217,22 +167,16 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
             mq_mask = jnp.where(sel[:, :, None], sender_mask[:, m][:, None, :], state["mq_mask"])
             state["mq_mask"] = mq_mask
         mq_mask = state["mq_mask"]
-        # NOTE: a received instance is NOT used/propagated until merged
-        # (paper §III-C) — has_model flips only at merge completion below.
 
         partner = jnp.where(ending, -1, partner)
         busy = partner >= 0
 
-        # ---- new connections among non-busy, newly-in-contact nodes ----
         elig = ~busy & in_rz
         cand = new_contact & elig[:, None] & elig[None, :]
         scores = jnp.where(cand, d2, jnp.inf)
         match = _pairs_from_mutual(scores)
         newly = match >= 0
         midx = jnp.clip(match, 0, N - 1)
-        # planned exchange: both sides send every non-default instance they
-        # hold (w = 1 case; the subscription cap W is handled by the caller
-        # restricting M). gamma = own + partner instances.
         n_own = jnp.sum(has_model, axis=-1)
         n_exch = n_own + n_own[midx]
         total = t0 + n_exch.astype(jnp.float32) * T_L
@@ -258,14 +202,12 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
             t_now, obs_birth,
         )
         obs_head = jnp.where(new_obs, (obs_head + 1) % K, obs_head)
-        # clear incorporation bits of the recycled slot
         recycled = new_obs[None, :, None] & (jnp.arange(K)[None, None, :] == slot_of[None, :, None])
         inc = inc & ~recycled
 
-        # Lam random in-RZ nodes record each new observation -> training queue
         who_scores = jax.random.uniform(k_who, (M, N)) + (~in_rz)[None, :] * 1e3
-        ranks = jnp.argsort(who_scores, axis=-1)  # (M, N) node ids by score
-        observers = ranks[:, :Lam]                # (M, Lam)
+        ranks = jnp.argsort(who_scores, axis=-1)
+        observers = ranks[:, :Lam]
         for m in range(M):
             is_obs = jnp.zeros((N,), bool).at[observers[m]].set(True) & in_rz & new_obs[m]
             free = tq_model < 0
@@ -277,21 +219,18 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
             state["tq_slot"] = tq_slot
         tq_slot = state["tq_slot"]
 
-        # ---- compute server: finish jobs, then pick next (merge priority) ---
+        # ---- compute server ----
         serv_left = jnp.where(serving >= 0, serv_left - dt, serv_left)
         fin = (serving >= 0) & (serv_left <= 0.0)
         fin_merge = fin & (serving == 0)
         fin_train = fin & (serving == 1)
-        # merge completion: OR payload into own mask for that model
         mm = state["serv_model"]
-        onehot_m = jax.nn.one_hot(mm, M, dtype=bool)  # (N, M)
+        onehot_m = jax.nn.one_hot(mm, M, dtype=bool)
         merge_apply = fin_merge[:, None, None] & onehot_m[:, :, None] & state["serv_mask"][:, None, :]
         inc = inc | merge_apply
         has_model = has_model | (fin_merge[:, None] & onehot_m)
-        # train completion: set own bit
         onehot_k = jax.nn.one_hot(state["serv_slot"], K, dtype=bool)
         train_apply = fin_train[:, None, None] & onehot_m[:, :, None] & onehot_k[:, None, :]
-        # only counts if the observation slot was not recycled since
         fresh = jnp.take_along_axis(
             obs_birth[None, :, :].repeat(N, 0),
             state["serv_slot"][:, None, None], axis=2
@@ -301,7 +240,6 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
         has_model = has_model | (fin_train[:, None] & onehot_m & fresh)
         serving = jnp.where(fin, -1, serving)
 
-        # pick next job: merge queue first
         idle = serving < 0
         m_avail = jnp.any(mq_model >= 0, axis=-1)
         m_first = jnp.argmax(mq_model >= 0, axis=-1)
@@ -333,9 +271,9 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
         serv_left = jnp.where(take_t, T_T, serv_left)
 
         # ---- outputs ----
-        age = t_now - obs_birth  # (M, K)
+        age = t_now - obs_birth
         live = (obs_birth > -jnp.inf) & (age <= tau_l)
-        stored = jnp.sum(inc & live[None, :, :], axis=(1, 2))  # per node
+        stored = jnp.sum(inc & live[None, :, :], axis=(1, 2))
         n_rz = jnp.maximum(jnp.sum(in_rz), 1)
         out = dict(
             availability=jnp.sum(has_model & in_rz[:, None], axis=0) / n_rz,
@@ -364,52 +302,3 @@ def _run(key, cfg: SimConfig, p_dyn: dict, M: int, Lam: int):
         step, (state, key), jnp.arange(cfg.n_slots), length=cfg.n_slots
     )
     return outs
-
-
-def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
-    """Run the simulator for the FG system ``p`` (uses M, Λ, T_T, T_M, ...)."""
-    if p.W < p.M:
-        raise NotImplementedError(
-            "simulator covers the W >= M (w = 1) regime used in the paper's "
-            "evaluation; pass M = min(M, W) for the general case"
-        )
-    p_dyn = dict(
-        t0=p.t0, T_L=p.T_L, T_T=p.T_T, T_M=p.T_M, lam=p.lam, tau_l=p.tau_l
-    )
-    outs = _run(jax.random.PRNGKey(seed), cfg, p_dyn, int(p.M), int(p.Lam))
-    s = cfg.sample_every
-    sl = slice(s - 1, None, s)
-    t = (np.arange(cfg.n_slots) * cfg.dt)[sl]
-    return SimOutputs(
-        t=t,
-        availability=np.asarray(outs["availability"])[sl],
-        busy_frac=np.asarray(outs["busy_frac"])[sl],
-        stored_info=np.asarray(outs["stored"])[sl],
-        obs_birth=np.asarray(outs["obs_birth"])[sl],
-        obs_holders=np.asarray(outs["obs_holders"])[sl],
-        model_holders=np.asarray(outs["model_holders"])[sl],
-        n_in_rz=np.asarray(outs["n_in_rz"])[sl],
-    )
-
-
-def estimate_o_of_tau(
-    out: SimOutputs, tau_grid: np.ndarray, warmup_frac: float = 0.3
-) -> np.ndarray:
-    """Empirical o(τ): holders-of-observation / holders-of-model at age τ."""
-    s0 = int(len(out.t) * warmup_frac)
-    num = np.zeros_like(tau_grid)
-    den = np.zeros_like(tau_grid)
-    dtau = tau_grid[1] - tau_grid[0]
-    for s in range(s0, len(out.t)):
-        age = out.t[s] - out.obs_birth[s]          # (M, K)
-        valid = np.isfinite(age) & (age >= 0)
-        holders = out.model_holders[s]             # (M,)
-        for m in range(age.shape[0]):
-            if holders[m] == 0:
-                continue
-            bins = (age[m][valid[m]] / dtau).astype(int)
-            frac = out.obs_holders[s][m][valid[m]] / holders[m]
-            ok = bins < len(tau_grid)
-            np.add.at(num, bins[ok], frac[ok])
-            np.add.at(den, bins[ok], 1.0)
-    return np.where(den > 0, num / np.maximum(den, 1), np.nan)

@@ -1,0 +1,55 @@
+"""Modular Monte-Carlo simulation engine for Floating Gossip (paper §VI).
+
+Module map
+----------
+
+``state``         Typed pytree carry (``SimState``, registered dataclasses)
+                  replacing the legacy raw-dict scan state.
+``mobility``      Pluggable mobility registry — ``rdm`` (the paper's Random
+                  Direction), ``rwp`` (Random Waypoint), ``manhattan``
+                  (street grid) — each paired by name with its analytic
+                  ``ContactModel`` in ``repro.core.mobility``, plus an
+                  empirical contact-rate probe.
+``contacts``      D2D pairing (mutual-best matching), exchange progression,
+                  and per-instance delivery accounting.
+``compute``       Merge/train priority queues as vectorized scatter ops —
+                  the traced program is independent of the model count M.
+``observations``  Observation ring, observer selection, job completions,
+                  per-slot trace outputs, and the post-hoc o(τ) estimator.
+``engine``        The ``lax.scan`` driver: ``simulate`` (single run) and
+                  ``simulate_batch`` (seeds x scenarios in one jit).
+
+``repro.core.simulator`` remains a thin backward-compatible shim over this
+package (and keeps the legacy monolithic step as the equivalence-test
+reference).
+"""
+
+from repro.sim.engine import (
+    BatchSimOutputs,
+    SimConfig,
+    SimOutputs,
+    simulate,
+    simulate_batch,
+)
+from repro.sim.mobility import (
+    MOBILITY_MODELS,
+    MobilityModel,
+    get_mobility,
+    measure_contact_rate,
+    register_mobility,
+)
+from repro.sim.observations import estimate_o_of_tau
+
+__all__ = [
+    "BatchSimOutputs",
+    "SimConfig",
+    "SimOutputs",
+    "simulate",
+    "simulate_batch",
+    "MOBILITY_MODELS",
+    "MobilityModel",
+    "get_mobility",
+    "register_mobility",
+    "measure_contact_rate",
+    "estimate_o_of_tau",
+]

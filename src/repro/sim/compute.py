@@ -1,0 +1,170 @@
+"""Vectorized compute-queue operations (merge/train priority queues).
+
+The legacy simulator enqueued jobs with a Python loop over the model count
+``M`` (one masked scatter per model), so the traced program — and hence
+compile time — grew linearly with ``M``. The ops here are pure scatters
+whose *trace* is independent of ``M``: only array extents change.
+
+Queue convention (unchanged from the legacy simulator): a queue is an
+``(N, Q)`` int32 array of model ids with ``-1`` marking a free slot. Jobs
+are stored front-compact only by accident of arrival; service always takes
+the lowest-index occupied slot (FIFO within the fixed arrival order), and
+enqueues fill free slots in ascending slot order.
+
+``enqueue_ascending`` reproduces the legacy loop semantics exactly:
+
+* candidate items are the ``True`` entries of a per-node ``(N, M)`` ``want``
+  matrix, considered in ascending ``m`` order (the legacy loop order);
+* each item takes the next free slot in ascending slot order;
+* items beyond the free capacity are dropped (the legacy behaviour when
+  ``jnp.any(free)`` went False).
+
+This is verified bit-for-bit against a reference per-``M`` loop in
+``tests/test_sim_queue_ops.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "enqueue_ascending", "pick_next_jobs", "advance_timers",
+    "pack_mask", "unpack_mask",
+]
+
+
+def pack_mask(mask: jnp.ndarray) -> jnp.ndarray:
+    """Pack a trailing boolean axis of length K into ceil(K/32) uint32 words.
+
+    The merge queue carries an incorporation mask per queued job; packed,
+    the queue payload shrinks 32x — it is the largest buffer the scan
+    carries, and on CPU the batched engine is memory-traffic-bound. Bit
+    packing is exact, so the engine stays bit-equivalent to the legacy
+    step."""
+    k = mask.shape[-1]
+    pad = (-k) % 32
+    if pad:
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((*mask.shape[:-1], pad), bool)], axis=-1
+        )
+    words = (k + pad) // 32
+    grouped = mask.reshape(*mask.shape[:-1], words, 32)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(
+        jnp.where(grouped, weights, jnp.uint32(0)), axis=-1, dtype=jnp.uint32
+    )
+
+
+def unpack_mask(words: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_mask` for a trailing axis of K bits."""
+    bits = (words[..., None] >> jnp.arange(32, dtype=jnp.uint32)) & jnp.uint32(1)
+    flat = bits.reshape(*words.shape[:-1], words.shape[-1] * 32)
+    return flat[..., :k].astype(bool)
+
+
+def enqueue_ascending(queue: jnp.ndarray, want: jnp.ndarray, *payloads):
+    """Enqueue every wanted model id into the first free slots, vectorized.
+
+    Args:
+      queue: ``(N, Q)`` int32 queue of model ids, ``-1`` = free.
+      want:  ``(N, M)`` bool — enqueue model ``m`` for node ``n``.
+      payloads: pairs ``(dest, src)`` where ``dest`` is ``(N, Q, ...)`` queue
+        payload storage and ``src`` is ``(N, M, ...)`` per-item payload;
+        payload rows are written alongside the model id.
+
+    Returns:
+      ``(new_queue, *new_payload_dests)``.
+
+    The item->slot assignment is expressed as a dense (N, M, Q) rank-match
+    select rather than a scatter: item ``m`` (with arrival rank ``k`` among
+    this slot's wanted items) lands in the free slot whose free-rank is
+    ``k``. XLA lowers scatters to serialized per-element loops on CPU
+    (catastrophically so under vmap); the dense select is pure elementwise
+    work + a reduction over ``M`` and vectorizes across batched runs.
+    """
+    m = want.shape[1]
+    free = queue < 0                                     # (N, Q)
+    free_rank = jnp.cumsum(free, axis=1) - 1             # rank among free slots
+    n_free = jnp.sum(free, axis=1)                       # (N,)
+
+    rank = jnp.cumsum(want, axis=1) - 1                  # (N, M) arrival rank
+    ok = want & (rank < n_free[:, None])
+    # sel[n, m, q] — item m of node n lands in slot q (one-hot over both m
+    # and q wherever an assignment exists)
+    sel = free[:, None, :] & (free_rank[:, None, :] == rank[:, :, None]) \
+        & ok[:, :, None]
+    taken = jnp.any(sel, axis=1)                         # (N, Q)
+    m_ids = jnp.arange(m, dtype=queue.dtype)[None, :, None]
+    new_queue = jnp.where(taken, jnp.sum(sel * m_ids, axis=1), queue)
+
+    new_payloads = []
+    for store, src in payloads:
+        extra = src.ndim - 2                             # trailing payload dims
+        sel_e = sel.reshape(sel.shape + (1,) * extra)
+        src_e = jnp.expand_dims(src, 2)                  # (N, M, 1, ...)
+        if store.dtype == jnp.bool_:
+            val = jnp.any(sel_e & src_e, axis=1)
+        else:
+            val = jnp.sum(sel_e * src_e, axis=1).astype(store.dtype)
+        taken_e = taken.reshape(taken.shape + (1,) * extra)
+        new_payloads.append(jnp.where(taken_e, val, store))
+    return (new_queue, *new_payloads)
+
+
+def advance_timers(serving: jnp.ndarray, serv_left: jnp.ndarray, dt):
+    """Tick running jobs; return (serv_left, finished_merge, finished_train)."""
+    serv_left = jnp.where(serving >= 0, serv_left - dt, serv_left)
+    fin = (serving >= 0) & (serv_left <= 0.0)
+    return serv_left, fin & (serving == 0), fin & (serving == 1)
+
+
+def pick_next_jobs(
+    *,
+    serving: jnp.ndarray,       # (N,) -1 idle / 0 merge / 1 train
+    serv_left: jnp.ndarray,
+    serv_model: jnp.ndarray,
+    serv_mask: jnp.ndarray,     # (N, K) merge payload (unpacked bool)
+    serv_slot: jnp.ndarray,     # (N,)  train payload
+    mq_model: jnp.ndarray,      # (N, QM)
+    mq_mask: jnp.ndarray,       # (N, QM, ceil(K/32)) packed uint32
+    tq_model: jnp.ndarray,      # (N, QT)
+    tq_slot: jnp.ndarray,       # (N, QT)
+    T_M,
+    T_T,
+):
+    """Assign idle servers their next job: merge queue first (non-preemptive
+    priority), then training. Returns the updated server fields and queues."""
+    qm = mq_model.shape[1]
+    qt = tq_model.shape[1]
+
+    def row_take(arr, first):
+        # arr[n, first[n]] without advanced indexing (gathers vmap poorly)
+        idx = first.reshape(first.shape[0], *([1] * (arr.ndim - 1)))
+        return jnp.take_along_axis(arr, idx, axis=1)[:, 0]
+
+    m_avail = jnp.any(mq_model >= 0, axis=-1)
+    m_first = jnp.argmax(mq_model >= 0, axis=-1)
+    take_m = (serving < 0) & m_avail
+    sel_m = (jnp.arange(qm)[None, :] == m_first[:, None]) & take_m[:, None]
+    serv_model = jnp.where(take_m, row_take(mq_model, m_first), serv_model)
+    taken_mask = unpack_mask(row_take(mq_mask, m_first), serv_mask.shape[-1])
+    serv_mask = jnp.where(take_m[:, None], taken_mask, serv_mask)
+    mq_model = jnp.where(sel_m, -1, mq_model)
+    serving = jnp.where(take_m, 0, serving)
+    serv_left = jnp.where(take_m, T_M, serv_left)
+
+    t_avail = jnp.any(tq_model >= 0, axis=-1)
+    t_first = jnp.argmax(tq_model >= 0, axis=-1)
+    take_t = (serving < 0) & t_avail
+    sel_t = (jnp.arange(qt)[None, :] == t_first[:, None]) & take_t[:, None]
+    serv_model = jnp.where(take_t, row_take(tq_model, t_first), serv_model)
+    serv_slot = jnp.where(take_t, row_take(tq_slot, t_first), serv_slot)
+    tq_model = jnp.where(sel_t, -1, tq_model)
+    serving = jnp.where(take_t, 1, serving)
+    serv_left = jnp.where(take_t, T_T, serv_left)
+
+    return dict(
+        serving=serving, serv_left=serv_left, serv_model=serv_model,
+        serv_mask=serv_mask, serv_slot=serv_slot,
+        mq_model=mq_model, tq_model=tq_model,
+    )

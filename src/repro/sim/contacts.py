@@ -1,0 +1,143 @@
+"""D2D contact dynamics: pair matching, exchange progression, deliveries.
+
+Implements the paper's §III-B contact protocol: two non-busy nodes inside
+the RZ that *newly* come within the transmission radius establish a
+connection (setup time ``t0``), snapshot their model instances and exchange
+them one at a time (``T_L`` each, in a per-connection random order),
+staying busy until the exchange finishes or the contact breaks. Instances
+whose cumulative transfer time fit in the effective contact duration are
+delivered at the moment the exchange ends.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "mutual_best_pairs",
+    "close_matrix",
+    "advance_exchanges",
+    "compute_deliveries",
+    "form_connections",
+]
+
+
+def mutual_best_pairs(scores: jnp.ndarray) -> jnp.ndarray:
+    """Greedy-ish pair matching: i<->j paired iff each is the other's best.
+
+    ``scores`` is (N, N) with +inf for ineligible pairs. Returns partner
+    index per node, or -1. Mutual-best matching misses some simultaneous
+    contacts, which is rare at the paper's densities (validated vs g).
+    """
+    n = scores.shape[0]
+    best = jnp.argmin(scores, axis=1)
+    has = jnp.isfinite(jnp.min(scores, axis=1))
+    mutual = (best[best] == jnp.arange(n)) & has & has[best]
+    return jnp.where(mutual, best, -1)
+
+
+def close_matrix(pos: jnp.ndarray, in_rz: jnp.ndarray, r_tx) -> jnp.ndarray:
+    """(N, N) proximity matrix among in-RZ nodes (zero diagonal), plus the
+    squared-distance matrix it was thresholded from.
+
+    Written as two (N, N) elementwise squares rather than a reduce over a
+    materialized (N, N, 2) difference — bitwise the same sum, but it lowers
+    to plain vector code (the broadcast-reduce form is the slowest op of
+    the batched step on CPU)."""
+    n = pos.shape[0]
+    dx = pos[:, None, 0] - pos[None, :, 0]
+    dy = pos[:, None, 1] - pos[None, :, 1]
+    d2 = dx * dx + dy * dy
+    close = (d2 <= r_tx**2) & in_rz[:, None] & in_rz[None, :]
+    return close & ~jnp.eye(n, dtype=bool), d2
+
+
+def advance_exchanges(
+    *, partner, exch_elapsed, exch_total, close, dt
+):
+    """Tick ongoing exchanges; classify completion vs contact break.
+
+    Returns (elapsed, done, broke, ending, eff_time, pidx): ``eff_time`` is
+    the portion of the exchange usable for transfers — the full planned
+    duration on completion, the elapsed time minus the broken slot on a
+    break (the broken slot did not finish).
+    """
+    n = partner.shape[0]
+    busy = partner >= 0
+    pidx = jnp.clip(partner, 0, n - 1)
+    still_close = close[jnp.arange(n), pidx] & busy
+    elapsed = jnp.where(busy, exch_elapsed + dt, 0.0)
+    done = busy & (elapsed >= exch_total)
+    broke = busy & ~still_close & ~done
+    ending = done | broke
+    eff_time = jnp.where(done, exch_total, jnp.maximum(elapsed - dt, 0.0))
+    return elapsed, done, broke, ending, eff_time, pidx
+
+
+def compute_deliveries(
+    *, order_seed, snap_has, snap, pidx, eff_time, ending, t0, T_L
+):
+    """Per (receiver, model) delivery flags for exchanges ending this slot.
+
+    The sender transmits its snapshotted instances in a random order seeded
+    per connection; an instance is delivered iff its completion offset
+    ``t0 + (rank + 1) T_L`` fits within the effective contact time.
+    Returns (delivered (N, M) bool, sender_mask (N, M, K))."""
+    m_count = snap_has.shape[1]
+
+    def deliveries(order_seed_i, sender_has, eff):
+        rnd = jax.random.uniform(
+            jax.random.fold_in(jax.random.PRNGKey(0), order_seed_i), (m_count,)
+        )
+        rnd = jnp.where(sender_has, rnd, jnp.inf)
+        rank = jnp.argsort(jnp.argsort(rnd))  # 0-based among all models
+        fin = t0 + (rank + 1).astype(jnp.float32) * T_L
+        return sender_has & (fin <= eff)
+
+    delivered = jax.vmap(deliveries)(order_seed[pidx], snap_has[pidx], eff_time)
+    return delivered & ending[:, None], snap[pidx]
+
+
+def form_connections(
+    *,
+    partner, ending, new_contact, in_rz, d2,
+    has_model, inc, snap, snap_has,
+    exch_elapsed, exch_total, order_seed,
+    slot_idx, t0, T_L,
+):
+    """Free ending pairs, then pair up non-busy newly-in-contact nodes.
+
+    The planned exchange covers every non-default instance both sides hold
+    (the w = 1 case; the subscription cap W is handled by the caller
+    restricting M), so the planned busy time is ``t0 + (n_i + n_j) T_L``.
+    """
+    n = partner.shape[0]
+    partner = jnp.where(ending, -1, partner)
+    busy = partner >= 0
+
+    elig = ~busy & in_rz
+    cand = new_contact & elig[:, None] & elig[None, :]
+    scores = jnp.where(cand, d2, jnp.inf)
+    match = mutual_best_pairs(scores)
+    newly = match >= 0
+    midx = jnp.clip(match, 0, n - 1)
+
+    n_own = jnp.sum(has_model, axis=-1)
+    n_exch = n_own + n_own[midx]
+    total = t0 + n_exch.astype(jnp.float32) * T_L
+    partner = jnp.where(newly, match, partner)
+    exch_elapsed = jnp.where(newly, 0.0, exch_elapsed)
+    exch_total = jnp.where(newly, total, exch_total)
+    snap = jnp.where(newly[:, None, None], inc, snap)
+    snap_has = jnp.where(newly[:, None], has_model, snap_has)
+    order_seed = jnp.where(
+        newly,
+        (slot_idx.astype(jnp.uint32) * jnp.uint32(2654435761)
+         + jnp.arange(n, dtype=jnp.uint32)),
+        order_seed,
+    )
+    return dict(
+        partner=partner, exch_elapsed=exch_elapsed, exch_total=exch_total,
+        snap=snap, snap_has=snap_has, order_seed=order_seed,
+    )

@@ -1,0 +1,341 @@
+"""The ``lax.scan`` simulation driver: single runs and batched sweeps.
+
+Composes the subsystems (mobility / contacts / compute / observations)
+into one slot-step function, scans it over time, and exposes
+
+* ``simulate(p, cfg, seed)``        — one system, one seed (the legacy API);
+* ``simulate_batch(ps, cfg, seeds)``— a (scenarios x seeds) sweep *in a
+  single jit compilation*: the scenario axis vmaps over stacked dynamic
+  ``FGParams`` (T_L, T_T, T_M, t0, lam, tau_l, Λ) and the seed axis vmaps
+  over PRNG keys. The paper's figure sweeps become one batched device
+  program instead of a serial per-point loop (``benchmarks/sim_engine.py``
+  measures the speedup).
+
+The per-slot traced program is independent of the model count ``M`` (the
+legacy Python-over-``M`` enqueue loops are scatter ops in
+``repro.sim.compute``), so compile time no longer grows with ``M``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.meanfield import FGParams
+from repro.sim import compute, contacts, observations
+from repro.sim.mobility import get_mobility
+from repro.sim.state import init_sim_state
+
+__all__ = [
+    "SimConfig",
+    "SimOutputs",
+    "BatchSimOutputs",
+    "simulate",
+    "simulate_batch",
+    "dynamic_params",
+    "stack_dynamic_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Geometry/mobility/discretization of the simulation (paper defaults).
+
+    Hashable and frozen: it is a static jit argument, so two configs that
+    compare equal share one compiled program regardless of the dynamic
+    ``FGParams`` swept over it.
+    """
+
+    n_nodes: int = 200
+    area_side: float = 200.0
+    rz_radius: float = 100.0
+    r_tx: float = 5.0
+    speed: float = 1.0
+    dir_change_rate: float = 1.0 / 20.0  # RDM heading renewal [1/s]
+    dt: float = 0.25                     # slot [s]
+    n_slots: int = 8000
+    sample_every: int = 8                # output every k slots
+    k_obs: int = 64                      # tracked observations per model
+    q_train: int = 16                    # training queue slots per node
+    q_merge: int = 16                    # merging queue slots per node
+    warmup_frac: float = 0.3             # discarded transient fraction
+    mobility: str = "rdm"                # key into repro.sim.mobility registry
+    street_spacing: float = 25.0         # Manhattan-grid street spacing [m]
+
+
+@dataclasses.dataclass
+class SimOutputs:
+    """Per-sample traces (leading axis = sample index)."""
+
+    t: np.ndarray                # (S,) sample times
+    availability: np.ndarray     # (S, M) mean fraction of in-RZ nodes w/ model
+    busy_frac: np.ndarray        # (S,)
+    stored_info: np.ndarray      # (S,) mean obs (age<=tau_l) per in-RZ node
+    obs_birth: np.ndarray        # (S, M, K) birth time of ring slot (-inf empty)
+    obs_holders: np.ndarray      # (S, M, K) #in-RZ nodes having incorporated
+    model_holders: np.ndarray    # (S, M) #in-RZ nodes with the model
+    n_in_rz: np.ndarray          # (S,)
+
+
+@dataclasses.dataclass
+class BatchSimOutputs:
+    """Batched traces with leading (scenario, seed) axes.
+
+    ``point(i, j)`` extracts the ``SimOutputs`` view of scenario ``i``,
+    seed ``j`` for code written against the single-run API."""
+
+    t: np.ndarray                # (S,)
+    availability: np.ndarray     # (P, R, S, M)
+    busy_frac: np.ndarray        # (P, R, S)
+    stored_info: np.ndarray      # (P, R, S)
+    obs_birth: np.ndarray        # (P, R, S, M, K)
+    obs_holders: np.ndarray      # (P, R, S, M, K)
+    model_holders: np.ndarray    # (P, R, S, M)
+    n_in_rz: np.ndarray          # (P, R, S)
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.availability.shape[0]
+
+    @property
+    def n_seeds(self) -> int:
+        return self.availability.shape[1]
+
+    def point(self, scenario: int, seed: int) -> SimOutputs:
+        return SimOutputs(
+            t=self.t,
+            availability=self.availability[scenario, seed],
+            busy_frac=self.busy_frac[scenario, seed],
+            stored_info=self.stored_info[scenario, seed],
+            obs_birth=self.obs_birth[scenario, seed],
+            obs_holders=self.obs_holders[scenario, seed],
+            model_holders=self.model_holders[scenario, seed],
+            n_in_rz=self.n_in_rz[scenario, seed],
+        )
+
+
+def dynamic_params(p: FGParams) -> dict:
+    """The FGParams fields the engine treats as traced (sweepable without
+    recompilation). ``M`` stays static — it sets array shapes."""
+    return dict(
+        t0=p.t0, T_L=p.T_L, T_T=p.T_T, T_M=p.T_M,
+        lam=p.lam, tau_l=p.tau_l, Lam=float(p.Lam),
+    )
+
+
+def stack_dynamic_params(ps: Sequence[FGParams]) -> dict:
+    """Stack per-scenario dynamic params into leading-axis arrays."""
+    dicts = [dynamic_params(p) for p in ps]
+    return {
+        k: jnp.asarray([d[k] for d in dicts], dtype=jnp.float32)
+        for k in dicts[0]
+    }
+
+
+def _check_params(ps: Sequence[FGParams]) -> int:
+    m_values = {int(p.M) for p in ps}
+    if len(m_values) != 1:
+        raise ValueError(
+            f"one batch compiles for one model count M; got {sorted(m_values)}"
+            " — split the sweep by M"
+        )
+    for p in ps:
+        if p.W < p.M:
+            raise NotImplementedError(
+                "simulator covers the W >= M (w = 1) regime used in the "
+                "paper's evaluation; pass M = min(M, W) for the general case"
+            )
+    return m_values.pop()
+
+
+def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
+    """Un-jitted scan driver: returns the per-slot output dict."""
+    dt = cfg.dt
+    t0, T_L, T_T, T_M = (p_dyn[k] for k in ("t0", "T_L", "T_T", "T_M"))
+    lam, tau_l, Lam = p_dyn["lam"], p_dyn["tau_l"], p_dyn["Lam"]
+    center = jnp.asarray([cfg.area_side / 2.0, cfg.area_side / 2.0])
+    model = get_mobility(cfg.mobility)
+
+    def step(carry, slot_idx):
+        state, key = carry
+        t_now = slot_idx.astype(jnp.float32) * dt
+        key, k_mob1, k_mob2, k_obs, k_who = jax.random.split(key, 5)
+
+        # ---- mobility & RZ membership ----
+        mob = model.step(k_mob1, k_mob2, state.mob, cfg)
+        in_rz = jnp.linalg.norm(mob.pos - center, axis=-1) <= cfg.rz_radius
+
+        # ---- RZ churn: leaving the RZ drops everything ----
+        left = state.in_rz_prev & ~in_rz
+        inc = jnp.where(left[:, None, None], False, state.inc)
+        has_model = jnp.where(left[:, None], False, state.has_model)
+        tq_model = jnp.where(left[:, None], -1, state.tq_model)
+        mq_model = jnp.where(left[:, None], -1, state.mq_model)
+        serving = jnp.where(left, -1, state.serving)
+        serv_left = jnp.where(left, 0.0, state.serv_left)
+
+        # ---- contact dynamics ----
+        close, d2 = contacts.close_matrix(mob.pos, in_rz, cfg.r_tx)
+        new_contact = close & ~state.prev_close
+        elapsed, done, broke, ending, eff_time, pidx = contacts.advance_exchanges(
+            partner=state.partner, exch_elapsed=state.exch_elapsed,
+            exch_total=state.exch_total, close=close, dt=dt,
+        )
+        delivered, sender_mask = contacts.compute_deliveries(
+            order_seed=state.order_seed, snap_has=state.snap_has,
+            snap=state.snap, pidx=pidx, eff_time=eff_time, ending=ending,
+            t0=t0, T_L=T_L,
+        )
+
+        # enqueue merge jobs for delivered instances that add information
+        # (merge only when the received training set is not a subset of the
+        # local one — Y of Definition 4). A received instance is NOT
+        # used/propagated until merged (paper §III-C) — has_model flips only
+        # at merge completion.
+        adds = delivered & jnp.any(sender_mask & ~inc, axis=-1)
+        mq_model, mq_mask = compute.enqueue_ascending(
+            mq_model, adds, (state.mq_mask, compute.pack_mask(sender_mask))
+        )
+
+        # ---- release ending pairs, form new connections ----
+        conn = contacts.form_connections(
+            partner=state.partner, ending=ending, new_contact=new_contact,
+            in_rz=in_rz, d2=d2, has_model=has_model, inc=inc,
+            snap=state.snap, snap_has=state.snap_has,
+            exch_elapsed=elapsed, exch_total=state.exch_total,
+            order_seed=state.order_seed, slot_idx=slot_idx, t0=t0, T_L=T_L,
+        )
+
+        # ---- observation generation & training enqueue ----
+        obs_birth, obs_head, inc, want_train, slot_payload = (
+            observations.generate_observations(
+                k_obs=k_obs, k_who=k_who, obs_birth=state.obs_birth,
+                obs_head=state.obs_head, inc=inc, in_rz=in_rz,
+                lam=lam, Lam=Lam, dt=dt, t_now=t_now,
+            )
+        )
+        tq_model, tq_slot = compute.enqueue_ascending(
+            tq_model, want_train, (state.tq_slot, slot_payload)
+        )
+
+        # ---- compute server: finish jobs, then pick next (merge priority) --
+        serv_left, fin_merge, fin_train = compute.advance_timers(
+            serving, serv_left, dt
+        )
+        inc, has_model = observations.apply_completions(
+            fin_merge=fin_merge, fin_train=fin_train,
+            serv_model=state.serv_model, serv_mask=state.serv_mask,
+            serv_slot=state.serv_slot, inc=inc, has_model=has_model,
+            obs_birth=obs_birth,
+        )
+        serving = jnp.where(fin_merge | fin_train, -1, serving)
+        served = compute.pick_next_jobs(
+            serving=serving, serv_left=serv_left,
+            serv_model=state.serv_model, serv_mask=state.serv_mask,
+            serv_slot=state.serv_slot, mq_model=mq_model, mq_mask=mq_mask,
+            tq_model=tq_model, tq_slot=tq_slot, T_M=T_M, T_T=T_T,
+        )
+
+        new_state = state.replace(
+            mob=mob, prev_close=close, inc=inc, has_model=has_model,
+            obs_birth=obs_birth, obs_head=obs_head, tq_slot=tq_slot,
+            mq_mask=mq_mask, in_rz_prev=in_rz, **conn, **served,
+        )
+        return (new_state, key), None
+
+    def chunk(carry, chunk_idx):
+        # advance sample_every slots, then materialize one output sample —
+        # the sampled slots are exactly the legacy [s-1::s] subsampling, but
+        # the trace only stacks (and only computes) outputs at sample points.
+        slots = chunk_idx * cfg.sample_every + jnp.arange(cfg.sample_every)
+        (state, key), _ = jax.lax.scan(step, carry, slots)
+        t_now = slots[-1].astype(jnp.float32) * dt
+        out = observations.slot_outputs(
+            inc=state.inc, has_model=state.has_model,
+            obs_birth=state.obs_birth, in_rz=state.in_rz_prev,
+            partner=state.partner, t_now=t_now, tau_l=tau_l,
+        )
+        return (state, key), out
+
+    mob0, key = model.init(key, cfg)
+    in_rz0 = jnp.linalg.norm(mob0.pos - center, axis=-1) <= cfg.rz_radius
+    state0 = init_sim_state(mob0, in_rz0, M=M, cfg=cfg)
+    n_chunks = cfg.n_slots // cfg.sample_every
+    (_, _), outs = jax.lax.scan(
+        chunk, (state0, key), jnp.arange(n_chunks), length=n_chunks
+    )
+    return outs
+
+
+@partial(jax.jit, static_argnames=("cfg", "M"))
+def _run_single(key, p_dyn: dict, cfg: SimConfig, M: int):
+    return _run(key, p_dyn, cfg, M)
+
+
+@partial(jax.jit, static_argnames=("cfg", "M"))
+def _run_batch(keys, p_stack: dict, cfg: SimConfig, M: int):
+    over_seeds = jax.vmap(lambda k, pd: _run(k, pd, cfg, M), in_axes=(0, None))
+    over_scenarios = jax.vmap(over_seeds, in_axes=(None, 0))
+    return over_scenarios(keys, p_stack)
+
+
+def _sample_times(cfg: SimConfig) -> np.ndarray:
+    # the engine emits one sample per sample_every slots, at slot indices
+    # s-1, 2s-1, ... (the legacy [s-1::s] subsampling)
+    s = cfg.sample_every
+    return (np.arange(cfg.n_slots) * cfg.dt)[s - 1:: s]
+
+
+def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
+    """Run the simulator for the FG system ``p`` (uses M, Λ, T_T, T_M, ...)."""
+    M = _check_params([p])
+    outs = _run_single(jax.random.PRNGKey(seed), dynamic_params(p), cfg, M)
+    return SimOutputs(
+        t=_sample_times(cfg),
+        availability=np.asarray(outs["availability"]),
+        busy_frac=np.asarray(outs["busy_frac"]),
+        stored_info=np.asarray(outs["stored"]),
+        obs_birth=np.asarray(outs["obs_birth"]),
+        obs_holders=np.asarray(outs["obs_holders"]),
+        model_holders=np.asarray(outs["model_holders"]),
+        n_in_rz=np.asarray(outs["n_in_rz"]),
+    )
+
+
+def simulate_batch(
+    ps: Sequence[FGParams] | FGParams,
+    cfg: SimConfig,
+    seeds: Sequence[int] = (0,),
+) -> BatchSimOutputs:
+    """One compiled (scenarios x seeds) Monte-Carlo sweep.
+
+    Args:
+      ps:    one ``FGParams`` or a sequence of them (the scenario axis).
+             All scenarios must share the model count ``M``.
+      cfg:   shared simulation geometry/discretization.
+      seeds: PRNG seeds (the replication axis).
+
+    Returns a ``BatchSimOutputs`` with traces shaped (len(ps), len(seeds),
+    n_samples, ...).
+    """
+    if isinstance(ps, FGParams):
+        ps = [ps]
+    M = _check_params(ps)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(list(seeds), jnp.uint32))
+    outs = _run_batch(keys, stack_dynamic_params(ps), cfg, M)
+    pick = lambda name: np.asarray(outs[name])
+    return BatchSimOutputs(
+        t=_sample_times(cfg),
+        availability=pick("availability"),
+        busy_frac=pick("busy_frac"),
+        stored_info=pick("stored"),
+        obs_birth=pick("obs_birth"),
+        obs_holders=pick("obs_holders"),
+        model_holders=pick("model_holders"),
+        n_in_rz=pick("n_in_rz"),
+    )

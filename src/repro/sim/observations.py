@@ -1,0 +1,140 @@
+"""Observation bookkeeping: ring generation, observers, job completions,
+and per-slot trace outputs.
+
+Observations are tracked explicitly: each model has a ring of ``K`` recent
+observations with birth times; each node keeps a boolean incorporation mask
+per (model, obs slot). Merging ORs masks (training-set union); training
+sets a single bit. Per output slot this yields model availability, busy
+fraction, per-node stored information (ages <= tau_l), and per-observation
+holder counts from which o(tau) is estimated post-hoc.
+
+Unlike the legacy simulator, the number of simultaneous observers ``Λ`` is
+a *traced* quantity here (top-Λ selection is expressed as a rank
+threshold), so scenario batches can sweep it without recompilation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["generate_observations", "apply_completions", "slot_outputs",
+           "estimate_o_of_tau"]
+
+
+def generate_observations(
+    *, k_obs, k_who, obs_birth, obs_head, inc, in_rz, lam, Lam, dt, t_now
+):
+    """Draw per-model observation arrivals and pick their Λ observers.
+
+    Returns (obs_birth, obs_head, inc, want_train (N, M), slot_payload
+    (N, M)) where ``want_train`` flags nodes that recorded the new
+    observation (to be enqueued for training on ring slot
+    ``slot_payload``)."""
+    m_count, k_count = obs_birth.shape
+    n = in_rz.shape[0]
+
+    new_obs = jax.random.uniform(k_obs, (m_count,)) < lam * dt
+    slot_of = obs_head
+    obs_birth = jnp.where(
+        new_obs[:, None] & (jnp.arange(k_count)[None, :] == slot_of[:, None]),
+        t_now, obs_birth,
+    )
+    obs_head = jnp.where(new_obs, (obs_head + 1) % k_count, obs_head)
+    # clear incorporation bits of the recycled slot
+    recycled = (
+        new_obs[None, :, None]
+        & (jnp.arange(k_count)[None, None, :] == slot_of[None, :, None])
+    )
+    inc = inc & ~recycled
+
+    # Λ random in-RZ nodes record each new observation. Score nodes i.i.d.
+    # (out-of-RZ nodes pushed to the back) and take the Λ smallest scores —
+    # identical to the legacy top-Λ gather, but Λ stays dynamic (a traced
+    # threshold, not a static slice), so scenario batches can sweep it.
+    # Scores are continuous, so ties have probability zero and
+    # "score <= Λ-th smallest" selects exactly Λ nodes.
+    who_scores = jax.random.uniform(k_who, (m_count, n)) + (~in_rz)[None, :] * 1e3
+    k_idx = jnp.clip(jnp.round(Lam).astype(jnp.int32) - 1, 0, n - 1)
+    kth = jnp.take_along_axis(
+        jnp.sort(who_scores, axis=-1),
+        jnp.full((m_count, 1), k_idx, dtype=jnp.int32), axis=1,
+    )
+    is_obs = (who_scores <= kth) & in_rz[None, :] & new_obs[:, None]
+    want_train = is_obs.T                                          # (N, M)
+    slot_payload = jnp.broadcast_to(slot_of[None, :], (n, m_count))
+    return obs_birth, obs_head, inc, want_train, slot_payload
+
+
+def apply_completions(
+    *, fin_merge, fin_train, serv_model, serv_mask, serv_slot,
+    inc, has_model, obs_birth,
+):
+    """Apply finished merge/train jobs to the incorporation state.
+
+    Merge completion ORs the job's snapshot mask into the node's own mask
+    for the served model (training-set union) and grants the model; train
+    completion sets the single (model, slot) bit — only if the observation
+    slot was not recycled since the job was enqueued."""
+    n = fin_merge.shape[0]
+    m_count, k_count = obs_birth.shape
+
+    onehot_m = jax.nn.one_hot(serv_model, m_count, dtype=bool)      # (N, M)
+    merge_apply = (
+        fin_merge[:, None, None] & onehot_m[:, :, None] & serv_mask[:, None, :]
+    )
+    inc = inc | merge_apply
+    has_model = has_model | (fin_merge[:, None] & onehot_m)
+
+    onehot_k = jax.nn.one_hot(serv_slot, k_count, dtype=bool)       # (N, K)
+    train_apply = (
+        fin_train[:, None, None] & onehot_m[:, :, None] & onehot_k[:, None, :]
+    )
+    # fresh[n, m] = obs_birth[m, serv_slot[n]] > -inf (no (N, M, K) copy)
+    fresh = jnp.take(obs_birth, serv_slot, axis=1).T > -jnp.inf
+    train_apply = train_apply & fresh[:, :, None]
+    inc = inc | train_apply
+    has_model = has_model | (fin_train[:, None] & onehot_m & fresh)
+    return inc, has_model
+
+
+def slot_outputs(*, inc, has_model, obs_birth, in_rz, partner, t_now, tau_l):
+    """Per-slot observables (the quantities Figs. 1-4 are built from)."""
+    age = t_now - obs_birth  # (M, K)
+    live = (obs_birth > -jnp.inf) & (age <= tau_l)
+    stored = jnp.sum(inc & live[None, :, :], axis=(1, 2))  # per node
+    n_rz = jnp.maximum(jnp.sum(in_rz), 1)
+    return dict(
+        availability=jnp.sum(has_model & in_rz[:, None], axis=0) / n_rz,
+        busy_frac=jnp.sum((partner >= 0) & in_rz) / n_rz,
+        stored=jnp.sum(jnp.where(in_rz, stored, 0)) / n_rz,
+        obs_birth=obs_birth,
+        obs_holders=jnp.sum(inc & in_rz[:, None, None], axis=0),
+        model_holders=jnp.sum(has_model & in_rz[:, None], axis=0),
+        n_in_rz=jnp.sum(in_rz),
+    )
+
+
+def estimate_o_of_tau(out, tau_grid: np.ndarray, warmup_frac: float = 0.3):
+    """Empirical o(τ): holders-of-observation / holders-of-model at age τ.
+
+    ``out`` is a ``SimOutputs`` (or any object with ``t``, ``obs_birth``,
+    ``obs_holders``, ``model_holders`` sample traces)."""
+    s0 = int(len(out.t) * warmup_frac)
+    num = np.zeros_like(tau_grid)
+    den = np.zeros_like(tau_grid)
+    dtau = tau_grid[1] - tau_grid[0]
+    for s in range(s0, len(out.t)):
+        age = out.t[s] - out.obs_birth[s]          # (M, K)
+        valid = np.isfinite(age) & (age >= 0)
+        holders = out.model_holders[s]             # (M,)
+        for m in range(age.shape[0]):
+            if holders[m] == 0:
+                continue
+            bins = (age[m][valid[m]] / dtau).astype(int)
+            frac = out.obs_holders[s][m][valid[m]] / holders[m]
+            ok = bins < len(tau_grid)
+            np.add.at(num, bins[ok], frac[ok])
+            np.add.at(den, bins[ok], 1.0)
+    return np.where(den > 0, num / np.maximum(den, 1), np.nan)

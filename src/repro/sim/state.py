@@ -1,0 +1,97 @@
+"""Typed pytree state for the simulation engine.
+
+The legacy simulator carried a raw ``dict`` of arrays through ``lax.scan``;
+here the carry is a frozen dataclass registered as a jax pytree, so field
+access is attribute-checked, the state is self-documenting, and subsystems
+can be given exactly the fields they touch.
+
+``SimState.mob`` holds the mobility-model sub-state (its own registered
+dataclass, defined next to the model in ``repro.sim.mobility``) — the rest
+of the engine only consumes ``mob.pos``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SimState", "init_sim_state", "register_pytree_dataclass"]
+
+
+def register_pytree_dataclass(cls):
+    """Register a frozen dataclass whose fields are all array-like as a
+    jax pytree node (every field is a data field)."""
+    jax.tree_util.register_dataclass(
+        cls, data_fields=[f.name for f in dataclasses.fields(cls)],
+        meta_fields=[],
+    )
+    return cls
+
+
+@register_pytree_dataclass
+@dataclasses.dataclass(frozen=True)
+class SimState:
+    """Full per-slot carry of the Floating Gossip simulator."""
+
+    mob: Any                     # mobility sub-state (has .pos: (N, 2))
+    # --- D2D exchange ---
+    partner: jnp.ndarray         # (N,) partner index, -1 = idle
+    exch_elapsed: jnp.ndarray    # (N,) seconds since connection start
+    exch_total: jnp.ndarray      # (N,) planned t0 + n * T_L
+    snap: jnp.ndarray            # (N, M, K) incorporation masks at connection
+    snap_has: jnp.ndarray        # (N, M) had model at connection
+    order_seed: jnp.ndarray      # (N,) uint32 send-order seed per connection
+    prev_close: jnp.ndarray      # (N, N) contact matrix of the previous slot
+    # --- model / observation ---
+    inc: jnp.ndarray             # (N, M, K) incorporated observation bits
+    has_model: jnp.ndarray       # (N, M)
+    obs_birth: jnp.ndarray       # (M, K) birth time of ring slot (-inf empty)
+    obs_head: jnp.ndarray        # (M,) ring head
+    # --- compute queues ---
+    tq_model: jnp.ndarray        # (N, QT) training queue: model id, -1 free
+    tq_slot: jnp.ndarray         # (N, QT) training queue: observation slot
+    mq_model: jnp.ndarray        # (N, QM) merge queue: model id, -1 free
+    mq_mask: jnp.ndarray         # (N, QM, ceil(K/32)) uint32 packed payload
+                                 # masks (see repro.sim.compute.pack_mask)
+    serving: jnp.ndarray         # (N,) -1 idle, 0 merge, 1 train
+    serv_left: jnp.ndarray       # (N,) remaining service time
+    serv_model: jnp.ndarray      # (N,)
+    serv_mask: jnp.ndarray       # (N, K) merge payload being served
+    serv_slot: jnp.ndarray       # (N,)  train payload being served
+    in_rz_prev: jnp.ndarray      # (N,) was inside the RZ last slot
+
+    def replace(self, **kw) -> "SimState":
+        return dataclasses.replace(self, **kw)
+
+
+def init_sim_state(mob_state, in_rz0: jnp.ndarray, *, M: int, cfg) -> SimState:
+    """Empty protocol state around an initialized mobility state."""
+    n, k = cfg.n_nodes, cfg.k_obs
+    qt, qm = cfg.q_train, cfg.q_merge
+    return SimState(
+        mob=mob_state,
+        partner=jnp.full((n,), -1, dtype=jnp.int32),
+        exch_elapsed=jnp.zeros((n,)),
+        exch_total=jnp.zeros((n,)),
+        snap=jnp.zeros((n, M, k), dtype=bool),
+        snap_has=jnp.zeros((n, M), dtype=bool),
+        order_seed=jnp.zeros((n,), dtype=jnp.uint32),
+        prev_close=jnp.zeros((n, n), dtype=bool),
+        inc=jnp.zeros((n, M, k), dtype=bool),
+        has_model=jnp.zeros((n, M), dtype=bool),
+        obs_birth=jnp.full((M, k), -jnp.inf),
+        obs_head=jnp.zeros((M,), dtype=jnp.int32),
+        tq_model=jnp.full((n, qt), -1, dtype=jnp.int32),
+        tq_slot=jnp.zeros((n, qt), dtype=jnp.int32),
+        mq_model=jnp.full((n, qm), -1, dtype=jnp.int32),
+        mq_mask=jnp.zeros((n, qm, (k + 31) // 32), dtype=jnp.uint32),
+        serving=jnp.full((n,), -1, dtype=jnp.int32),
+        serv_left=jnp.zeros((n,)),
+        serv_model=jnp.zeros((n,), dtype=jnp.int32),
+        serv_mask=jnp.zeros((n, k), dtype=bool),
+        serv_slot=jnp.zeros((n,), dtype=jnp.int32),
+        in_rz_prev=in_rz0,
+    )

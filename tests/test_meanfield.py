@@ -6,7 +6,8 @@ import pytest
 
 from repro.configs.fg_paper import paper_contact_model, paper_params
 from repro.core.meanfield import (
-    merge_arrival_rate, queueing_delays, solve_fixed_point, transfer_stats,
+    merge_arrival_rate, queueing_delays, solve_fixed_point,
+    solve_fixed_point_batch, transfer_stats,
 )
 
 CM = paper_contact_model()
@@ -98,3 +99,23 @@ def test_merge_rate_formula():
     r = merge_arrival_rate(sol.a, sol.b, sol.S, p, CM)
     expect = p.M * float(sol.a) * float(sol.S) * p.w**2 * float(CM.g) * (1 - float(sol.b))**2
     assert abs(float(r) - expect) < 1e-8
+
+
+def test_batched_solver_matches_scalar_pointwise():
+    """solve_fixed_point_batch is the same physics as the scalar path for
+    every solution field (incl. the Lemma 2 rate r and Lemma 3 delays),
+    across a grid that varies lam, M, T_T/T_M and Lam."""
+    ps = [
+        paper_params(lam=0.01, M=1),
+        paper_params(lam=0.05, M=4, Lam=2.0),
+        paper_params(lam=0.5, M=2, T_T=0.5, T_M=0.25),
+        paper_params(lam=5.0, M=1),   # near/inside instability
+    ]
+    batch = solve_fixed_point_batch(ps, CM)
+    for i, p in enumerate(ps):
+        scalar = solve_fixed_point(p, CM)
+        for f in ("a", "b", "S", "T_S", "r", "d_M", "d_I", "stability", "rho"):
+            x = float(getattr(scalar, f))
+            y = float(np.asarray(getattr(batch, f))[i])
+            if np.isfinite(x) or np.isfinite(y):
+                assert abs(x - y) <= 1e-6 * max(1.0, abs(x)), (f, i, x, y)

@@ -3,6 +3,18 @@
 
 Tolerances encode the paper's own finding: mean-field is accurate but
 *slightly optimistic* relative to the finite-N simulation.
+
+The run length matters for the stored-information comparison (see
+``test_stored_info_matches``): observation spreading is merge-gated
+(``adds`` requires the received training set to add information), so the
+o(τ) epidemic only reaches steady state once the observation ring carries
+a steady diversity of live observations — a transient of roughly
+K_OBS / λ = 64 / 0.05 ≈ 1300 s. Sampling earlier (the old 6000-slot run
+measured over [750 s, 1500 s]) under-reports stored information ~3x and is
+a *warmup* artifact, not an accounting bug: at 12000 slots (sampling
+[1500 s, 3000 s]) the simulator reaches ~70% of the mean-field value with
+the o(τ) curve matching in shape, exactly the "mean-field slightly
+optimistic" regime the paper reports.
 """
 
 import numpy as np
@@ -12,7 +24,7 @@ from repro.configs.fg_paper import paper_contact_model, paper_params
 from repro.core.capacity import node_stored_information
 from repro.core.dde import solve_observation_availability
 from repro.core.meanfield import solve_fixed_point
-from repro.core.simulator import SimConfig, simulate
+from repro.sim import SimConfig, simulate
 
 
 @pytest.fixture(scope="module")
@@ -21,7 +33,7 @@ def run():
     cm = paper_contact_model()
     sol = solve_fixed_point(p, cm)
     dde = solve_observation_availability(p, sol)
-    out = simulate(p, SimConfig(n_slots=6000, sample_every=24), seed=0)
+    out = simulate(p, SimConfig(n_slots=12000, sample_every=24), seed=0)
     s0 = len(out.t) // 2
     return p, sol, dde, out, s0
 
@@ -51,8 +63,11 @@ def test_stored_info_matches(run):
     mf = float(node_stored_information(p, sol, dde.integral(p.tau_l)))
     sim = float(out.stored_info[s0:].mean())
     assert sim > 0
-    # short CI run hasn't fully filled the tau_l=300 s window; the 12k-slot
-    # benchmark (fig1) gets within ~30%. Here: same order + optimistic side.
+    # Resolution of the historical failure here: with a 6000-slot run this
+    # compared against the merge-gated o(τ) transient (see module docstring)
+    # and saw mf/sim ≈ 4.3. Past the ring-diversity transient the DDE's
+    # optimism is the finite-N gap the paper describes: mf/sim ≈ 1.4 at
+    # this operating point (mf ≈ 11.4, sim ≈ 7.9).
     assert mf / sim < 2.0
     assert mf >= sim - 0.5
 

@@ -5,7 +5,10 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dependency
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.checkpoint import restore_checkpoint, save_checkpoint
