@@ -15,11 +15,13 @@ import time
 import numpy as np
 
 from repro.configs.fg_paper import paper_contact_model, paper_params
-from repro.core.capacity import learning_capacity
-from repro.core.dde import solve_observation_availability
+from repro.core.capacity import learning_capacity_batch
+from repro.core.dde import solve_observation_availability_batch
 from repro.core.meanfield import solve_fixed_point_batch
 
 from benchmarks.common import emit
+
+import jax.numpy as jnp
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -30,24 +32,24 @@ def run(quick: bool = False) -> list[dict]:
         ("fast_compute", dict(T_T=0.5, T_M=0.25, L=10e3)),
         ("small_capacity", dict(T_T=5.0, T_M=2.5, L=10e3, k=100.0)),
     ]
-    # one vmapped fixed-point solve over the full (variant x lambda) grid;
-    # only the (serial, cheap) DDE remains per stable point
+    # mean-field + DDE + capacity over the full (variant x lambda) grid as
+    # batched programs — no Python loop over grid points
     grid = [(tag, float(lam), kw) for tag, kw in variants for lam in lams]
     ps = [paper_params(lam=lam, M=1, **kw) for _, lam, kw in grid]
     sols = solve_fixed_point_batch(ps, cm)
+    dde = solve_observation_availability_batch(ps, sols, dt=0.1)
+    caps = learning_capacity_batch(
+        ps, sols, dde.integral(jnp.asarray([p.tau_l for p in ps]))
+    )
 
-    rows = []
-    for i, ((tag, lam, _), p) in enumerate(zip(grid, ps)):
-        sol = sols.point(i)
-        if not bool(sol.stable):
-            rows.append(dict(variant=tag, lam=round(lam, 4),
-                             capacity=0.0, stable=False))
-            continue
-        dde = solve_observation_availability(p, sol, dt=0.1)
-        cap = float(learning_capacity(p, sol, dde.integral(p.tau_l)))
-        rows.append(dict(variant=tag, lam=round(lam, 4),
-                         capacity=round(cap, 3), stable=True))
-    return rows
+    stable = np.asarray(sols.stable)
+    caps = np.asarray(caps)
+    return [
+        dict(variant=tag, lam=round(lam, 4),
+             capacity=round(float(caps[i]), 3) if stable[i] else 0.0,
+             stable=bool(stable[i]))
+        for i, (tag, lam, _) in enumerate(grid)
+    ]
 
 
 def main(quick: bool = False) -> None:

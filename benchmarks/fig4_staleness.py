@@ -13,9 +13,9 @@ import time
 import numpy as np
 
 from repro.configs.fg_paper import paper_contact_model, paper_params
-from repro.core.dde import solve_observation_availability
+from repro.core.dde import solve_observation_availability_batch
 from repro.core.meanfield import solve_fixed_point_batch
-from repro.core.staleness import staleness_lower_bound
+from repro.core.staleness import staleness_lower_bound_batch
 
 from benchmarks.common import emit
 
@@ -26,20 +26,20 @@ def run(quick: bool = False) -> list[dict]:
     lams = np.geomspace(0.01, 2.0, 6 if quick else 10)
     grid = [(M, float(lam)) for M in Ms for lam in lams]
     ps = [paper_params(lam=lam, M=M) for M, lam in grid]
-    sols = solve_fixed_point_batch(ps, cm)  # one vmapped (M x lambda) solve
-    rows = []
-    for i, ((M, lam), p) in enumerate(zip(grid, ps)):
-        sol = sols.point(i)
-        if not bool(sol.stable):
-            continue
-        dde = solve_observation_availability(p, sol, dt=0.1)
-        F = float(staleness_lower_bound(p, dde))
-        rows.append(dict(
+    # mean-field + DDE + Theorem-2 bound over the (M x lambda) grid as
+    # batched programs — no Python loop over grid points
+    sols = solve_fixed_point_batch(ps, cm)
+    dde = solve_observation_availability_batch(ps, sols, dt=0.1)
+    F = np.asarray(staleness_lower_bound_batch(ps, dde))
+    stable = np.asarray(sols.stable)
+    return [
+        dict(
             M=M, lam=round(lam, 4),
-            staleness_s=round(F, 2),
-            normalized=round(F * lam, 3),
-        ))
-    return rows
+            staleness_s=round(float(F[i]), 2),
+            normalized=round(float(F[i]) * lam, 3),
+        )
+        for i, (M, lam) in enumerate(grid) if stable[i]
+    ]
 
 
 def main(quick: bool = False) -> None:

@@ -8,10 +8,18 @@ Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig1,...]
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
-from benchmarks import (
+# One XLA CPU device per core (before any jax import): simulate_batch
+# shards the scenario axis across them. An explicit XLA_FLAGS wins.
+os.environ.setdefault(
+    "XLA_FLAGS",
+    f"--xla_force_host_platform_device_count={os.cpu_count() or 1}",
+)
+
+from benchmarks import (  # noqa: E402
     fig1_availability, fig2_capacity, fig3_stability, fig4_staleness,
     gossip_throughput, roofline_table, sim_engine,
 )

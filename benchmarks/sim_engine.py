@@ -6,24 +6,70 @@ Runs the same (scenarios x seeds) sweep twice:
   (jit-cached after the first, so this measures dispatch + per-run device
   work, not recompilation);
 * ``batched`` — one ``simulate_batch`` call, i.e. a single compiled
-  program vmapped over both axes.
+  program vmapped over both axes (sharded over host cores when
+  ``benchmarks/run.py`` exposed one XLA device per core).
 
-Reported throughput is slots*runs/sec; compile time is measured separately
-on a warmup call. The acceptance bar for the engine refactor is batched
->= 4x serial on CPU, which the full sweep (8 scenarios x 16 seeds — a
-paper-figure-sized Monte-Carlo grid) meets; the --quick 4x4 sweep reports
-a smaller factor because a narrow batch amortizes the per-slot fixed cost
-over fewer runs (speedup grows monotonically with batch width).
+Timing is honest: every timed region ends with ``jax.block_until_ready``
+on the raw device outputs, so async dispatch cannot leak device work past
+the timer; host-side numpy conversion stays outside the timed region.
+
+Each row also reports the per-run ``lax.scan`` carry bytes (the quantity
+bit-packing shrinks) and the process peak RSS. Results are written to
+``reports/bench/sim_engine.csv`` and, as JSON,
+``reports/bench/sim_engine.json`` — compare against the checked-in
+``BENCH_sim_engine.json`` baseline (``scripts/ci.sh --bench-smoke`` gates
+on >30% throughput regression).
 """
 
 from __future__ import annotations
 
+import json
+import os
+import resource
+import sys
 import time
 
+import jax
+import jax.numpy as jnp
+
 from repro.configs.fg_paper import paper_params
-from repro.sim import SimConfig, simulate, simulate_batch
+from repro.sim import SimConfig
+from repro.sim.engine import (
+    _check_params, _dispatch_batch, _run_single, dynamic_params,
+    scan_carry_bytes, stack_dynamic_params,
+)
 
 from benchmarks.common import emit
+
+
+def _peak_rss_mb() -> float:
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is kilobytes on Linux but bytes on macOS
+    return rss / (1024.0 * 1024.0) if sys.platform == "darwin" else rss / 1024.0
+
+
+def _carry_bytes_legacy(cfg: SimConfig, M: int) -> int:
+    """Scan-carry bytes of the PR-1 layout (boolean masks, int32 queues)
+    for the same config — the 'before' of the bit-packing optimization.
+
+    Queue deltas come from the *actual* packed dtypes
+    (``repro.sim.state.queue_dtypes``), not a hardcoded width."""
+    from repro.sim.state import queue_dtypes
+
+    n, k, qt, qm = cfg.n_nodes, cfg.k_obs, cfg.q_train, cfg.q_merge
+    kw, nw = (k + 31) // 32, (n + 31) // 32
+    id_dt, slot_dt = queue_dtypes(M, k)
+    id_nbytes = jnp.dtype(id_dt).itemsize
+    slot_nbytes = jnp.dtype(slot_dt).itemsize
+    packed = scan_carry_bytes(cfg, M)
+    return (
+        packed
+        + 2 * (n * M * k - n * M * kw * 4)   # inc, snap: bool -> words
+        + (n * n - n * nw * 4)               # prev_close: bool -> words
+        + (n * k - n * kw * 4)               # serv_mask:  bool -> words
+        + (4 - id_nbytes) * n * (qt + qm)    # tq_model / mq_model
+        + (4 - slot_nbytes) * n * qt         # tq_slot
+    )
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -34,34 +80,50 @@ def run(quick: bool = False) -> list[dict]:
     cfg = SimConfig(n_nodes=120, n_slots=600 if quick else 800,
                     sample_every=16)
     ps = [paper_params(lam=lam, M=1) for lam in lams]
+    M = _check_params(ps)
     n_runs = len(ps) * len(seeds)
     total_slots = n_runs * cfg.n_slots
+    carry_b = scan_carry_bytes(cfg, M)
+    carry_legacy = _carry_bytes_legacy(cfg, M)
+
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(list(seeds), jnp.uint32))
+    p_dyns = [dynamic_params(p) for p in ps]
+    p_stack = stack_dynamic_params(ps)
 
     # ---- serial loop (per-point jit-cached calls) ----
     t0 = time.time()
-    simulate(ps[0], cfg, seed=0)                       # compile
+    jax.block_until_ready(_run_single(keys[0], p_dyns[0], cfg, M))  # compile
     serial_compile = time.time() - t0
     t0 = time.time()
-    for p in ps:
-        for seed in seeds:
-            simulate(p, cfg, seed=seed)
+    for p_dyn in p_dyns:
+        for k in keys:
+            out = _run_single(k, p_dyn, cfg, M)
+    jax.block_until_ready(out)
     serial_s = time.time() - t0
 
-    # ---- one batched program ----
+    # ---- one batched program (sharded across devices when available) ----
     t0 = time.time()
-    simulate_batch(ps, cfg, seeds=seeds)               # compile
+    jax.block_until_ready(_dispatch_batch(keys, p_stack, cfg, M))   # compile
     batch_compile = time.time() - t0
     t0 = time.time()
-    simulate_batch(ps, cfg, seeds=seeds)
+    jax.block_until_ready(_dispatch_batch(keys, p_stack, cfg, M))
     batch_s = time.time() - t0
 
     return [
         dict(mode="serial", runs=n_runs, wall_s=round(serial_s, 3),
              slots_runs_per_s=round(total_slots / serial_s),
-             compile_s=round(serial_compile, 2)),
+             compile_s=round(serial_compile, 2),
+             carry_bytes_per_run=carry_b,
+             carry_bytes_legacy_layout=carry_legacy,
+             n_devices=len(jax.devices()),
+             peak_rss_mb=round(_peak_rss_mb(), 1)),
         dict(mode="batched", runs=n_runs, wall_s=round(batch_s, 3),
              slots_runs_per_s=round(total_slots / batch_s),
-             compile_s=round(batch_compile, 2)),
+             compile_s=round(batch_compile, 2),
+             carry_bytes_per_run=carry_b,
+             carry_bytes_legacy_layout=carry_legacy,
+             n_devices=len(jax.devices()),
+             peak_rss_mb=round(_peak_rss_mb(), 1)),
     ]
 
 
@@ -72,7 +134,23 @@ def main(quick: bool = False) -> None:
     batched = next(r for r in rows if r["mode"] == "batched")
     speedup = serial["wall_s"] / batched["wall_s"]
     emit("sim_engine", rows, t0, f"batched_speedup_x={speedup:.1f}")
+    # carry reduction at figure scale: the masks grow with M, the queues
+    # don't — fig. 4's M=25 is where packing pays the advertised >= 4x
+    fig4_cfg = SimConfig(n_nodes=120, sample_every=16)
+    mem = dict(
+        bench_M1=dict(packed=rows[0]["carry_bytes_per_run"],
+                      legacy=rows[0]["carry_bytes_legacy_layout"]),
+        fig4_M25=dict(packed=scan_carry_bytes(fig4_cfg, 25),
+                      legacy=_carry_bytes_legacy(fig4_cfg, 25)),
+    )
+    for entry in mem.values():
+        entry["reduction_x"] = round(entry["legacy"] / entry["packed"], 2)
+    report_dir = os.path.join(os.path.dirname(__file__), "..", "reports",
+                              "bench")
+    os.makedirs(report_dir, exist_ok=True)
+    with open(os.path.join(report_dir, "sim_engine.json"), "w") as f:
+        json.dump(dict(quick=quick, rows=rows, carry_bytes=mem), f, indent=2)
 
 
 if __name__ == "__main__":
-    main()
+    main(quick="--quick" in sys.argv)

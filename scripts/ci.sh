@@ -3,15 +3,65 @@
 # benchmark (the sim_engine bench doubles as a perf regression canary —
 # its derived line reports the batched-vs-serial speedup).
 #
-# Usage:  bash scripts/ci.sh [extra pytest args...]
+# Usage:  bash scripts/ci.sh [--bench-smoke] [extra pytest args...]
+#
+#   --bench-smoke   additionally gate on batched throughput: run the quick
+#                   sim_engine bench and fail if the same-run batched/serial
+#                   speedup ratio regressed more than 30% against the
+#                   checked-in BENCH_sim_engine.json baseline. The ratio
+#                   scales with the device (core) count, so the gate only
+#                   enforces when the host exposes the same number of XLA
+#                   devices the baseline was recorded on (n_devices in the
+#                   baseline file) — on other hosts it reports and passes,
+#                   asking for a baseline regeneration.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+BENCH_SMOKE=0
+ARGS=()
+for a in "$@"; do
+  if [ "$a" = "--bench-smoke" ]; then BENCH_SMOKE=1; else ARGS+=("$a"); fi
+done
+
 echo "=== tier-1: pytest ==="
-python -m pytest -x -q "$@"
+python -m pytest -x -q "${ARGS[@]+"${ARGS[@]}"}"
 
 echo
 echo "=== smoke: batched simulation engine (quick) ==="
 python -m benchmarks.run --quick --only sim_engine
+
+if [ "$BENCH_SMOKE" = "1" ]; then
+  echo
+  echo "=== bench-smoke: throughput regression gate (>30% fails) ==="
+  python - <<'EOF'
+import json, sys
+
+with open("reports/bench/sim_engine.json") as f:
+    current = json.load(f)
+with open("BENCH_sim_engine.json") as f:
+    base = json.load(f)
+
+batched = next(r for r in current["rows"] if r["mode"] == "batched")
+serial = next(r for r in current["rows"] if r["mode"] == "serial")
+ratio = batched["slots_runs_per_s"] / serial["slots_runs_per_s"]
+ref = base["quick_baseline"]["batched_over_serial_speedup_x"]
+base_ndev = base["quick_baseline"]["n_devices"]
+cur_ndev = batched["n_devices"]
+floor = 0.7 * ref
+print(f"batched/serial speedup: current={ratio:.2f}x baseline={ref}x floor={floor:.2f}x "
+      f"(devices: current={cur_ndev} baseline={base_ndev})")
+print(f"(informational) batched slots_runs_per_s: current={batched['slots_runs_per_s']} "
+      f"baseline-host={base['quick_baseline']['batched']['slots_runs_per_s']}")
+if cur_ndev != base_ndev:
+    print(f"SKIP: host exposes {cur_ndev} XLA devices, baseline was recorded on "
+          f"{base_ndev} — the speedup ratio is not comparable; regenerate "
+          "BENCH_sim_engine.json on this host to re-arm the gate")
+elif ratio < floor:
+    print("FAIL: batched speedup regressed more than 30% vs BENCH_sim_engine.json")
+    sys.exit(1)
+else:
+    print("OK")
+EOF
+fi

@@ -24,6 +24,7 @@ from repro.core.mobility import ContactModel
 __all__ = [
     "node_stored_information",
     "learning_capacity",
+    "learning_capacity_batch",
     "CapacityPoint",
     "solve_learning_capacity",
 ]
@@ -37,12 +38,34 @@ def node_stored_information(
     return p.M * p.w * sol.a * jnp.where(sol.stable, stored_per_model, 0.0)
 
 
+def _capacity_core(*, w, a, stable, L, lam, k, o_integral):
+    """Array-based Definition 9 objective (shared scalar/batch core)."""
+    cap = w * a * jnp.minimum(L / (lam * k), o_integral)
+    return jnp.where(stable, cap, 0.0)
+
+
 def learning_capacity(
     p: FGParams, sol: MeanFieldSolution, o_integral: jnp.ndarray
 ) -> jnp.ndarray:
     """Problem 1 objective: stored information per unit total arrival rate."""
-    cap = p.w * sol.a * jnp.minimum(p.L / (p.lam * p.k), o_integral)
-    return jnp.where(sol.stable, cap, 0.0)
+    return _capacity_core(
+        w=p.w, a=sol.a, stable=sol.stable, L=p.L, lam=p.lam, k=p.k,
+        o_integral=o_integral,
+    )
+
+
+def learning_capacity_batch(
+    ps: list[FGParams], sols: MeanFieldSolution, o_integrals: jnp.ndarray
+) -> jnp.ndarray:
+    """Definition 9 objective for a whole grid: ``sols`` is a batched
+    mean-field solution and ``o_integrals`` the matching (P,) Lemma 4
+    integrals (``DDESolution.integral`` of a batched DDE solve)."""
+    return _capacity_core(
+        w=jnp.asarray([p.w for p in ps]), a=sols.a, stable=sols.stable,
+        L=jnp.asarray([p.L for p in ps]),
+        lam=jnp.asarray([p.lam for p in ps]),
+        k=jnp.asarray([p.k for p in ps]), o_integral=o_integrals,
+    )
 
 
 @dataclasses.dataclass(frozen=True)

@@ -16,6 +16,14 @@ with the paper's initial condition
 The delay term is handled with a fixed-step explicit Euler scheme and a ring
 buffer of ``ceil(d_M / dt)`` past samples, carried through ``lax.scan`` — the
 whole solver is jit-able and differentiable w.r.t. the mean-field inputs.
+
+``solve_observation_availability_batch`` solves a whole scenario grid as
+*one* scanned program: per-point delays differ, so every ring buffer is
+padded to the largest ``ceil(d_M/dt)`` of the batch and each point reads
+its own delayed sample at an offset into the shared buffer; the pre-``d_I``
+zero region and the Eq. (6) plateau are step-index gates. Together with
+``meanfield.solve_fixed_point_batch`` this makes the Fig. 2/4 sweeps
+mean-field + DDE end to end batched, with no Python loop over grid points.
 """
 
 from __future__ import annotations
@@ -25,26 +33,38 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.meanfield import FGParams, MeanFieldSolution
 
-__all__ = ["DDESolution", "solve_observation_availability"]
+__all__ = [
+    "DDESolution",
+    "solve_observation_availability",
+    "solve_observation_availability_batch",
+]
 
 
 @dataclasses.dataclass(frozen=True)
 class DDESolution:
     tau: jnp.ndarray        # (nt,) age grid [s], starting at 0
-    o: jnp.ndarray          # (nt,) observation availability o(τ) in [0, 1]
+    o: jnp.ndarray          # (nt,) — or (P, nt) for a batched solution
     dt: float
 
-    def integral(self, tau_l: float) -> jnp.ndarray:
-        """∫_0^{tau_l} o(τ) dτ — the Lemma 4 incorporation integral."""
-        mask = self.tau <= tau_l
-        return jnp.sum(jnp.where(mask, self.o, 0.0)) * self.dt
+    def integral(self, tau_l) -> jnp.ndarray:
+        """∫_0^{tau_l} o(τ) dτ — the Lemma 4 incorporation integral.
+
+        ``tau_l`` may be a scalar, or a (P,) array against a batched
+        solution (per-point lifetimes)."""
+        mask = self.tau <= jnp.asarray(tau_l)[..., None]
+        return jnp.sum(jnp.where(mask, self.o, 0.0), axis=-1) * self.dt
 
     def incorporation_rate(self, lam: float) -> jnp.ndarray:
         """Theorem 1: R(τ) = λ o(τ)."""
         return lam * self.o
+
+    def point(self, i: int) -> "DDESolution":
+        """Scalar slice of a batched solution."""
+        return DDESolution(tau=self.tau, o=self.o[i], dt=self.dt)
 
 
 @partial(jax.jit, static_argnames=("n_steps", "n_delay"))
@@ -110,4 +130,117 @@ def solve_observation_availability(
         leak = p.alpha * p.w / p.N
         parts.append(_integrate(coeff, sol.a, leak, o0, n_steps, n_delay, dt))
     o = jnp.concatenate(parts)[:n_total]
+    return DDESolution(tau=tau, o=o, dt=dt)
+
+
+@partial(jax.jit, static_argnames=("n_total", "buf_len"))
+def _integrate_batch(
+    coeff, a, leak, o0,          # (P,) per-point mean-field coefficients
+    start, n_pre, n_delay,       # (P,) int32 region boundaries / delays
+    n_total: int,
+    buf_len: int,
+    dt: float,
+):
+    """One scan over the shared τ grid for every point at once.
+
+    Per point, integration step ``k = t - start`` begins once ``t``
+    reaches ``start = n_pre + n_plateau``; the delayed sample o(τ - d_M)
+    is the value written ``n_delay`` steps earlier into a ring buffer
+    padded to the batch-wide ``buf_len`` (positions not yet written hold
+    the plateau ``o0`` — exactly the Eq. (6) history). Points with
+    ``start >= n_total`` (unstable: infinite delays) never activate and
+    emit zero. Bitwise the same trajectory as the scalar ``_integrate``.
+    """
+    p_count = o0.shape[0]
+    lanes = jnp.arange(buf_len)
+    buf0 = jnp.broadcast_to(o0[:, None], (p_count, buf_len))
+
+    def step(carry, t):
+        o, buf, k = carry
+        active = t >= start
+        read = jnp.mod(k - n_delay, buf_len)
+        o_delayed = jnp.sum(
+            jnp.where(lanes[None, :] == read[:, None], buf, 0.0), axis=1
+        )
+        do = coeff * ((1.0 - a) * o + a * o_delayed * (1.0 - o_delayed)) \
+            - leak * o
+        o_new = jnp.clip(o + dt * do, 0.0, 1.0)
+        write = jnp.mod(k, buf_len)
+        buf = jnp.where(
+            (lanes[None, :] == write[:, None]) & active[:, None],
+            o[:, None], buf,
+        )
+        o = jnp.where(active, o_new, o)
+        k = k + active.astype(k.dtype)
+        emit = jnp.where(t < n_pre, 0.0, jnp.where(active, o, o0))
+        return (o, buf, k), emit
+
+    (_, _, _), trace = jax.lax.scan(
+        step, (o0, buf0, jnp.zeros((p_count,), jnp.int32)),
+        jnp.arange(n_total),
+    )
+    return trace.T                                       # (P, n_total)
+
+
+def solve_observation_availability_batch(
+    ps: list[FGParams],
+    sols: MeanFieldSolution,
+    *,
+    dt: float = 0.05,
+    tau_max: float | None = None,
+) -> DDESolution:
+    """Solve Eq. (5)-(6) for a whole scenario grid in one scanned program.
+
+    ``sols`` is the batched output of ``solve_fixed_point_batch`` (leading
+    axis ``len(ps)``). The shared τ grid spans the largest per-point
+    ``tau_max`` (default: each point's lifetime τ_l); each point's region
+    boundaries and delay are its own. Unstable points (infinite ``d_I`` /
+    ``d_M``) yield o ≡ 0. ``DDESolution.o`` carries a leading point axis;
+    each row equals the scalar solver's output on the same grid.
+    """
+    p_count = len(ps)
+    tau_maxes = [
+        float(tau_max if tau_max is not None else p.tau_l) for p in ps
+    ]
+    n_total = max(max(int(round(tm / dt)) + 1, 2) for tm in tau_maxes)
+    tau = jnp.arange(n_total) * dt
+
+    d_I = np.asarray(sols.d_I, dtype=np.float64)
+    d_M = np.asarray(sols.d_M, dtype=np.float64)
+    finite = np.isfinite(d_I) & np.isfinite(d_M)
+    d_I0 = np.where(finite, d_I, 0.0)
+    d_M0 = np.where(finite, d_M, 0.0)
+    # the scalar solver's region arithmetic, vectorized (and pushed past
+    # the grid end for unstable points so they never activate)
+    n_pre = np.minimum(np.round(d_I0 / dt).astype(np.int64), n_total)
+    n_plateau = np.minimum(
+        np.round(d_M0 / dt).astype(np.int64) + 1, n_total - n_pre
+    )
+    n_delay = np.maximum(np.round(d_M0 / dt).astype(np.int64), 1)
+    n_pre = np.where(finite, n_pre, n_total)
+    n_plateau = np.where(finite, n_plateau, 0)
+    start = n_pre + n_plateau
+    # points that never integrate (unstable, or plateau past the grid end)
+    # don't constrain the shared buffer length
+    n_delay = np.where(start < n_total, n_delay, 1)
+    buf_len = int(n_delay.max())
+
+    a = jnp.asarray(sols.a)
+    o0_all = jnp.asarray([p.Lam for p in ps]) / jnp.ceil(
+        jnp.maximum(a * jnp.asarray([p.N for p in ps]), 1.0)
+    )
+    o0_all = jnp.where(jnp.asarray(finite), o0_all, 0.0)
+    w = jnp.asarray([p.w for p in ps])
+    # same multiply order as the scalar solver (b * S * w * w) — the
+    # batched rows stay bitwise equal to per-point solves
+    coeff = jnp.asarray(sols.b) * jnp.asarray(sols.S) * w * w \
+        / jnp.maximum(jnp.asarray(sols.T_S), 1e-12)
+    leak = jnp.asarray([p.alpha * p.w / p.N for p in ps])
+
+    o = _integrate_batch(
+        coeff, a, leak, o0_all.astype(jnp.float32),
+        jnp.asarray(start, jnp.int32), jnp.asarray(n_pre, jnp.int32),
+        jnp.asarray(n_delay, jnp.int32),
+        n_total, buf_len, dt,
+    )
     return DDESolution(tau=tau, o=o, dt=dt)

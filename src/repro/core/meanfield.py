@@ -109,27 +109,34 @@ class MeanFieldSolution:
         })
 
 
-def transfer_stats(
-    a: jnp.ndarray, p: FGParams, contact: ContactModel
+def _transfer_stats_core(
+    a, *, M, w, t0, T_L, t_grid, pdf, weights
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """``S(a)`` and ``T_S(a)`` from Lemma 1.
+    """Array-based Lemma 1 integrand shared by :func:`transfer_stats` and
+    the fixed-point iteration — one implementation, so the S(a) / T_S(a)
+    formulas cannot drift apart.
 
     gamma = 2 M w^2 a is the mean number of instances that the pair should
     exchange; a contact of duration t_c succeeds for a given instance with
     probability min(1, floor((t_c - t0)/T_L) / gamma) and the exchange
     occupies the pair for min(t_c, gamma*T_L + t0).
     """
-    w = p.w
-    gamma = jnp.maximum(2.0 * p.M * w * w * a, _EPS)
-    t = contact.t_grid
-
-    n_transferable = jnp.floor(jnp.maximum(t - p.t0, 0.0) / p.T_L)
+    gamma = jnp.maximum(2.0 * M * w * w * a, _EPS)
+    n_transferable = jnp.floor(jnp.maximum(t_grid - t0, 0.0) / T_L)
     s_integrand = jnp.minimum(1.0, n_transferable / gamma)
-    S = jnp.sum(jnp.where(t > p.t0, s_integrand, 0.0) * contact.pdf * contact.weights)
-
-    ts_integrand = jnp.minimum(t, gamma * p.T_L + p.t0)
-    T_S = jnp.sum(ts_integrand * contact.pdf * contact.weights)
+    S = jnp.sum(jnp.where(t_grid > t0, s_integrand, 0.0) * pdf * weights)
+    T_S = jnp.sum(jnp.minimum(t_grid, gamma * T_L + t0) * pdf * weights)
     return S, T_S
+
+
+def transfer_stats(
+    a: jnp.ndarray, p: FGParams, contact: ContactModel
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``S(a)`` and ``T_S(a)`` from Lemma 1 (see :func:`_transfer_stats_core`)."""
+    return _transfer_stats_core(
+        a, M=p.M, w=p.w, t0=p.t0, T_L=p.T_L,
+        t_grid=contact.t_grid, pdf=contact.pdf, weights=contact.weights,
+    )
 
 
 def _busy_prob(T_S: jnp.ndarray, p: FGParams, contact: ContactModel) -> jnp.ndarray:
@@ -156,13 +163,12 @@ def _fixed_point_iterate(
     )
 
     def stats(a):
-        gamma = jnp.maximum(2.0 * M * w * w * a, _EPS)
-        n_tr = jnp.floor(jnp.maximum(t_grid - t0, 0.0) / T_L)
-        S = jnp.sum(
-            jnp.where(t_grid > t0, jnp.minimum(1.0, n_tr / gamma), 0.0)
-            * pdf * weights
+        # shared Lemma 1 integrand (clamped away from zero: the fixed
+        # point divides by both quantities)
+        S, T_S = _transfer_stats_core(
+            a, M=M, w=w, t0=t0, T_L=T_L,
+            t_grid=t_grid, pdf=pdf, weights=weights,
         )
-        T_S = jnp.sum(jnp.minimum(t_grid, gamma * T_L + t0) * pdf * weights)
         return jnp.maximum(S, _EPS), jnp.maximum(T_S, _EPS)
 
     def body(_, a):

@@ -20,18 +20,17 @@ import jax.numpy as jnp
 from repro.core.dde import DDESolution
 from repro.core.meanfield import FGParams
 
-__all__ = ["staleness_lower_bound", "erlang_weighted_o"]
+__all__ = [
+    "staleness_lower_bound", "staleness_lower_bound_batch", "erlang_weighted_o",
+]
 
 
-def erlang_weighted_o(
-    dde: DDESolution, lam: float, tau_l: float, i_max: int
-) -> jnp.ndarray:
-    """E[o(γ_i) | γ_i <= τ_l] for i = 1..i_max on the DDE τ grid."""
-    tau = dde.tau
+def _erlang_weighted_core(tau, o, dt, lam, tau_l, i_max: int):
+    """E[o(γ_i) | γ_i <= τ_l] for i = 1..i_max on a τ grid (array args)."""
     mask = (tau <= tau_l) & (tau > 0.0)
     log_tau = jnp.where(mask, jnp.log(jnp.where(tau > 0, tau, 1.0)), -jnp.inf)
 
-    idx = jnp.arange(1, i_max + 1, dtype=dde.o.dtype)
+    idx = jnp.arange(1, i_max + 1, dtype=o.dtype)
 
     def one(i):
         # Erlang(i, λ) log-pdf: i logλ + (i-1) logτ - λτ - log((i-1)!)
@@ -40,25 +39,23 @@ def erlang_weighted_o(
             - jax.lax.lgamma(i)
         )
         pdf = jnp.where(mask, jnp.exp(logpdf), 0.0)
-        z = jnp.sum(pdf) * dde.dt  # P(γ_i <= τ_l) on the grid
-        num = jnp.sum(pdf * dde.o) * dde.dt
+        z = jnp.sum(pdf) * dt  # P(γ_i <= τ_l) on the grid
+        num = jnp.sum(pdf * o) * dt
         return jnp.where(z > 1e-30, num / z, 0.0), z
 
-    e_o, z = jax.vmap(one)(idx)
-    return e_o, z
+    return jax.vmap(one)(idx)
 
 
-def staleness_lower_bound(
-    p: FGParams, dde: DDESolution, *, i_max: int | None = None
+def erlang_weighted_o(
+    dde: DDESolution, lam: float, tau_l: float, i_max: int
 ) -> jnp.ndarray:
-    """Theorem 2 lower bound on the mean model staleness F [s]."""
-    if i_max is None:
-        # Erlang(i, λ) mass within τ_l is negligible beyond λτ_l + 10 sqrt(λτ_l).
-        mean_events = p.lam * p.tau_l
-        i_max = int(mean_events + 10.0 * jnp.sqrt(mean_events + 1.0) + 20)
-        i_max = min(max(i_max, 8), 4096)
+    """E[o(γ_i) | γ_i <= τ_l] for i = 1..i_max on the DDE τ grid."""
+    return _erlang_weighted_core(dde.tau, dde.o, dde.dt, lam, tau_l, i_max)
 
-    e_cond, z = erlang_weighted_o(dde, p.lam, p.tau_l, i_max)
+
+def _staleness_core(tau, o, dt, lam, tau_l, i_max: int):
+    """Array-based Theorem 2 bound (vmap-able over grid points)."""
+    e_cond, z = _erlang_weighted_core(tau, o, dt, lam, tau_l, i_max)
     # Unconditional E[o(γ_i)] = E[o|γ_i<=τ_l] P(γ_i<=τ_l): o(τ)≈0 beyond τ_l
     # contributes nothing (observations older than τ_l are discarded).
     e_unc = e_cond * z
@@ -69,6 +66,41 @@ def staleness_lower_bound(
     prod_excl = jnp.concatenate([jnp.ones((1,)), jnp.exp(cumlog[:-1])])
 
     i_idx = jnp.arange(1, i_max + 1, dtype=e_cond.dtype)
-    num = jnp.sum(i_idx * e_cond * prod_excl) / p.lam  # δ = 1/λ
+    num = jnp.sum(i_idx * e_cond * prod_excl) / lam  # δ = 1/λ
     den = jnp.sum(e_unc * prod_excl)
     return jnp.where(den > 1e-30, num / den, jnp.asarray(jnp.inf))
+
+
+def _default_i_max(lam: float, tau_l: float) -> int:
+    # Erlang(i, λ) mass within τ_l is negligible beyond λτ_l + 10 sqrt(λτ_l).
+    mean_events = lam * tau_l
+    i_max = int(mean_events + 10.0 * jnp.sqrt(mean_events + 1.0) + 20)
+    return min(max(i_max, 8), 4096)
+
+
+def staleness_lower_bound(
+    p: FGParams, dde: DDESolution, *, i_max: int | None = None
+) -> jnp.ndarray:
+    """Theorem 2 lower bound on the mean model staleness F [s]."""
+    if i_max is None:
+        i_max = _default_i_max(p.lam, p.tau_l)
+    return _staleness_core(dde.tau, dde.o, dde.dt, p.lam, p.tau_l, i_max)
+
+
+def staleness_lower_bound_batch(
+    ps: list[FGParams], dde: DDESolution, *, i_max: int | None = None
+) -> jnp.ndarray:
+    """Theorem 2 bound for a whole grid against a *batched* DDE solution.
+
+    ``i_max`` is shared across the batch (the largest per-point default);
+    the extra Erlang orders of low-λ points carry negligible mass inside
+    τ_l, so each entry matches the per-point bound. Returns (P,)."""
+    if i_max is None:
+        i_max = max(_default_i_max(p.lam, p.tau_l) for p in ps)
+    lam = jnp.asarray([p.lam for p in ps])
+    tau_l = jnp.asarray([p.tau_l for p in ps])
+    return jax.vmap(
+        lambda o_i, lam_i, tl_i: _staleness_core(
+            dde.tau, o_i, dde.dt, lam_i, tl_i, i_max
+        )
+    )(dde.o, lam, tau_l)

@@ -1,0 +1,204 @@
+"""Tiled Pallas pairwise-contact kernel (plus its ``jnp`` oracle).
+
+The per-slot hot path of the simulator is the O(N²) pairwise sweep:
+squared distances, the transmission-radius threshold, the RZ membership
+mask, and the mutual-best candidate reduction used for pair matching.
+The kernel fuses all four so that neither the (N, N) float32 distance
+matrix nor the (N, N) boolean contact matrix ever materializes in HBM —
+per i-row tile it emits
+
+* ``closew``  — the contact matrix row, **bit-packed** to ``ceil(N/32)``
+  ``uint32`` words (the ``repro.sim.compute.pack_mask`` LSB-first layout,
+  directly usable as the scan-carry ``prev_close``), and
+* ``best_j`` / ``has`` — the row argmin of d² over *candidate* pairs
+  (close ∧ not-previously-close ∧ both-eligible) and whether any
+  candidate exists, from which the caller finishes mutual-best matching
+  in O(N).
+
+All three outputs are discrete (packed bits / index / flag) on purpose:
+XLA contracts ``dx*dx + dy*dy`` into an FMA or not depending on the
+surrounding codegen (tile shape, fusion context), so a raw float d²
+output could differ between lowerings in the last ulp. The *ordering*
+each path derives from its own d² is self-consistent, and the discrete
+outputs are bitwise stable (a flip would need two candidate distances
+within one ulp of each other).
+
+Grid: (n_i,) over row tiles; each step reads the full coordinate row
+(N ≤ a few thousand keeps the (blk_i, N) tile comfortably inside VMEM:
+128 x 4096 f32 = 2 MB).
+
+Dispatch rule (``pairwise_contacts_op``): the compiled kernel runs only
+on TPU backends; everywhere else the bit-identical ``jnp`` reference
+(``pairwise_contacts_ref``) is used — interpret mode is reserved for
+tests, which pin the kernel to the reference bit for bit
+(``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "pairwise_contacts",
+    "pairwise_contacts_ref",
+    "pairwise_contacts_op",
+]
+
+_FAR = 1e9  # padding coordinate: d2 = O(1e18) is finite and > any r_tx²
+
+
+def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2):
+    """Pure-``jnp`` oracle (and the CPU/GPU execution path).
+
+    Only the squared distances, the radius compare, one pack and one
+    unpack touch all N² elements; every mask combination (RZ membership,
+    diagonal, previously-close, eligibility) happens in the 32x-smaller
+    packed word domain. The row argmin is expressed as two plain ``min``
+    reduces (value, then first index attaining it) — ``jnp.argmin``'s
+    variadic reduce lowers to a scalar loop on CPU and was the single
+    most expensive op of the whole simulation step; the two-pass form is
+    bitwise identical (first occurrence of the minimum) and vectorizes.
+
+    Args:
+      pos:    (N, 2) float32 positions.
+      in_rz:  (N,) bool RZ membership.
+      elig:   (N,) bool pairing eligibility (idle, in RZ).
+      prevw:  (N, ceil(N/32)) packed previous-slot contact matrix.
+      r_tx2:  squared transmission radius.
+
+    Returns ``(closew, best_j, has)`` as described in the module
+    docstring.
+    """
+    from repro.sim.compute import pack_mask, packed_onehot, unpack_mask
+
+    n = pos.shape[0]
+    dx = pos[:, None, 0] - pos[None, :, 0]
+    dy = pos[:, None, 1] - pos[None, :, 1]
+    d2 = dx * dx + dy * dy
+    inside = pack_mask(d2 <= r_tx2)                      # (N, NW)
+    rzw = pack_mask(in_rz)                               # (NW,)
+    diagw = packed_onehot(jnp.arange(n), n)              # constant-folded
+    closew = jnp.where(
+        in_rz[:, None], inside & rzw[None, :] & ~diagw, jnp.uint32(0)
+    )
+    eligw = pack_mask(elig)
+    candw = jnp.where(
+        elig[:, None], closew & ~prevw & eligw[None, :], jnp.uint32(0)
+    )
+    # Candidate scores as *bitcast* uint32: for non-negative floats the
+    # integer order equals the float order, d² is a sum of squares (never
+    # negative, never NaN), and the all-ones sentinel plays the role of
+    # +inf — so the two integer min reduces below are bitwise the float
+    # argmin while vectorizing measurably better on CPU.
+    d2b = jax.lax.bitcast_convert_type(d2, jnp.uint32)
+    skey = jnp.where(unpack_mask(candw, n), d2b, jnp.uint32(0xFFFFFFFF))
+    bmin = jnp.min(skey, axis=1)
+    best_j = jnp.min(
+        jnp.where(skey == bmin[:, None], jnp.arange(n, dtype=jnp.int32), n),
+        axis=1,
+    )
+    return closew, best_j, bmin != jnp.uint32(0xFFFFFFFF)
+
+
+def _kernel(xi_ref, yi_ref, x_ref, y_ref, rzi_ref, rz_ref, eligi_ref,
+            elig_ref, prevw_ref, closew_ref, bestj_ref, has_ref, *,
+            r_tx2, blk_i, n_pad):
+    # the pack/unpack helpers are plain jnp ops, valid inside the kernel
+    # at these 32-aligned tile shapes — one word-layout implementation
+    from repro.sim.compute import pack_mask, unpack_mask
+
+    ti = pl.program_id(0)
+
+    xi = xi_ref[0]                                    # (blk_i,)
+    yi = yi_ref[0]
+    dx = xi[:, None] - x_ref[0][None, :]              # (blk_i, n_pad)
+    dy = yi[:, None] - y_ref[0][None, :]
+    d2 = dx * dx + dy * dy
+
+    row = ti * blk_i + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    close = (
+        (d2 <= r_tx2)
+        & (rzi_ref[0] != 0)[:, None] & (rz_ref[0] != 0)[None, :]
+        & (row != col)
+    )
+
+    closew_ref[...] = pack_mask(close)
+    prev = unpack_mask(prevw_ref[...], n_pad)
+    cand = (
+        close & ~prev
+        & (eligi_ref[0] != 0)[:, None] & (elig_ref[0] != 0)[None, :]
+    )
+    scores = jnp.where(cand, d2, jnp.inf)
+    bestj_ref[0] = jnp.argmin(scores, axis=1).astype(jnp.int32)
+    has_ref[0] = jnp.isfinite(jnp.min(scores, axis=1)).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("r_tx2", "blk_i", "interpret")
+)
+def pairwise_contacts(pos, in_rz, elig, prevw, r_tx2, *, blk_i: int = 128,
+                      interpret: bool = False):
+    """Fused Pallas pairwise-contact pass (see module docstring).
+
+    ``N`` is padded to a multiple of ``max(blk_i, 32)`` with far-away
+    coordinates (masked out of every output); ``closew`` pad bits are zero
+    by construction, matching ``pack_mask``.
+    """
+    n = pos.shape[0]
+    blk_i = min(blk_i, -(-n // 32) * 32)
+    blk_i = max(32, (blk_i // 32) * 32)   # keep tiles 32-aligned for packing
+    n_pad = -(-n // blk_i) * blk_i
+    pad = n_pad - n
+
+    x = jnp.pad(pos[:, 0], (0, pad), constant_values=_FAR)[None, :]
+    y = jnp.pad(pos[:, 1], (0, pad), constant_values=_FAR)[None, :]
+    rz = jnp.pad(in_rz.astype(jnp.uint32), (0, pad))[None, :]
+    el = jnp.pad(elig.astype(jnp.uint32), (0, pad))[None, :]
+    nw, nw_pad = prevw.shape[1], n_pad // 32
+    prevw = jnp.pad(prevw, ((0, pad), (0, nw_pad - nw)))
+
+    kernel = functools.partial(
+        _kernel, r_tx2=r_tx2, blk_i=blk_i, n_pad=n_pad,
+    )
+    n_i = n_pad // blk_i
+    closew, best_j, has = pl.pallas_call(
+        kernel,
+        grid=(n_i,),
+        in_specs=[
+            pl.BlockSpec((1, blk_i), lambda i: (0, i)),       # xi
+            pl.BlockSpec((1, blk_i), lambda i: (0, i)),       # yi
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),       # x
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),       # y
+            pl.BlockSpec((1, blk_i), lambda i: (0, i)),       # rz_i
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),       # rz
+            pl.BlockSpec((1, blk_i), lambda i: (0, i)),       # elig_i
+            pl.BlockSpec((1, n_pad), lambda i: (0, 0)),       # elig
+            pl.BlockSpec((blk_i, nw_pad), lambda i: (i, 0)),  # prevw
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_i, nw_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, blk_i), lambda i: (0, i)),
+            pl.BlockSpec((1, blk_i), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, nw_pad), jnp.uint32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, y, x, y, rz, rz, el, el, prevw)
+    return closew[:n, :nw], best_j[0, :n], has[0, :n] != 0
+
+
+def pairwise_contacts_op(pos, in_rz, elig, prevw, r_tx2):
+    """Backend dispatch: compiled Pallas kernel on TPU, ``jnp`` reference
+    elsewhere (interpret mode is a test-only execution path)."""
+    if jax.default_backend() == "tpu":
+        return pairwise_contacts(pos, in_rz, elig, prevw, r_tx2,
+                                 interpret=False)
+    return pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2)

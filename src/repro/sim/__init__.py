@@ -4,14 +4,21 @@ Module map
 ----------
 
 ``state``         Typed pytree carry (``SimState``, registered dataclasses)
-                  replacing the legacy raw-dict scan state.
+                  replacing the legacy raw-dict scan state. Every boolean
+                  mask is bit-packed to uint32 words (LSB-first
+                  ``compute.pack_mask`` layout) and queues use narrow int
+                  dtypes — the scan carry is the engine's memory-traffic
+                  hot spot when batched.
 ``mobility``      Pluggable mobility registry — ``rdm`` (the paper's Random
                   Direction), ``rwp`` (Random Waypoint), ``manhattan``
                   (street grid) — each paired by name with its analytic
                   ``ContactModel`` in ``repro.core.mobility``, plus an
                   empirical contact-rate probe.
 ``contacts``      D2D pairing (mutual-best matching), exchange progression,
-                  and per-instance delivery accounting.
+                  and per-instance delivery accounting. The O(N²) pairwise
+                  sweep dispatches to ``repro.kernels.contacts`` (fused
+                  Pallas kernel on TPU, bit-identical word-domain ``jnp``
+                  oracle elsewhere).
 ``compute``       Merge/train priority queues as vectorized scatter ops —
                   the traced program is independent of the model count M.
 ``observations``  Observation ring, observer selection, job completions,

@@ -7,6 +7,14 @@ them one at a time (``T_L`` each, in a per-connection random order),
 staying busy until the exchange finishes or the contact breaks. Instances
 whose cumulative transfer time fit in the effective contact duration are
 delivered at the moment the exchange ends.
+
+The O(N²) pairwise sweep is delegated to
+``repro.kernels.contacts.pairwise_contacts_op`` (a fused Pallas kernel on
+TPU, its bit-identical ``jnp`` oracle elsewhere), which returns the
+contact matrix already **bit-packed** to ``ceil(N/32)`` uint32 words (the
+scan-carry format) plus the per-row best new-contact candidate; only O(N)
+work — the partner-row proximity test and the mutual-best check — remains
+here. Exchange snapshots (``snap``) travel bit-packed as well.
 """
 
 from __future__ import annotations
@@ -14,13 +22,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.contacts import pairwise_contacts_op
+
 __all__ = [
     "mutual_best_pairs",
     "close_matrix",
+    "pair_still_close",
+    "packed_contacts",
     "advance_exchanges",
     "compute_deliveries",
     "form_connections",
 ]
+
+
+def _mutualize(best: jnp.ndarray, has: jnp.ndarray) -> jnp.ndarray:
+    """Reciprocity check shared by the dense and packed matchers: keep
+    ``best[i]`` only where i and best[i] each have a candidate and point
+    at each other; -1 elsewhere."""
+    n = best.shape[0]
+    mutual = (best[best] == jnp.arange(n)) & has & has[best]
+    return jnp.where(mutual, best, -1)
 
 
 def mutual_best_pairs(scores: jnp.ndarray) -> jnp.ndarray:
@@ -30,11 +51,9 @@ def mutual_best_pairs(scores: jnp.ndarray) -> jnp.ndarray:
     index per node, or -1. Mutual-best matching misses some simultaneous
     contacts, which is rare at the paper's densities (validated vs g).
     """
-    n = scores.shape[0]
     best = jnp.argmin(scores, axis=1)
     has = jnp.isfinite(jnp.min(scores, axis=1))
-    mutual = (best[best] == jnp.arange(n)) & has & has[best]
-    return jnp.where(mutual, best, -1)
+    return _mutualize(best, has)
 
 
 def close_matrix(pos: jnp.ndarray, in_rz: jnp.ndarray, r_tx) -> jnp.ndarray:
@@ -44,7 +63,9 @@ def close_matrix(pos: jnp.ndarray, in_rz: jnp.ndarray, r_tx) -> jnp.ndarray:
     Written as two (N, N) elementwise squares rather than a reduce over a
     materialized (N, N, 2) difference — bitwise the same sum, but it lowers
     to plain vector code (the broadcast-reduce form is the slowest op of
-    the batched step on CPU)."""
+    the batched step on CPU). Kept as the dense-boolean reference (the
+    mobility contact-rate probe uses it); the engine hot path runs the
+    packed :func:`packed_contacts` instead."""
     n = pos.shape[0]
     dx = pos[:, None, 0] - pos[None, :, 0]
     dy = pos[:, None, 1] - pos[None, :, 1]
@@ -53,23 +74,55 @@ def close_matrix(pos: jnp.ndarray, in_rz: jnp.ndarray, r_tx) -> jnp.ndarray:
     return close & ~jnp.eye(n, dtype=bool), d2
 
 
+def pair_still_close(pos, in_rz, partner, r_tx2):
+    """O(N) row of the contact matrix at ``(i, partner[i])``.
+
+    Bitwise the same value as ``close[i, partner[i]]`` of the dense
+    matrix (same subtraction order), without materializing it; only
+    meaningful where ``partner >= 0``."""
+    n = pos.shape[0]
+    pidx = jnp.clip(partner, 0, n - 1)
+    dx = pos[:, 0] - pos[pidx, 0]
+    dy = pos[:, 1] - pos[pidx, 1]
+    d2 = dx * dx + dy * dy
+    return (d2 <= r_tx2) & in_rz & in_rz[pidx] & (jnp.arange(n) != pidx)
+
+
+def packed_contacts(pos, in_rz, elig, prevw, r_tx2):
+    """Fused pairwise pass + mutual-best matching.
+
+    Returns ``(closew, match)``: the bit-packed (N, ceil(N/32)) contact
+    matrix (the next ``prev_close`` carry) and the mutual-best partner
+    index (or -1) among *candidate* pairs — newly in contact (not close in
+    ``prevw``) with both sides eligible. Equivalent to scoring
+    ``where(new_contact & elig_i & elig_j, d2, inf)`` through
+    :func:`mutual_best_pairs`, but the (N, N) score matrix only exists
+    tile-by-tile inside the kernel."""
+    closew, best_j, has = pairwise_contacts_op(
+        pos, in_rz, elig, prevw, r_tx2
+    )
+    return closew, _mutualize(best_j, has)
+
+
 def advance_exchanges(
-    *, partner, exch_elapsed, exch_total, close, dt
+    *, partner, exch_elapsed, exch_total, still_close, dt
 ):
     """Tick ongoing exchanges; classify completion vs contact break.
 
-    Returns (elapsed, done, broke, ending, eff_time, pidx): ``eff_time`` is
-    the portion of the exchange usable for transfers — the full planned
-    duration on completion, the elapsed time minus the broken slot on a
-    break (the broken slot did not finish).
+    ``still_close`` is the per-node proximity bit at ``(i, partner[i])``
+    (:func:`pair_still_close`). Returns (elapsed, done, broke, ending,
+    eff_time, pidx): ``eff_time`` is the portion of the exchange usable
+    for transfers — the full planned duration on completion, the elapsed
+    time minus the broken slot on a break (the broken slot did not
+    finish).
     """
     n = partner.shape[0]
     busy = partner >= 0
     pidx = jnp.clip(partner, 0, n - 1)
-    still_close = close[jnp.arange(n), pidx] & busy
+    still = still_close & busy
     elapsed = jnp.where(busy, exch_elapsed + dt, 0.0)
     done = busy & (elapsed >= exch_total)
-    broke = busy & ~still_close & ~done
+    broke = busy & ~still & ~done
     ending = done | broke
     eff_time = jnp.where(done, exch_total, jnp.maximum(elapsed - dt, 0.0))
     return elapsed, done, broke, ending, eff_time, pidx
@@ -83,7 +136,8 @@ def compute_deliveries(
     The sender transmits its snapshotted instances in a random order seeded
     per connection; an instance is delivered iff its completion offset
     ``t0 + (rank + 1) T_L`` fits within the effective contact time.
-    Returns (delivered (N, M) bool, sender_mask (N, M, K))."""
+    Returns (delivered (N, M) bool, sender_mask (N, M, ceil(K/32)) packed
+    words — ``snap`` is carried bit-packed)."""
     m_count = snap_has.shape[1]
 
     def deliveries(order_seed_i, sender_has, eff):
@@ -101,25 +155,22 @@ def compute_deliveries(
 
 def form_connections(
     *,
-    partner, ending, new_contact, in_rz, d2,
+    partner, match,
     has_model, inc, snap, snap_has,
     exch_elapsed, exch_total, order_seed,
     slot_idx, t0, T_L,
 ):
-    """Free ending pairs, then pair up non-busy newly-in-contact nodes.
+    """Start the exchanges of this slot's mutually-matched pairs.
 
-    The planned exchange covers every non-default instance both sides hold
+    ``partner`` must already have ending pairs released (set to -1) and
+    ``match`` is the :func:`packed_contacts` mutual-best result. The
+    planned exchange covers every non-default instance both sides hold
     (the w = 1 case; the subscription cap W is handled by the caller
     restricting M), so the planned busy time is ``t0 + (n_i + n_j) T_L``.
+    ``inc``/``snap`` are packed word arrays — the snapshot is a plain
+    word copy.
     """
     n = partner.shape[0]
-    partner = jnp.where(ending, -1, partner)
-    busy = partner >= 0
-
-    elig = ~busy & in_rz
-    cand = new_contact & elig[:, None] & elig[None, :]
-    scores = jnp.where(cand, d2, jnp.inf)
-    match = mutual_best_pairs(scores)
     newly = match >= 0
     midx = jnp.clip(match, 0, n - 1)
 

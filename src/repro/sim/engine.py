@@ -19,7 +19,7 @@ legacy Python-over-``M`` enqueue loops are scatter ops in
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Sequence
 
 import jax
@@ -39,6 +39,7 @@ __all__ = [
     "simulate_batch",
     "dynamic_params",
     "stack_dynamic_params",
+    "scan_carry_bytes",
 ]
 
 
@@ -154,11 +155,18 @@ def _check_params(ps: Sequence[FGParams]) -> int:
 
 
 def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
-    """Un-jitted scan driver: returns the per-slot output dict."""
+    """Un-jitted scan driver: returns the per-slot output dict.
+
+    The scan carry is the bit-packed ``SimState`` (see ``repro.sim.state``);
+    all boolean-mask algebra below is uint32 word ops. Per-step constants
+    (RZ center, squared transmission radius) are hoisted here — nothing
+    geometry-shaped is rebuilt inside ``step``.
+    """
     dt = cfg.dt
     t0, T_L, T_T, T_M = (p_dyn[k] for k in ("t0", "T_L", "T_T", "T_M"))
     lam, tau_l, Lam = p_dyn["lam"], p_dyn["tau_l"], p_dyn["Lam"]
     center = jnp.asarray([cfg.area_side / 2.0, cfg.area_side / 2.0])
+    r_tx2 = cfg.r_tx**2
     model = get_mobility(cfg.mobility)
 
     def step(carry, slot_idx):
@@ -172,21 +180,22 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
 
         # ---- RZ churn: leaving the RZ drops everything ----
         left = state.in_rz_prev & ~in_rz
-        inc = jnp.where(left[:, None, None], False, state.inc)
+        inc = jnp.where(left[:, None, None], jnp.uint32(0), state.inc)
         has_model = jnp.where(left[:, None], False, state.has_model)
         tq_model = jnp.where(left[:, None], -1, state.tq_model)
         mq_model = jnp.where(left[:, None], -1, state.mq_model)
         serving = jnp.where(left, -1, state.serving)
         serv_left = jnp.where(left, 0.0, state.serv_left)
 
-        # ---- contact dynamics ----
-        close, d2 = contacts.close_matrix(mob.pos, in_rz, cfg.r_tx)
-        new_contact = close & ~state.prev_close
+        # ---- contact dynamics (O(N) — the O(N²) sweep is fused below) ----
+        still_close = contacts.pair_still_close(
+            mob.pos, in_rz, state.partner, r_tx2
+        )
         elapsed, done, broke, ending, eff_time, pidx = contacts.advance_exchanges(
             partner=state.partner, exch_elapsed=state.exch_elapsed,
-            exch_total=state.exch_total, close=close, dt=dt,
+            exch_total=state.exch_total, still_close=still_close, dt=dt,
         )
-        delivered, sender_mask = contacts.compute_deliveries(
+        delivered, sender_words = contacts.compute_deliveries(
             order_seed=state.order_seed, snap_has=state.snap_has,
             snap=state.snap, pidx=pidx, eff_time=eff_time, ending=ending,
             t0=t0, T_L=T_L,
@@ -197,15 +206,19 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
         # local one — Y of Definition 4). A received instance is NOT
         # used/propagated until merged (paper §III-C) — has_model flips only
         # at merge completion.
-        adds = delivered & jnp.any(sender_mask & ~inc, axis=-1)
+        adds = delivered & compute.packed_any(sender_words & ~inc)
         mq_model, mq_mask = compute.enqueue_ascending(
-            mq_model, adds, (state.mq_mask, compute.pack_mask(sender_mask))
+            mq_model, adds, (state.mq_mask, sender_words)
         )
 
         # ---- release ending pairs, form new connections ----
+        partner = jnp.where(ending, -1, state.partner)
+        elig = (partner < 0) & in_rz
+        closew, match = contacts.packed_contacts(
+            mob.pos, in_rz, elig, state.prev_close, r_tx2
+        )
         conn = contacts.form_connections(
-            partner=state.partner, ending=ending, new_contact=new_contact,
-            in_rz=in_rz, d2=d2, has_model=has_model, inc=inc,
+            partner=partner, match=match, has_model=has_model, inc=inc,
             snap=state.snap, snap_has=state.snap_has,
             exch_elapsed=elapsed, exch_total=state.exch_total,
             order_seed=state.order_seed, slot_idx=slot_idx, t0=t0, T_L=T_L,
@@ -242,7 +255,7 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
         )
 
         new_state = state.replace(
-            mob=mob, prev_close=close, inc=inc, has_model=has_model,
+            mob=mob, prev_close=closew, inc=inc, has_model=has_model,
             obs_birth=obs_birth, obs_head=obs_head, tq_slot=tq_slot,
             mq_mask=mq_mask, in_rz_prev=in_rz, **conn, **served,
         )
@@ -284,6 +297,77 @@ def _run_batch(keys, p_stack: dict, cfg: SimConfig, M: int):
     return over_scenarios(keys, p_stack)
 
 
+@lru_cache(maxsize=None)
+def _sharded_run_batch(cfg: SimConfig, M: int, n_dev: int, p_keys: tuple):
+    """Jitted batch runner with the scenario axis sharded over ``n_dev``
+    devices (SPMD — scenarios are independent, so no communication is
+    introduced). Cached per (cfg, M, device count, param keys); the spec
+    is built from the actual ``p_stack`` keys so it cannot drift from
+    ``dynamic_params``."""
+    from repro.launch.mesh import compat_make_mesh
+
+    mesh = compat_make_mesh((n_dev,), ("scenario",))
+    shard = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("scenario")
+    )
+    replicate = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.jit(
+        lambda keys, p_stack: _run_batch.__wrapped__(keys, p_stack, cfg, M),
+        in_shardings=(replicate, {k: shard for k in p_keys}),
+    )
+
+
+def _dispatch_batch(keys, p_stack: dict, cfg: SimConfig, M: int):
+    """Run the batch sharded across all visible devices (one device when
+    only one is visible).
+
+    Scenario counts that don't divide the device count are padded with
+    repeats of the last scenario (scenarios are independent SPMD rows, so
+    the pad rows change nothing and are sliced off) — sharding engages on
+    any host rather than silently falling back to one device.
+
+    On multi-core CPU hosts, launch with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=$(nproc)`` to
+    expose one XLA device per core (``benchmarks/run.py`` does)."""
+    n_dev = len(jax.devices())
+    n_scen = p_stack["lam"].shape[0]
+    if n_dev <= 1:
+        return _run_batch(keys, p_stack, cfg, M)
+    pad = (-n_scen) % n_dev
+    if pad:
+        p_stack = {
+            k: jnp.concatenate([v, jnp.repeat(v[-1:], pad, axis=0)])
+            for k, v in p_stack.items()
+        }
+    outs = _sharded_run_batch(cfg, M, n_dev, tuple(sorted(p_stack)))(
+        keys, p_stack
+    )
+    if pad:
+        outs = {k: v[:n_scen] for k, v in outs.items()}
+    return outs
+
+
+def scan_carry_bytes(cfg: SimConfig, M: int) -> int:
+    """Bytes of the per-run ``lax.scan`` carry (``SimState`` + PRNG key),
+    computed via ``eval_shape`` — nothing is materialized.
+
+    This is the quantity the bit-packing optimization shrinks; the sim
+    benchmark reports it so BENCH tracks the memory win."""
+    def build():
+        key = jax.random.PRNGKey(0)
+        model = get_mobility(cfg.mobility)
+        center = jnp.asarray([cfg.area_side / 2.0, cfg.area_side / 2.0])
+        mob0, key = model.init(key, cfg)
+        in_rz0 = jnp.linalg.norm(mob0.pos - center, axis=-1) <= cfg.rz_radius
+        return init_sim_state(mob0, in_rz0, M=M, cfg=cfg), key
+
+    shapes = jax.eval_shape(build)
+    return sum(
+        int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(shapes)
+    )
+
+
 def _sample_times(cfg: SimConfig) -> np.ndarray:
     # the engine emits one sample per sample_every slots, at slot indices
     # s-1, 2s-1, ... (the legacy [s-1::s] subsampling)
@@ -322,12 +406,18 @@ def simulate_batch(
 
     Returns a ``BatchSimOutputs`` with traces shaped (len(ps), len(seeds),
     n_samples, ...).
+
+    When more than one XLA device is visible the scenario axis is sharded
+    across all of them (pure SPMD — no communication; counts that don't
+    divide the device count are padded with repeats and sliced back); on
+    CPU hosts expose one device per core with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=$(nproc)``.
     """
     if isinstance(ps, FGParams):
         ps = [ps]
     M = _check_params(ps)
     keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(list(seeds), jnp.uint32))
-    outs = _run_batch(keys, stack_dynamic_params(ps), cfg, M)
+    outs = _dispatch_batch(keys, stack_dynamic_params(ps), cfg, M)
     pick = lambda name: np.asarray(outs[name])
     return BatchSimOutputs(
         t=_sample_times(cfg),

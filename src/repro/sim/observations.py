@@ -2,11 +2,14 @@
 and per-slot trace outputs.
 
 Observations are tracked explicitly: each model has a ring of ``K`` recent
-observations with birth times; each node keeps a boolean incorporation mask
-per (model, obs slot). Merging ORs masks (training-set union); training
-sets a single bit. Per output slot this yields model availability, busy
-fraction, per-node stored information (ages <= tau_l), and per-observation
-holder counts from which o(tau) is estimated post-hoc.
+observations with birth times; each node keeps an incorporation mask per
+(model, obs slot), stored **bit-packed** as ``ceil(K/32)`` uint32 words
+(the ``repro.sim.compute.pack_mask`` layout). Merging ORs word rows
+(training-set union); training ORs a packed one-hot; ring recycling ANDs
+out one; stored-information counts are popcounts. Per output slot this
+yields model availability, busy fraction, per-node stored information
+(ages <= tau_l), and per-observation holder counts from which o(tau) is
+estimated post-hoc.
 
 Unlike the legacy simulator, the number of simultaneous observers ``Λ`` is
 a *traced* quantity here (top-Λ selection is expressed as a rank
@@ -18,6 +21,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.sim.compute import packed_onehot, packed_popcount, pack_mask, unpack_mask
 
 __all__ = ["generate_observations", "apply_completions", "slot_outputs",
            "estimate_o_of_tau"]
@@ -42,12 +47,11 @@ def generate_observations(
         t_now, obs_birth,
     )
     obs_head = jnp.where(new_obs, (obs_head + 1) % k_count, obs_head)
-    # clear incorporation bits of the recycled slot
-    recycled = (
-        new_obs[None, :, None]
-        & (jnp.arange(k_count)[None, None, :] == slot_of[None, :, None])
+    # clear incorporation bits of the recycled slot (packed word and-not)
+    recycled = jnp.where(
+        new_obs[:, None], packed_onehot(slot_of, k_count), jnp.uint32(0)
     )
-    inc = inc & ~recycled
+    inc = inc & ~recycled[None]
 
     # Λ random in-RZ nodes record each new observation. Score nodes i.i.d.
     # (out-of-RZ nodes pushed to the back) and take the Λ smallest scores —
@@ -73,44 +77,55 @@ def apply_completions(
 ):
     """Apply finished merge/train jobs to the incorporation state.
 
-    Merge completion ORs the job's snapshot mask into the node's own mask
-    for the served model (training-set union) and grants the model; train
-    completion sets the single (model, slot) bit — only if the observation
-    slot was not recycled since the job was enqueued."""
-    n = fin_merge.shape[0]
+    Merge completion ORs the job's (packed) snapshot words into the node's
+    own words for the served model (training-set union) and grants the
+    model; train completion ORs the packed one-hot of the (model, slot)
+    bit — only if the observation slot was not recycled since the job was
+    enqueued."""
     m_count, k_count = obs_birth.shape
 
     onehot_m = jax.nn.one_hot(serv_model, m_count, dtype=bool)      # (N, M)
-    merge_apply = (
-        fin_merge[:, None, None] & onehot_m[:, :, None] & serv_mask[:, None, :]
+    inc = inc | jnp.where(
+        (fin_merge[:, None] & onehot_m)[:, :, None],
+        serv_mask[:, None, :], jnp.uint32(0),
     )
-    inc = inc | merge_apply
     has_model = has_model | (fin_merge[:, None] & onehot_m)
 
-    onehot_k = jax.nn.one_hot(serv_slot, k_count, dtype=bool)       # (N, K)
-    train_apply = (
-        fin_train[:, None, None] & onehot_m[:, :, None] & onehot_k[:, None, :]
-    )
     # fresh[n, m] = obs_birth[m, serv_slot[n]] > -inf (no (N, M, K) copy)
     fresh = jnp.take(obs_birth, serv_slot, axis=1).T > -jnp.inf
-    train_apply = train_apply & fresh[:, :, None]
-    inc = inc | train_apply
+    onehot_kw = packed_onehot(serv_slot, k_count)                   # (N, KW)
+    inc = inc | jnp.where(
+        (fin_train[:, None] & onehot_m & fresh)[:, :, None],
+        onehot_kw[:, None, :], jnp.uint32(0),
+    )
     has_model = has_model | (fin_train[:, None] & onehot_m & fresh)
     return inc, has_model
 
 
 def slot_outputs(*, inc, has_model, obs_birth, in_rz, partner, t_now, tau_l):
-    """Per-slot observables (the quantities Figs. 1-4 are built from)."""
+    """Per-slot observables (the quantities Figs. 1-4 are built from).
+
+    ``inc`` arrives bit-packed; stored-information is a popcount and the
+    per-observation holder counts unpack once per *sample* (not per slot),
+    so the packed format never costs the inner loop anything."""
+    k_count = obs_birth.shape[1]
     age = t_now - obs_birth  # (M, K)
     live = (obs_birth > -jnp.inf) & (age <= tau_l)
-    stored = jnp.sum(inc & live[None, :, :], axis=(1, 2))  # per node
+    livew = pack_mask(live)                                   # (M, KW)
+    stored = jnp.sum(packed_popcount(inc & livew[None]), axis=1)  # per node
+    inc_bits = unpack_mask(inc, k_count)                      # (N, M, K)
     n_rz = jnp.maximum(jnp.sum(in_rz), 1)
+    # holder counts as a GEMV over the node axis — counts <= N are exact in
+    # f32, so this is bitwise the boolean-sum result at matmul speed
+    obs_holders = jnp.einsum(
+        "n,nmk->mk", in_rz.astype(jnp.float32), inc_bits.astype(jnp.float32)
+    ).astype(jnp.int32)
     return dict(
         availability=jnp.sum(has_model & in_rz[:, None], axis=0) / n_rz,
         busy_frac=jnp.sum((partner >= 0) & in_rz) / n_rz,
         stored=jnp.sum(jnp.where(in_rz, stored, 0)) / n_rz,
         obs_birth=obs_birth,
-        obs_holders=jnp.sum(inc & in_rz[:, None, None], axis=0),
+        obs_holders=obs_holders,
         model_holders=jnp.sum(has_model & in_rz[:, None], axis=0),
         n_in_rz=jnp.sum(in_rz),
     )

@@ -8,6 +8,14 @@ can be given exactly the fields they touch.
 ``SimState.mob`` holds the mobility-model sub-state (its own registered
 dataclass, defined next to the model in ``repro.sim.mobility``) — the rest
 of the engine only consumes ``mob.pos``.
+
+Every boolean protocol mask in the carry is **bit-packed**: a trailing
+boolean axis of length ``K`` (or ``N`` for the contact matrix) is stored
+as ``ceil(K/32)`` ``uint32`` words in the LSB-first
+``repro.sim.compute.pack_mask`` layout (bit ``j`` of word ``w`` = element
+``32*w + j``). Set operations on these fields are bitwise word ops — see
+the layout notes in ``repro.sim.compute`` — which keeps the scan carry
+roughly 8x smaller than the boolean layout while remaining bit-exact.
 """
 
 from __future__ import annotations
@@ -18,7 +26,20 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SimState", "init_sim_state", "register_pytree_dataclass"]
+__all__ = [
+    "SimState", "init_sim_state", "queue_dtypes", "register_pytree_dataclass",
+]
+
+
+def queue_dtypes(M: int, k_obs: int):
+    """(model-id dtype, ring-slot dtype) at the narrowest safe width.
+
+    Single source of truth for the queue narrowing — ``init_sim_state``
+    allocates with these and the benchmark derives its legacy-layout
+    byte deltas from them."""
+    id_dt = jnp.int8 if M <= 127 else jnp.int32
+    slot_dt = jnp.int16 if k_obs <= 32767 else jnp.int32
+    return id_dt, slot_dt
 
 
 def register_pytree_dataclass(cls):
@@ -41,12 +62,12 @@ class SimState:
     partner: jnp.ndarray         # (N,) partner index, -1 = idle
     exch_elapsed: jnp.ndarray    # (N,) seconds since connection start
     exch_total: jnp.ndarray      # (N,) planned t0 + n * T_L
-    snap: jnp.ndarray            # (N, M, K) incorporation masks at connection
+    snap: jnp.ndarray            # (N, M, ceil(K/32)) packed masks at connection
     snap_has: jnp.ndarray        # (N, M) had model at connection
     order_seed: jnp.ndarray      # (N,) uint32 send-order seed per connection
-    prev_close: jnp.ndarray      # (N, N) contact matrix of the previous slot
+    prev_close: jnp.ndarray      # (N, ceil(N/32)) packed previous-slot contacts
     # --- model / observation ---
-    inc: jnp.ndarray             # (N, M, K) incorporated observation bits
+    inc: jnp.ndarray             # (N, M, ceil(K/32)) packed incorporation bits
     has_model: jnp.ndarray       # (N, M)
     obs_birth: jnp.ndarray       # (M, K) birth time of ring slot (-inf empty)
     obs_head: jnp.ndarray        # (M,) ring head
@@ -59,7 +80,7 @@ class SimState:
     serving: jnp.ndarray         # (N,) -1 idle, 0 merge, 1 train
     serv_left: jnp.ndarray       # (N,) remaining service time
     serv_model: jnp.ndarray      # (N,)
-    serv_mask: jnp.ndarray       # (N, K) merge payload being served
+    serv_mask: jnp.ndarray       # (N, ceil(K/32)) packed served merge payload
     serv_slot: jnp.ndarray       # (N,)  train payload being served
     in_rz_prev: jnp.ndarray      # (N,) was inside the RZ last slot
 
@@ -68,30 +89,36 @@ class SimState:
 
 
 def init_sim_state(mob_state, in_rz0: jnp.ndarray, *, M: int, cfg) -> SimState:
-    """Empty protocol state around an initialized mobility state."""
+    """Empty protocol state around an initialized mobility state.
+
+    Queue entries are stored at the narrowest safe width (model ids int8
+    while M fits, ring slots int16) — with the masks bit-packed the int32
+    queues would otherwise dominate the carry at small M."""
     n, k = cfg.n_nodes, cfg.k_obs
     qt, qm = cfg.q_train, cfg.q_merge
+    kw, nw = (k + 31) // 32, (n + 31) // 32
+    id_dt, slot_dt = queue_dtypes(M, k)
     return SimState(
         mob=mob_state,
         partner=jnp.full((n,), -1, dtype=jnp.int32),
         exch_elapsed=jnp.zeros((n,)),
         exch_total=jnp.zeros((n,)),
-        snap=jnp.zeros((n, M, k), dtype=bool),
+        snap=jnp.zeros((n, M, kw), dtype=jnp.uint32),
         snap_has=jnp.zeros((n, M), dtype=bool),
         order_seed=jnp.zeros((n,), dtype=jnp.uint32),
-        prev_close=jnp.zeros((n, n), dtype=bool),
-        inc=jnp.zeros((n, M, k), dtype=bool),
+        prev_close=jnp.zeros((n, nw), dtype=jnp.uint32),
+        inc=jnp.zeros((n, M, kw), dtype=jnp.uint32),
         has_model=jnp.zeros((n, M), dtype=bool),
         obs_birth=jnp.full((M, k), -jnp.inf),
         obs_head=jnp.zeros((M,), dtype=jnp.int32),
-        tq_model=jnp.full((n, qt), -1, dtype=jnp.int32),
-        tq_slot=jnp.zeros((n, qt), dtype=jnp.int32),
-        mq_model=jnp.full((n, qm), -1, dtype=jnp.int32),
-        mq_mask=jnp.zeros((n, qm, (k + 31) // 32), dtype=jnp.uint32),
+        tq_model=jnp.full((n, qt), -1, dtype=id_dt),
+        tq_slot=jnp.zeros((n, qt), dtype=slot_dt),
+        mq_model=jnp.full((n, qm), -1, dtype=id_dt),
+        mq_mask=jnp.zeros((n, qm, kw), dtype=jnp.uint32),
         serving=jnp.full((n,), -1, dtype=jnp.int32),
         serv_left=jnp.zeros((n,)),
         serv_model=jnp.zeros((n,), dtype=jnp.int32),
-        serv_mask=jnp.zeros((n, k), dtype=bool),
+        serv_mask=jnp.zeros((n, kw), dtype=jnp.uint32),
         serv_slot=jnp.zeros((n,), dtype=jnp.int32),
         in_rz_prev=in_rz0,
     )

@@ -5,11 +5,16 @@ import numpy as np
 
 from repro.configs.fg_paper import paper_contact_model, paper_params
 from repro.core.capacity import (
-    learning_capacity, node_stored_information, solve_learning_capacity,
+    learning_capacity, learning_capacity_batch, node_stored_information,
+    solve_learning_capacity,
 )
-from repro.core.dde import solve_observation_availability
-from repro.core.meanfield import solve_fixed_point
-from repro.core.staleness import staleness_lower_bound
+from repro.core.dde import (
+    solve_observation_availability, solve_observation_availability_batch,
+)
+from repro.core.meanfield import solve_fixed_point, solve_fixed_point_batch
+from repro.core.staleness import (
+    staleness_lower_bound, staleness_lower_bound_batch,
+)
 
 CM = paper_contact_model()
 
@@ -82,6 +87,47 @@ def test_capacity_zero_when_unstable():
     assert float(sol.stability) > 1.0
     cap = learning_capacity(p, sol, jnp.asarray(100.0))
     assert float(cap) == 0.0
+
+
+def test_batched_dde_matches_scalar_rows():
+    """The padded-ring batched Theorem-1 solver reproduces each per-point
+    scalar solve bit for bit — including an unstable point (o = 0) and
+    points whose delays (ring lengths) differ."""
+    grid = [
+        paper_params(lam=0.02, M=1),
+        paper_params(lam=0.1, M=1),
+        paper_params(lam=0.3, M=2, T_T=2.0),
+        paper_params(lam=50.0, M=8),        # unstable
+    ]
+    sols = solve_fixed_point_batch(grid, CM)
+    dde_b = solve_observation_availability_batch(grid, sols, dt=0.1)
+    assert dde_b.o.shape[0] == len(grid)
+    for i, p in enumerate(grid):
+        sol_scalar = solve_fixed_point(p, CM)
+        dde_s = solve_observation_availability(p, sol_scalar, dt=0.1)
+        row = np.asarray(dde_b.point(i).o)[: dde_s.o.shape[0]]
+        np.testing.assert_array_equal(row, np.asarray(dde_s.o),
+                                      err_msg=f"point {i}")
+    # unstable point: never incorporated
+    assert np.all(np.asarray(dde_b.o[-1]) == 0.0)
+
+
+def test_batched_staleness_and_capacity_match_scalar():
+    grid = [paper_params(lam=lam, M=1) for lam in (0.02, 0.05, 0.2)]
+    sols = solve_fixed_point_batch(grid, CM)
+    dde_b = solve_observation_availability_batch(grid, sols, dt=0.1)
+    F_b = np.asarray(staleness_lower_bound_batch(grid, dde_b))
+    caps_b = np.asarray(learning_capacity_batch(
+        grid, sols, dde_b.integral(jnp.asarray([p.tau_l for p in grid]))
+    ))
+    for i, p in enumerate(grid):
+        sol = solve_fixed_point(p, CM)
+        dde = solve_observation_availability(p, sol, dt=0.1)
+        F = float(staleness_lower_bound(p, dde))
+        cap = float(learning_capacity(p, sol, dde.integral(p.tau_l)))
+        # shared i_max / shared τ grid: equal up to float tolerance
+        np.testing.assert_allclose(F_b[i], F, rtol=1e-5)
+        np.testing.assert_allclose(caps_b[i], cap, rtol=1e-5)
 
 
 def test_problem1_sweep_returns_stable_point():

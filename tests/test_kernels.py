@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.contacts import pairwise_contacts, pairwise_contacts_ref
 from repro.kernels.ops import attention_op, gossip_merge_op, ssd_op
 from repro.kernels.ref import attention_ref, gossip_merge_ref, ssd_ref
 
@@ -83,6 +84,54 @@ def test_ssd_kernel_matches_model_path():
     np.testing.assert_allclose(
         np.asarray(y_kernel), np.asarray(y_model), rtol=2e-4, atol=2e-4
     )
+
+
+@pytest.mark.parametrize("n,blk_i", [
+    (33, 128),     # padding path (n < one 32-aligned tile)
+    (120, 64),     # multiple row tiles
+    (128, 128),    # exact tile fit
+    (200, 128),    # the paper's node count
+])
+@pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
+def test_pairwise_contacts_kernel_matches_jnp_bitwise(n, blk_i, density):
+    """The fused Pallas pairwise-contact kernel (interpret mode) must equal
+    the jnp oracle *bit for bit* on every output: packed contact words,
+    best candidate index (first-min tie-break included), candidate flag."""
+    key = jax.random.PRNGKey(n)
+    ks = jax.random.split(key, 4)
+    pos = jax.random.uniform(ks[0], (n, 2), maxval=60.0)
+    in_rz = jax.random.uniform(ks[1], (n,)) < 0.8
+    elig = jax.random.uniform(ks[2], (n,)) < 0.7
+    nw = (n + 31) // 32
+    prev_bool = jax.random.uniform(ks[3], (n, n)) < density
+    prev_bool = prev_bool & prev_bool.T  # symmetric like a contact matrix
+    from repro.sim.compute import pack_mask
+    prevw = pack_mask(prev_bool)
+    assert prevw.shape == (n, nw)
+    r_tx2 = 5.0 ** 2
+
+    ref = pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2)
+    out = pairwise_contacts(pos, in_rz, elig, prevw, r_tx2,
+                            blk_i=blk_i, interpret=True)
+    for got, want, name in zip(out, ref, ("closew", "best_j", "has")):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=name
+        )
+
+
+def test_pairwise_contacts_kernel_no_candidates():
+    """All-ineligible input: packed contacts still exact, no best pair."""
+    n = 48
+    pos = jax.random.uniform(jax.random.PRNGKey(0), (n, 2), maxval=10.0)
+    in_rz = jnp.ones((n,), bool)
+    elig = jnp.zeros((n,), bool)
+    prevw = jnp.zeros((n, (n + 31) // 32), jnp.uint32)
+    closew, best_j, has = pairwise_contacts(
+        pos, in_rz, elig, prevw, 25.0, interpret=True
+    )
+    ref = pairwise_contacts_ref(pos, in_rz, elig, prevw, 25.0)
+    np.testing.assert_array_equal(np.asarray(closew), np.asarray(ref[0]))
+    assert not np.any(np.asarray(has))
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -39,6 +39,27 @@ def test_engine_matches_legacy_step_bitwise():
         )
 
 
+def test_packed_engine_matches_legacy_with_pad_bits():
+    """Same bitwise pin with K not a multiple of 32 (live pad bits in the
+    last mask word) and several models — the packed word algebra must not
+    leak into or read from the pad region."""
+    cfg = SimConfig(n_nodes=40, n_slots=240, sample_every=4, k_obs=40)
+    p = paper_params(lam=0.3, M=2, Lam=2)
+    key = jax.random.PRNGKey(11)
+    legacy = _legacy_run(
+        key, cfg,
+        dict(t0=p.t0, T_L=p.T_L, T_T=p.T_T, T_M=p.T_M, lam=p.lam, tau_l=p.tau_l),
+        int(p.M), int(p.Lam),
+    )
+    new = _run_single(key, dynamic_params(p), cfg, int(p.M))
+    sl = slice(cfg.sample_every - 1, None, cfg.sample_every)
+    for k in ("availability", "busy_frac", "stored", "obs_birth",
+              "obs_holders", "model_holders", "n_in_rz"):
+        np.testing.assert_array_equal(
+            np.asarray(legacy[k])[sl], np.asarray(new[k]), err_msg=k
+        )
+
+
 def test_batch_matches_single_runs():
     ps = [paper_params(lam=0.1, M=1), paper_params(lam=0.3, M=1, T_T=0.5)]
     seeds = [0, 3]
@@ -77,6 +98,50 @@ def test_alternative_mobility_runs_protocol(mobility):
     assert np.all(out.n_in_rz > 0)
     # the protocol actually ran: someone trained/merged a model by the end
     assert out.model_holders[-len(out.t) // 3:].sum() > 0
+
+
+def test_sharded_batch_matches_single_device():
+    """simulate_batch sharded across 2 forced CPU devices — with a scenario
+    count that needs padding (3 % 2 != 0) — equals the single-device run
+    bitwise. Runs in a subprocess because the device count is fixed at jax
+    init."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax
+        import numpy as np
+        from repro.configs.fg_paper import paper_params
+        from repro.sim import SimConfig, simulate_batch
+        from repro.sim.engine import _run_batch, _check_params, \\
+            stack_dynamic_params
+        import jax.numpy as jnp
+
+        assert len(jax.devices()) == 2
+        cfg = SimConfig(n_nodes=40, n_slots=160, sample_every=8)
+        ps = [paper_params(lam=l, M=1) for l in (0.1, 0.2, 0.3)]  # pads to 4
+        batch = simulate_batch(ps, cfg, seeds=[0, 1])             # sharded
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray([0, 1], jnp.uint32))
+        single = _run_batch(keys, stack_dynamic_params(ps), cfg,
+                            _check_params(ps))                    # one device
+        np.testing.assert_array_equal(
+            batch.availability, np.asarray(single["availability"]))
+        np.testing.assert_array_equal(
+            batch.stored_info, np.asarray(single["stored"]))
+        print("SHARDED-OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "SHARDED-OK" in out.stdout, out.stdout + out.stderr
 
 
 def test_lambda_is_sweepable_in_one_batch():

@@ -22,8 +22,8 @@ def test_pack_unpack_roundtrip(k):
 
 
 def test_packed_merge_payload_roundtrips_through_queue():
-    """A mask enqueued packed comes back out of pick_next_jobs unpacked and
-    bit-identical."""
+    """A mask enqueued packed comes back out of pick_next_jobs still packed
+    and bit-identical (the payload never unpacks on the hot path)."""
     k = 64
     mask = (np.arange(k) % 3 == 0)
     queue = jnp.full((1, 2), -1, jnp.int32)
@@ -34,13 +34,15 @@ def test_packed_merge_payload_roundtrips_through_queue():
     out = pick_next_jobs(
         serving=jnp.asarray([-1], jnp.int32), serv_left=jnp.zeros((1,)),
         serv_model=jnp.zeros((1,), jnp.int32),
-        serv_mask=jnp.zeros((1, k), bool),
+        serv_mask=jnp.zeros((1, (k + 31) // 32), jnp.uint32),
         serv_slot=jnp.zeros((1,), jnp.int32),
         mq_model=new_q, mq_mask=new_store,
         tq_model=jnp.full((1, 2), -1, jnp.int32),
         tq_slot=jnp.zeros((1, 2), jnp.int32), T_M=2.5, T_T=5.0,
     )
-    np.testing.assert_array_equal(np.asarray(out["serv_mask"][0]), mask)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_mask(out["serv_mask"], k)[0]), mask
+    )
 
 
 def legacy_enqueue(queue, want, payload_pairs):
@@ -108,7 +110,7 @@ def _mk_server(n, qm=3, qt=3, k=2):
         serving=jnp.full((n,), -1, jnp.int32),
         serv_left=jnp.zeros((n,)),
         serv_model=jnp.zeros((n,), jnp.int32),
-        serv_mask=jnp.zeros((n, k), bool),
+        serv_mask=jnp.zeros((n, (k + 31) // 32), jnp.uint32),
         serv_slot=jnp.zeros((n,), jnp.int32),
         mq_model=jnp.full((n, qm), -1, jnp.int32),
         mq_mask=jnp.zeros((n, qm, (k + 31) // 32), jnp.uint32),  # packed
