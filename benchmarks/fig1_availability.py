@@ -5,9 +5,11 @@ Reproduces the paper's validation claim: the mean-field estimates match the
 simulation across parameter settings, with the mean-field being slightly
 optimistic near the contact-capacity limit (finite-size effect).
 
-The whole (variant x L) grid runs as ONE batched simulation (a single jit
-compilation via ``repro.sim.simulate_batch``) and one vmapped mean-field
-solve, instead of the old serial per-point loop.
+The whole (variant x L) grid runs as ONE sweep on the fleet runner
+(``repro.sim.sweep``) with the post-warmup time-means reduced *on
+device* — the per-slot traces this figure aggregates never cross the
+device/host boundary — plus one vmapped mean-field solve, instead of the
+old serial per-point loop.
 """
 
 from __future__ import annotations
@@ -18,7 +20,7 @@ from repro.configs.fg_paper import paper_contact_model, paper_params
 from repro.core.capacity import node_stored_information
 from repro.core.dde import solve_observation_availability
 from repro.core.meanfield import solve_fixed_point_batch
-from repro.sim import SimConfig, simulate_batch
+from repro.sim import SimConfig, sweep
 
 from benchmarks.common import emit, rel_err
 
@@ -36,8 +38,8 @@ def run(quick: bool = False) -> list[dict]:
           for _, T_T, T_M, L in grid]
 
     sols = solve_fixed_point_batch(ps, cm)
-    batch = simulate_batch(ps, SimConfig(n_slots=n_slots, sample_every=32),
-                           seeds=[1])
+    summ = sweep.run(ps, SimConfig(n_slots=n_slots, sample_every=32),
+                     seeds=[1], reduce="mean", warmup_frac=0.5)
 
     rows = []
     for i, ((tag, T_T, T_M, L), p) in enumerate(zip(grid, ps)):
@@ -45,10 +47,8 @@ def run(quick: bool = False) -> list[dict]:
         sol = sols.point(i)
         dde = solve_observation_availability(p, sol)
         stored_mf = float(node_stored_information(p, sol, dde.integral(p.tau_l)))
-        out = batch.point(i, 0)
-        s0 = len(out.t) // 2
-        a_sim = float(out.availability[s0:].mean())
-        stored_sim = float(out.stored_info[s0:].mean())
+        a_sim = float(summ.stats["availability"][i, 0].mean())
+        stored_sim = float(summ.stats["stored"][i, 0])
         a_mf = float(sols.a[i])
         rows.append(dict(
             variant=tag, L=L,
@@ -58,7 +58,7 @@ def run(quick: bool = False) -> list[dict]:
             stored_sim=round(stored_sim, 2),
             stored_rel_err=round(rel_err(stored_mf, stored_sim), 3),
             busy_meanfield=round(float(sols.b[i]), 4),
-            busy_sim=round(float(out.busy_frac[s0:].mean()), 4),
+            busy_sim=round(float(summ.stats["busy_frac"][i, 0]), 4),
         ))
     return rows
 

@@ -18,10 +18,30 @@ from repro.configs.fg_paper import paper_contact_model, paper_params
 from repro.core.capacity import learning_capacity_batch
 from repro.core.dde import solve_observation_availability_batch
 from repro.core.meanfield import solve_fixed_point_batch
+from repro.sim import SimConfig, sweep
 
-from benchmarks.common import emit
+from benchmarks.common import emit, rel_err
 
 import jax.numpy as jnp
+
+
+def _sim_check(ps_check, sols_a, quick: bool) -> list[dict]:
+    """Monte-Carlo spot-check of the mean-field operating points feeding
+    the capacity curve, on the sweep runner's reduced-output path (only
+    the on-device post-warmup means ever reach the host)."""
+    cfg = SimConfig(n_slots=4000 if quick else 8000, sample_every=32)
+    summ = sweep.run(ps_check, cfg, seeds=[0, 1], reduce="mean",
+                     warmup_frac=0.5)
+    rows = []
+    for i, p in enumerate(ps_check):
+        a_sim = float(summ.stats["availability"][i].mean())
+        rows.append(dict(
+            variant="sim_check", lam=round(float(p.lam), 4),
+            capacity=None, stable=True,
+            a_meanfield=round(float(sols_a[i]), 4), a_sim=round(a_sim, 4),
+            a_rel_err=round(rel_err(float(sols_a[i]), a_sim), 3),
+        ))
+    return rows
 
 
 def run(quick: bool = False) -> list[dict]:
@@ -44,12 +64,25 @@ def run(quick: bool = False) -> list[dict]:
 
     stable = np.asarray(sols.stable)
     caps = np.asarray(caps)
-    return [
+    rows = [
         dict(variant=tag, lam=round(lam, 4),
              capacity=round(float(caps[i]), 3) if stable[i] else 0.0,
-             stable=bool(stable[i]))
+             stable=bool(stable[i]),
+             a_meanfield=None, a_sim=None, a_rel_err=None)
         for i, (tag, lam, _) in enumerate(grid)
     ]
+    # validate two stable base operating points near the paper's λ range
+    # against the simulator (two scenarios x two seeds, one reduced
+    # sweep). Very small λ is excluded: availability is then ~0 and the
+    # relative error degenerates.
+    cand = [i for i, (tag, lam, _) in enumerate(grid)
+            if tag == "base_L10k" and stable[i] and lam >= 0.04]
+    check_idx = sorted(cand, key=lambda i: abs(grid[i][1] - 0.07))[:2]
+    if check_idx:
+        rows += _sim_check([ps[i] for i in check_idx],
+                           [float(np.asarray(sols.a)[i]) for i in check_idx],
+                           quick)
+    return rows
 
 
 def main(quick: bool = False) -> None:
@@ -60,7 +93,10 @@ def main(quick: bool = False) -> None:
         ls = [r["lam"] for r in rows if r["variant"] == tag and r["stable"]]
         return max(ls) if ls else 0.0
     ratio = max_stable("fast_compute") / max(max_stable("base_L10k"), 1e-9)
-    emit("fig2_capacity", rows, t0, f"stability_extension_x={ratio:.1f}")
+    worst = max((r["a_rel_err"] for r in rows if r["variant"] == "sim_check"),
+                default=float("nan"))
+    emit("fig2_capacity", rows, t0,
+         f"stability_extension_x={ratio:.1f} sim_check_worst_a_err={worst}")
 
 
 if __name__ == "__main__":

@@ -12,11 +12,14 @@ import os
 import sys
 import traceback
 
-# One XLA CPU device per core (before any jax import): simulate_batch
-# shards the scenario axis across them. An explicit XLA_FLAGS wins.
+# One XLA CPU device per core (before any jax import): the sweep runner
+# shards the (scenario x seed) work grid across them. The concurrency-
+# optimized scheduler measurably helps the scan-heavy sweep programs on
+# CPU. An explicit XLA_FLAGS wins.
 os.environ.setdefault(
     "XLA_FLAGS",
-    f"--xla_force_host_platform_device_count={os.cpu_count() or 1}",
+    f"--xla_force_host_platform_device_count={os.cpu_count() or 1}"
+    " --xla_cpu_enable_concurrency_optimized_scheduler=true",
 )
 
 from benchmarks import (  # noqa: E402

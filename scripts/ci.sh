@@ -1,19 +1,29 @@
 #!/usr/bin/env bash
 # CI entry point: tier-1 test suite + a fast batched-simulation smoke
 # benchmark (the sim_engine bench doubles as a perf regression canary —
-# its derived line reports the batched-vs-serial speedup).
+# its derived line reports the batched-vs-serial speedup and the
+# host-transfer reduction of the on-device-reduced sweep path).
+#
+# The tier-1 suite runs twice: once with the default single XLA CPU
+# device and once with 2 forced host devices, so both the single-device
+# and the sharded sweep code paths (mesh planning, padding, SPMD
+# dispatch) are exercised in-process — not only inside the dedicated
+# subprocess tests.
 #
 # Usage:  bash scripts/ci.sh [--bench-smoke] [extra pytest args...]
 #
-#   --bench-smoke   additionally gate on batched throughput: run the quick
-#                   sim_engine bench and fail if the same-run batched/serial
-#                   speedup ratio regressed more than 30% against the
-#                   checked-in BENCH_sim_engine.json baseline. The ratio
-#                   scales with the device (core) count, so the gate only
-#                   enforces when the host exposes the same number of XLA
-#                   devices the baseline was recorded on (n_devices in the
-#                   baseline file) — on other hosts it reports and passes,
-#                   asking for a baseline regeneration.
+#   --bench-smoke   additionally gate on sweep performance: run the quick
+#                   sim_engine bench and fail if (a) the same-run
+#                   reduced-sweep/serial speedup ratio regressed more than 30%
+#                   against the checked-in BENCH_sim_engine.json baseline,
+#                   or (b) the reduced-output sweep path ships less than
+#                   10x fewer bytes to the host than the full-trace path.
+#                   The speedup ratio scales with the device (core)
+#                   count, so that gate only enforces when the host
+#                   exposes the same number of XLA devices the baseline
+#                   was recorded on (n_devices in the baseline file) — on
+#                   other hosts it reports and passes, asking for a
+#                   baseline regeneration.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,16 +35,19 @@ for a in "$@"; do
   if [ "$a" = "--bench-smoke" ]; then BENCH_SMOKE=1; else ARGS+=("$a"); fi
 done
 
-echo "=== tier-1: pytest ==="
-python -m pytest -x -q "${ARGS[@]+"${ARGS[@]}"}"
+for DC in 1 2; do
+  echo "=== tier-1: pytest (xla_force_host_platform_device_count=$DC) ==="
+  XLA_FLAGS="--xla_force_host_platform_device_count=$DC" \
+    python -m pytest -x -q "${ARGS[@]+"${ARGS[@]}"}"
+  echo
+done
 
-echo
 echo "=== smoke: batched simulation engine (quick) ==="
 python -m benchmarks.run --quick --only sim_engine
 
 if [ "$BENCH_SMOKE" = "1" ]; then
   echo
-  echo "=== bench-smoke: throughput regression gate (>30% fails) ==="
+  echo "=== bench-smoke: throughput + transfer regression gates ==="
   python - <<'EOF'
 import json, sys
 
@@ -43,25 +56,37 @@ with open("reports/bench/sim_engine.json") as f:
 with open("BENCH_sim_engine.json") as f:
     base = json.load(f)
 
-batched = next(r for r in current["rows"] if r["mode"] == "batched")
-serial = next(r for r in current["rows"] if r["mode"] == "serial")
-ratio = batched["slots_runs_per_s"] / serial["slots_runs_per_s"]
-ref = base["quick_baseline"]["batched_over_serial_speedup_x"]
+rows = {r["mode"]: r for r in current["rows"]}
+serial, batched = rows["serial"], rows["batched"]
+reduced = rows["batched_reduced"]
+
+ratio = reduced["slots_runs_per_s"] / serial["slots_runs_per_s"]
+ref = base["quick_baseline"]["reduced_over_serial_speedup_x"]
 base_ndev = base["quick_baseline"]["n_devices"]
-cur_ndev = batched["n_devices"]
+cur_ndev = reduced["n_devices"]
 floor = 0.7 * ref
-print(f"batched/serial speedup: current={ratio:.2f}x baseline={ref}x floor={floor:.2f}x "
-      f"(devices: current={cur_ndev} baseline={base_ndev})")
-print(f"(informational) batched slots_runs_per_s: current={batched['slots_runs_per_s']} "
+print(f"reduced-sweep/serial speedup: current={ratio:.2f}x baseline={ref}x "
+      f"floor={floor:.2f}x (devices: current={cur_ndev} baseline={base_ndev})")
+print(f"(informational) reduced-sweep slots_runs_per_s: "
+      f"current={reduced['slots_runs_per_s']} "
       f"baseline-host={base['quick_baseline']['batched']['slots_runs_per_s']}")
+
+transfer_x = current["host_transfer"]["reduction_x"]
+print(f"host-transfer reduction (trace vs reduced): {transfer_x}x "
+      f"(gate: >= 10x)")
+fail = False
+if transfer_x < 10:
+    print("FAIL: on-device reduction ships too many bytes to the host")
+    fail = True
 if cur_ndev != base_ndev:
-    print(f"SKIP: host exposes {cur_ndev} XLA devices, baseline was recorded on "
-          f"{base_ndev} — the speedup ratio is not comparable; regenerate "
-          "BENCH_sim_engine.json on this host to re-arm the gate")
+    print(f"SKIP speedup gate: host exposes {cur_ndev} XLA devices, baseline "
+          f"was recorded on {base_ndev} — the ratio is not comparable; "
+          "regenerate BENCH_sim_engine.json on this host to re-arm the gate")
 elif ratio < floor:
-    print("FAIL: batched speedup regressed more than 30% vs BENCH_sim_engine.json")
-    sys.exit(1)
-else:
-    print("OK")
+    print("FAIL: reduced-sweep speedup regressed more than 30% vs "
+          "BENCH_sim_engine.json")
+    fail = True
+sys.exit(1 if fail else 0)
 EOF
+  echo "OK"
 fi

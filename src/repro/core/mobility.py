@@ -66,6 +66,11 @@ __all__ = [
 #: the normalized polynomial approximation f = (36/a^6) x(a-x) y(a-y).
 RWP_DENSITY_FACTOR = 1.44
 
+#: Mean leg length between two uniform waypoints in a unit square
+#: (0.5214 a for side a) — sets the mean move time of an RWP leg, the
+#: denominator of Bettstetter's mobility ratio when pauses are added.
+RWP_MEAN_LEG_FACTOR = 0.5214
+
 
 @dataclasses.dataclass(frozen=True)
 class ContactModel:
@@ -141,17 +146,62 @@ def rwp_contact_model(
     speed: float,
     r_tx: float,
     density: float,
+    pause_s: float = 0.0,
+    area_side: float | None = None,
     nt: int = 512,
     **_geometry,
 ) -> ContactModel:
-    """Analytic contact model for Random Waypoint (no pause) mobility.
+    """Analytic contact model for Random Waypoint mobility, with pause.
 
-    Identical to RDM except for the center-peaked stationary density, which
-    multiplies the mean pairwise meeting rate by ``RWP_DENSITY_FACTOR``.
+    With ``pause_s = 0`` this is RDM with the center-peaked stationary
+    density, which multiplies the mean pairwise meeting rate by
+    ``RWP_DENSITY_FACTOR``.
+
+    With a constant waypoint pause (Bettstetter's pause-time correction),
+    each node moves only a fraction ``p_m = E[T_move] / (E[T_move] +
+    pause_s)`` of the time, where ``E[T_move] = 0.5214 a / v`` is the mean
+    leg duration for uniform waypoints in an ``a x a`` square (so
+    ``area_side`` is required). Contacts decompose over pair states:
+
+    * move-move (weight ``p_m²``): relative speed ``4 v / π``, both
+      densities center-peaked — pair-concentration ``RWP_DENSITY_FACTOR``;
+    * move-pause (weight ``2 p_m (1 - p_m)``): relative speed ``v``
+      (pauses happen *at waypoints*, which are uniform, so the cross
+      pair-concentration factor is exactly 1);
+    * pause-pause: zero relative speed, no new contacts.
+
+    The duration pdf becomes the rate-weighted mixture of the chord law at
+    the two relative speeds. Validated against the simulator's ``rwp``
+    model (``cfg.pause_s``) in ``tests/test_sim_mobility.py``.
     """
-    v_rel = 4.0 * speed / jnp.pi
-    g = RWP_DENSITY_FACTOR * 2.0 * r_tx * v_rel * density
-    centers, widths, mass = _chord_bins(float(v_rel), r_tx, nt)
+    v_mm = 4.0 * speed / jnp.pi
+    if pause_s <= 0.0:
+        g = RWP_DENSITY_FACTOR * 2.0 * r_tx * v_mm * density
+        centers, widths, mass = _chord_bins(float(v_mm), r_tx, nt)
+        return ContactModel(
+            g=jnp.asarray(g), t_grid=centers, pdf=mass / widths,
+            weights=widths,
+        )
+
+    if area_side is None:
+        raise ValueError(
+            "rwp_contact_model with pause_s > 0 needs area_side (the mean "
+            "leg length sets the move/pause duty cycle)"
+        )
+    t_move = RWP_MEAN_LEG_FACTOR * area_side / speed
+    p_m = t_move / (t_move + pause_s)
+    rate_mm = p_m**2 * RWP_DENSITY_FACTOR * 2.0 * r_tx * v_mm * density
+    rate_mp = 2.0 * p_m * (1.0 - p_m) * 2.0 * r_tx * speed * density
+    g = rate_mm + rate_mp
+    w_mm = rate_mm / g
+    # mixture of the two chord laws, both binned on the wider support (the
+    # slower relative speed v < 4v/π yields the longer maximal duration);
+    # each component's CDF masses already sum to 1 there, so the weighted
+    # sum is a normalized mixture
+    t_max = 2.0 * r_tx / speed
+    centers, widths, mass_mm = _chord_bins(float(v_mm), r_tx, nt, t_max=t_max)
+    _, _, mass_mp = _chord_bins(speed, r_tx, nt, t_max=t_max)
+    mass = w_mm * mass_mm + (1.0 - w_mm) * mass_mp
     return ContactModel(
         g=jnp.asarray(g), t_grid=centers, pdf=mass / widths, weights=widths
     )

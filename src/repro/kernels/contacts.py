@@ -27,11 +27,13 @@ Grid: (n_i,) over row tiles; each step reads the full coordinate row
 (N ≤ a few thousand keeps the (blk_i, N) tile comfortably inside VMEM:
 128 x 4096 f32 = 2 MB).
 
-Dispatch rule (``pairwise_contacts_op``): the compiled kernel runs only
-on TPU backends; everywhere else the bit-identical ``jnp`` reference
-(``pairwise_contacts_ref``) is used — interpret mode is reserved for
-tests, which pin the kernel to the reference bit for bit
-(``tests/test_kernels.py``).
+Dispatch rule (``repro.sim.contacts.pairwise_close`` /
+``match_candidates``): the compiled kernel runs only on TPU backends;
+everywhere else the bit-identical ``jnp`` reference runs as two stages —
+``pairwise_close_ref`` (shared per seed in sweep batches) and
+``candidate_best_ref`` (per run). Interpret mode is reserved for tests,
+which pin the kernel to the combined reference
+(``pairwise_contacts_ref``) bit for bit (``tests/test_kernels.py``).
 """
 
 from __future__ import annotations
@@ -40,28 +42,129 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 __all__ = [
     "pairwise_contacts",
     "pairwise_contacts_ref",
-    "pairwise_contacts_op",
+    "pairwise_close_ref",
+    "candidate_best_ref",
 ]
 
 _FAR = 1e9  # padding coordinate: d2 = O(1e18) is finite and > any r_tx²
 
 
+
+
+def pairwise_close_ref(pos, in_rz, r_tx2):
+    """Shared stage of the pairwise sweep: packed contact matrix + d².
+
+    Everything here depends only on positions and RZ membership — in a
+    (scenario x seed) sweep batch these are functions of the per-seed
+    PRNG chain alone, so ``vmap`` computes this stage once per seed and
+    broadcasts it across the scenario axis. Returns ``(closew, d2b3)``:
+    the bit-packed contact matrix and the padded bitcast-d² context
+    ``(N, ceil(N/32), 32)`` consumed by :func:`candidate_best_ref`.
+
+    ``closew[i] >> j & 1`` is bitwise ``close[i, j]`` of the dense matrix
+    (same subtraction order), so the engine extracts partner-proximity
+    bits from it instead of recomputing pair distances.
+    """
+    from repro.sim.compute import pack_mask, packed_onehot, shared_barrier
+
+    n = pos.shape[0]
+    nw = (n + 31) // 32
+    dx = pos[:, None, 0] - pos[None, :, 0]
+    dy = pos[:, None, 1] - pos[None, :, 1]
+    d2 = shared_barrier(dx * dx + dy * dy)
+    inside = pack_mask(d2 <= r_tx2)                      # (N, NW)
+    rzw = pack_mask(in_rz)                               # (NW,)
+    diagw = packed_onehot(jnp.arange(n), n)              # constant-folded
+    closew = jnp.where(
+        in_rz[:, None], inside & rzw[None, :] & ~diagw, jnp.uint32(0)
+    )
+    d2b = jax.lax.bitcast_convert_type(d2, jnp.uint32)
+    d2b3 = shared_barrier(jnp.pad(
+        d2b, ((0, 0), (0, nw * 32 - n)),
+        constant_values=np.uint32(0xFFFFFFFF),
+    ).reshape(n, nw, 32))
+    return closew, d2b3
+
+
+def candidate_best_ref(d2b3, closew, prevw, elig):
+    """Per-run stage: best new-contact candidate per row.
+
+    ``candw = closew & ~prevw & elig_i & elig_j`` in the packed word
+    domain, then a hierarchical masked argmin over the d² context (see
+    :func:`pairwise_contacts_ref`). Only this stage depends on protocol
+    state, so in sweep batches it is the only part paid per (scenario,
+    seed) work item.
+    """
+    from repro.sim.compute import pack_mask
+
+    eligw = pack_mask(elig)
+    candw = jnp.where(
+        elig[:, None], closew & ~prevw & eligw[None, :], jnp.uint32(0)
+    )
+    # Candidate scores as *bitcast* uint32: for non-negative floats the
+    # integer order equals the float order, d² is a sum of squares (never
+    # negative, never NaN), and the all-ones sentinel plays the role of
+    # +inf — so integer min reduces are bitwise the float argmin while
+    # vectorizing measurably better on CPU.
+    #
+    # The argmin is *hierarchical* to make the batched sweep cheap: one
+    # full-width pass reduces each 32-column word block to its masked
+    # minimum (candidate bits expand arithmetically: ``bit - 1`` is 0x0 for
+    # a set bit and 0xFFFFFFFF for a clear one, OR-ing the sentinel in),
+    # and the winning index is then recovered from the single winning word
+    # — first word whose min attains the row min, first lane in that word
+    # attaining it — via an O(N·32) block gather. That visits the (N, N)
+    # domain ONCE instead of twice (min + masked index-min), which is the
+    # difference that matters when a sweep batches this per run while d²
+    # stays shared across the scenario axis. First-minimum tie-breaking is
+    # identical: the first j attaining the global min lives in the first
+    # word whose masked min equals it.
+    ff = jnp.uint32(0xFFFFFFFF)
+    nw = closew.shape[1]
+    lanes = jnp.arange(32, dtype=jnp.uint32)
+    masked = d2b3 | (((candw[:, :, None] >> lanes) & jnp.uint32(1))
+                     - jnp.uint32(1))
+    wmin = jnp.min(masked, axis=-1)                      # (N, NW)
+    bmin = jnp.min(wmin, axis=-1)                        # (N,)
+    has = bmin != ff
+    wstar = jnp.clip(
+        jnp.min(
+            jnp.where(wmin == bmin[:, None],
+                      jnp.arange(nw, dtype=jnp.int32), nw),
+            axis=-1,
+        ),
+        0, nw - 1,
+    )
+    # rebuild the winning 32-lane block from its small pieces (gathering
+    # ``masked`` itself would force materializing the full (N, N) buffer)
+    d2_blk = jnp.take_along_axis(d2b3, wstar[:, None, None], axis=1)[:, 0]
+    cw_blk = jnp.take_along_axis(candw, wstar[:, None], axis=1)
+    blk = d2_blk | (((cw_blk >> lanes) & jnp.uint32(1)) - jnp.uint32(1))
+    lane = jnp.min(
+        jnp.where(blk == bmin[:, None], jnp.arange(32, dtype=jnp.int32), 32),
+        axis=-1,
+    )
+    # no-candidate rows report index 0 (the historical all-sentinel argmin),
+    # matching the Pallas kernel bit for bit on every output
+    return jnp.where(has, wstar * 32 + lane, 0), has
+
+
 def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2):
     """Pure-``jnp`` oracle (and the CPU/GPU execution path).
 
-    Only the squared distances, the radius compare, one pack and one
-    unpack touch all N² elements; every mask combination (RZ membership,
-    diagonal, previously-close, eligibility) happens in the 32x-smaller
-    packed word domain. The row argmin is expressed as two plain ``min``
-    reduces (value, then first index attaining it) — ``jnp.argmin``'s
-    variadic reduce lowers to a scalar loop on CPU and was the single
-    most expensive op of the whole simulation step; the two-pass form is
-    bitwise identical (first occurrence of the minimum) and vectorizes.
+    Composition of the two stages: the shared pairwise sweep
+    (:func:`pairwise_close_ref` — d², radius compare, packed contact
+    matrix; every mask combination happens in the 32x-smaller packed word
+    domain) and the per-run candidate argmin
+    (:func:`candidate_best_ref`). The engine calls the stages separately
+    so sweep batches pay the first one once per seed; this combined form
+    is the interface the Pallas kernel is pinned against bit for bit.
 
     Args:
       pos:    (N, 2) float32 positions.
@@ -73,35 +176,9 @@ def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2):
     Returns ``(closew, best_j, has)`` as described in the module
     docstring.
     """
-    from repro.sim.compute import pack_mask, packed_onehot, unpack_mask
-
-    n = pos.shape[0]
-    dx = pos[:, None, 0] - pos[None, :, 0]
-    dy = pos[:, None, 1] - pos[None, :, 1]
-    d2 = dx * dx + dy * dy
-    inside = pack_mask(d2 <= r_tx2)                      # (N, NW)
-    rzw = pack_mask(in_rz)                               # (NW,)
-    diagw = packed_onehot(jnp.arange(n), n)              # constant-folded
-    closew = jnp.where(
-        in_rz[:, None], inside & rzw[None, :] & ~diagw, jnp.uint32(0)
-    )
-    eligw = pack_mask(elig)
-    candw = jnp.where(
-        elig[:, None], closew & ~prevw & eligw[None, :], jnp.uint32(0)
-    )
-    # Candidate scores as *bitcast* uint32: for non-negative floats the
-    # integer order equals the float order, d² is a sum of squares (never
-    # negative, never NaN), and the all-ones sentinel plays the role of
-    # +inf — so the two integer min reduces below are bitwise the float
-    # argmin while vectorizing measurably better on CPU.
-    d2b = jax.lax.bitcast_convert_type(d2, jnp.uint32)
-    skey = jnp.where(unpack_mask(candw, n), d2b, jnp.uint32(0xFFFFFFFF))
-    bmin = jnp.min(skey, axis=1)
-    best_j = jnp.min(
-        jnp.where(skey == bmin[:, None], jnp.arange(n, dtype=jnp.int32), n),
-        axis=1,
-    )
-    return closew, best_j, bmin != jnp.uint32(0xFFFFFFFF)
+    closew, d2b3 = pairwise_close_ref(pos, in_rz, r_tx2)
+    best_j, has = candidate_best_ref(d2b3, closew, prevw, elig)
+    return closew, best_j, has
 
 
 def _kernel(xi_ref, yi_ref, x_ref, y_ref, rzi_ref, rz_ref, eligi_ref,
@@ -194,11 +271,3 @@ def pairwise_contacts(pos, in_rz, elig, prevw, r_tx2, *, blk_i: int = 128,
     )(x, y, x, y, rz, rz, el, el, prevw)
     return closew[:n, :nw], best_j[0, :n], has[0, :n] != 0
 
-
-def pairwise_contacts_op(pos, in_rz, elig, prevw, r_tx2):
-    """Backend dispatch: compiled Pallas kernel on TPU, ``jnp`` reference
-    elsewhere (interpret mode is a test-only execution path)."""
-    if jax.default_backend() == "tpu":
-        return pairwise_contacts(pos, in_rz, elig, prevw, r_tx2,
-                                 interpret=False)
-    return pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2)

@@ -31,8 +31,8 @@ import jax
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = [
-    "ShardingRules", "DEFAULT_RULES", "GOSSIP_RULES", "spec_for", "tree_specs",
-    "Lx",
+    "ShardingRules", "DEFAULT_RULES", "GOSSIP_RULES", "SWEEP_RULES",
+    "spec_for", "tree_specs", "Lx",
 ]
 
 Axis = str | tuple[str, ...] | None
@@ -88,6 +88,16 @@ DEFAULT_RULES = ShardingRules(rules=(
 
 # Gossip mode: the replica axis spans (pod, data); everything else identical.
 GOSSIP_RULES = DEFAULT_RULES
+
+# Monte-Carlo sweep meshes (repro.sim.sweep): the scenario and seed axes of
+# a (scenarios x seeds) grid each map to their own mesh axis; either mesh
+# axis may have size 1, and spec_for's divisibility fallback applies as for
+# any other logical axis (the sweep planner pads both axes so the fallback
+# never fires in practice — the rule keeps introspection uniform).
+SWEEP_RULES = ShardingRules(rules=(
+    ("sweep_scenario", "sweep_scenario"),
+    ("sweep_seed", "sweep_seed"),
+))
 
 _FALLBACKS: list[tuple[str, str, int, int]] = []  # (logical, axis, dim, size)
 

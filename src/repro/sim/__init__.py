@@ -25,6 +25,13 @@ Module map
                   per-slot trace outputs, and the post-hoc o(τ) estimator.
 ``engine``        The ``lax.scan`` driver: ``simulate`` (single run) and
                   ``simulate_batch`` (seeds x scenarios in one jit).
+``sweep``         Fleet-scale sweep execution: the flattened, padded
+                  (scenario x seed) work axis sharded over a 2-D device
+                  mesh, streaming chunked dispatch with donated buffers,
+                  and on-device sweep reductions (mean / final /
+                  quantiles) that cut host transfers >100x.
+                  ``simulate_batch`` is a thin wrapper over
+                  ``sweep.run(..., reduce="trace")``.
 
 ``repro.core.simulator`` remains a thin backward-compatible shim over this
 package (and keeps the legacy monolithic step as the equivalence-test
@@ -46,13 +53,19 @@ from repro.sim.mobility import (
     register_mobility,
 )
 from repro.sim.observations import estimate_o_of_tau
+from repro.sim.sweep import SweepPlan, SweepSummary, plan_sweep
+from repro.sim import sweep
 
 __all__ = [
     "BatchSimOutputs",
     "SimConfig",
     "SimOutputs",
+    "SweepPlan",
+    "SweepSummary",
+    "plan_sweep",
     "simulate",
     "simulate_batch",
+    "sweep",
     "MOBILITY_MODELS",
     "MobilityModel",
     "get_mobility",

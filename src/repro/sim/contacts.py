@@ -8,13 +8,14 @@ staying busy until the exchange finishes or the contact breaks. Instances
 whose cumulative transfer time fit in the effective contact duration are
 delivered at the moment the exchange ends.
 
-The O(N²) pairwise sweep is delegated to
-``repro.kernels.contacts.pairwise_contacts_op`` (a fused Pallas kernel on
-TPU, its bit-identical ``jnp`` oracle elsewhere), which returns the
-contact matrix already **bit-packed** to ``ceil(N/32)`` uint32 words (the
-scan-carry format) plus the per-row best new-contact candidate; only O(N)
-work — the partner-row proximity test and the mutual-best check — remains
-here. Exchange snapshots (``snap``) travel bit-packed as well.
+The O(N²) pairwise sweep is delegated to ``repro.kernels.contacts`` and
+runs as two stages — :func:`pairwise_close` (positions/RZ only: the
+**bit-packed** ``ceil(N/32)``-word contact matrix plus the d² context;
+shared per seed in sweep batches) and :func:`match_candidates` (the
+per-run best new-contact candidate + mutual-best matching). On TPU the
+fused Pallas kernel runs the whole sweep in the second stage instead.
+Only O(N) work — the partner-proximity bit and the mutual-best check —
+remains here. Exchange snapshots (``snap``) travel bit-packed as well.
 """
 
 from __future__ import annotations
@@ -22,13 +23,15 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.contacts import pairwise_contacts_op
+from repro.kernels.contacts import candidate_best_ref, pairwise_close_ref
 
 __all__ = [
     "mutual_best_pairs",
     "close_matrix",
     "pair_still_close",
-    "packed_contacts",
+    "pairwise_close",
+    "match_candidates",
+    "partner_close_bit",
     "advance_exchanges",
     "compute_deliveries",
     "form_connections",
@@ -65,7 +68,8 @@ def close_matrix(pos: jnp.ndarray, in_rz: jnp.ndarray, r_tx) -> jnp.ndarray:
     to plain vector code (the broadcast-reduce form is the slowest op of
     the batched step on CPU). Kept as the dense-boolean reference (the
     mobility contact-rate probe uses it); the engine hot path runs the
-    packed :func:`packed_contacts` instead."""
+    packed :func:`pairwise_close` / :func:`match_candidates` stages
+    instead."""
     n = pos.shape[0]
     dx = pos[:, None, 0] - pos[None, :, 0]
     dy = pos[:, None, 1] - pos[None, :, 1]
@@ -88,20 +92,59 @@ def pair_still_close(pos, in_rz, partner, r_tx2):
     return (d2 <= r_tx2) & in_rz & in_rz[pidx] & (jnp.arange(n) != pidx)
 
 
-def packed_contacts(pos, in_rz, elig, prevw, r_tx2):
-    """Fused pairwise pass + mutual-best matching.
+def pairwise_close(pos, in_rz, r_tx2):
+    """Shared stage of the per-slot pairwise sweep: ``(closew, d2ctx)``.
 
-    Returns ``(closew, match)``: the bit-packed (N, ceil(N/32)) contact
-    matrix (the next ``prev_close`` carry) and the mutual-best partner
-    index (or -1) among *candidate* pairs — newly in contact (not close in
-    ``prevw``) with both sides eligible. Equivalent to scoring
+    ``closew`` is the packed contact matrix of this slot (the next
+    ``prev_close`` carry); ``d2ctx`` is the backend context
+    :func:`match_candidates` finishes the candidate search from. Both
+    depend only on positions and RZ membership — in sweep batches they
+    are computed once per seed and broadcast over scenarios. On TPU the
+    kernel fuses the whole sweep instead: the context carries the raw
+    inputs and :func:`match_candidates` invokes the fused kernel.
+    """
+    if jax.default_backend() == "tpu":
+        return None, (pos, in_rz, r_tx2)
+    closew, d2b3 = pairwise_close_ref(pos, in_rz, r_tx2)
+    return closew, (closew, d2b3)
+
+
+def match_candidates(d2ctx, prevw, elig):
+    """Per-run stage: mutual-best matching among new eligible contacts.
+
+    Returns ``(closew, match)``: the bit-packed contact matrix (the next
+    ``prev_close`` carry) and the mutual-best partner index (or -1) among
+    *candidate* pairs — newly in contact (not close in ``prevw``) with
+    both sides eligible. Equivalent to scoring
     ``where(new_contact & elig_i & elig_j, d2, inf)`` through
-    :func:`mutual_best_pairs`, but the (N, N) score matrix only exists
-    tile-by-tile inside the kernel."""
-    closew, best_j, has = pairwise_contacts_op(
-        pos, in_rz, elig, prevw, r_tx2
-    )
+    :func:`mutual_best_pairs` without materializing the (N, N) score
+    matrix — bitwise so, pinned by the engine equivalence tests."""
+    if jax.default_backend() == "tpu":
+        pos, in_rz, r_tx2 = d2ctx
+        from repro.kernels.contacts import pairwise_contacts
+
+        closew, best_j, has = pairwise_contacts(
+            pos, in_rz, elig, prevw, r_tx2, interpret=False
+        )
+        return closew, _mutualize(best_j, has)
+    closew, d2b3 = d2ctx
+    best_j, has = candidate_best_ref(d2b3, closew, prevw, elig)
     return closew, _mutualize(best_j, has)
+
+
+def partner_close_bit(closew, partner):
+    """``close[i, partner[i]]`` read from the packed contact matrix.
+
+    Bitwise the row bit of ``closew`` (which :func:`pairwise_close` built
+    with the same subtraction order as :func:`pair_still_close`), via one
+    word gather instead of re-deriving pair distances; only meaningful
+    where ``partner >= 0``."""
+    n = closew.shape[0]
+    pidx = jnp.clip(partner, 0, n - 1)
+    word = jnp.take_along_axis(
+        closew, (pidx // 32)[:, None].astype(jnp.int32), axis=1
+    )[:, 0]
+    return ((word >> (pidx.astype(jnp.uint32) % 32)) & 1) != 0
 
 
 def advance_exchanges(
@@ -140,6 +183,15 @@ def compute_deliveries(
     words — ``snap`` is carried bit-packed)."""
     m_count = snap_has.shape[1]
 
+    if m_count == 1:
+        # Single-model fast path (the paper's default M=1 sweeps): a lone
+        # instance always has send rank 0, so the per-connection order PRNG
+        # (one threefry hash per node per slot) and the double argsort drop
+        # out. Bit-identical to the general path below.
+        fin = t0 + jnp.float32(1.0) * T_L
+        delivered = snap_has[pidx] & (fin <= eff_time)[:, None]
+        return delivered & ending[:, None], snap[pidx]
+
     def deliveries(order_seed_i, sender_has, eff):
         rnd = jax.random.uniform(
             jax.random.fold_in(jax.random.PRNGKey(0), order_seed_i), (m_count,)
@@ -163,7 +215,7 @@ def form_connections(
     """Start the exchanges of this slot's mutually-matched pairs.
 
     ``partner`` must already have ending pairs released (set to -1) and
-    ``match`` is the :func:`packed_contacts` mutual-best result. The
+    ``match`` is the :func:`match_candidates` mutual-best result. The
     planned exchange covers every non-default instance both sides hold
     (the w = 1 case; the subscription cap W is handled by the caller
     restricting M), so the planned busy time is ``t0 + (n_i + n_j) T_L``.

@@ -19,8 +19,8 @@ legacy Python-over-``M`` enqueue loops are scatter ops in
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache, partial
-from typing import Sequence
+from functools import partial
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +67,7 @@ class SimConfig:
     warmup_frac: float = 0.3             # discarded transient fraction
     mobility: str = "rdm"                # key into repro.sim.mobility registry
     street_spacing: float = 25.0         # Manhattan-grid street spacing [m]
+    pause_s: float = 0.0                 # RWP waypoint pause time [s]
 
 
 @dataclasses.dataclass
@@ -88,7 +89,10 @@ class BatchSimOutputs:
     """Batched traces with leading (scenario, seed) axes.
 
     ``point(i, j)`` extracts the ``SimOutputs`` view of scenario ``i``,
-    seed ``j`` for code written against the single-run API."""
+    seed ``j`` for code written against the single-run API. The last
+    three fields describe how the sweep runner executed the batch
+    (``repro.sim.sweep``); they stay ``None`` for instances built
+    elsewhere."""
 
     t: np.ndarray                # (S,)
     availability: np.ndarray     # (P, R, S, M)
@@ -98,6 +102,9 @@ class BatchSimOutputs:
     obs_holders: np.ndarray      # (P, R, S, M, K)
     model_holders: np.ndarray    # (P, R, S, M)
     n_in_rz: np.ndarray          # (P, R, S)
+    plan: Any = None             # SweepPlan of the producing sweep
+    devices_used: int | None = None
+    host_bytes: int | None = None
 
     @property
     def n_scenarios(self) -> int:
@@ -154,13 +161,19 @@ def _check_params(ps: Sequence[FGParams]) -> int:
     return m_values.pop()
 
 
-def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
+def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
     """Un-jitted scan driver: returns the per-slot output dict.
 
     The scan carry is the bit-packed ``SimState`` (see ``repro.sim.state``);
     all boolean-mask algebra below is uint32 word ops. Per-step constants
     (RZ center, squared transmission radius) are hoisted here — nothing
     geometry-shaped is rebuilt inside ``step``.
+
+    ``trace`` selects the per-sample output set: ``"full"`` emits every
+    trace (the single-run / trace-sweep format), ``"light"`` drops the
+    per-observation quantities (``obs_birth`` / ``obs_holders``) that only
+    the o(τ) estimator consumes — reduced-output sweeps use it to skip the
+    engine's one full ``inc`` unpack per sample.
     """
     dt = cfg.dt
     t0, T_L, T_T, T_M = (p_dyn[k] for k in ("t0", "T_L", "T_T", "T_M"))
@@ -187,10 +200,23 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
         serving = jnp.where(left, -1, state.serving)
         serv_left = jnp.where(left, 0.0, state.serv_left)
 
-        # ---- contact dynamics (O(N) — the O(N²) sweep is fused below) ----
-        still_close = contacts.pair_still_close(
-            mob.pos, in_rz, state.partner, r_tx2
-        )
+        # ---- contact dynamics ----
+        # The O(N²) pairwise sweep runs in two stages: the shared part
+        # (positions/RZ only — computed once per *seed* in sweep batches)
+        # happens first so the partner-proximity bit is a word lookup in
+        # its packed contact matrix; the per-run candidate search follows
+        # once this slot's eligibility is known. On TPU the fused Pallas
+        # kernel runs later instead (no early matrix) and the O(N)
+        # distance recompute supplies the proximity bit.
+        closew_shared, d2ctx = contacts.pairwise_close(mob.pos, in_rz, r_tx2)
+        if closew_shared is None:
+            still_close = contacts.pair_still_close(
+                mob.pos, in_rz, state.partner, r_tx2
+            )
+        else:
+            still_close = contacts.partner_close_bit(
+                closew_shared, state.partner
+            )
         elapsed, done, broke, ending, eff_time, pidx = contacts.advance_exchanges(
             partner=state.partner, exch_elapsed=state.exch_elapsed,
             exch_total=state.exch_total, still_close=still_close, dt=dt,
@@ -214,8 +240,8 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
         # ---- release ending pairs, form new connections ----
         partner = jnp.where(ending, -1, state.partner)
         elig = (partner < 0) & in_rz
-        closew, match = contacts.packed_contacts(
-            mob.pos, in_rz, elig, state.prev_close, r_tx2
+        closew, match = contacts.match_candidates(
+            d2ctx, state.prev_close, elig
         )
         conn = contacts.form_connections(
             partner=partner, match=match, has_model=has_model, inc=inc,
@@ -272,6 +298,7 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int):
             inc=state.inc, has_model=state.has_model,
             obs_birth=state.obs_birth, in_rz=state.in_rz_prev,
             partner=state.partner, t_now=t_now, tau_l=tau_l,
+            with_obs_trace=(trace == "full"),
         )
         return (state, key), out
 
@@ -292,59 +319,14 @@ def _run_single(key, p_dyn: dict, cfg: SimConfig, M: int):
 
 @partial(jax.jit, static_argnames=("cfg", "M"))
 def _run_batch(keys, p_stack: dict, cfg: SimConfig, M: int):
+    """Unsharded (seeds x scenarios) nested-vmap reference runner.
+
+    The sweep subsystem (``repro.sim.sweep``) is the production path —
+    mesh-sharded, chunked, optionally reduced on device; this single-device
+    form is kept as the bitwise reference it is pinned against."""
     over_seeds = jax.vmap(lambda k, pd: _run(k, pd, cfg, M), in_axes=(0, None))
     over_scenarios = jax.vmap(over_seeds, in_axes=(None, 0))
     return over_scenarios(keys, p_stack)
-
-
-@lru_cache(maxsize=None)
-def _sharded_run_batch(cfg: SimConfig, M: int, n_dev: int, p_keys: tuple):
-    """Jitted batch runner with the scenario axis sharded over ``n_dev``
-    devices (SPMD — scenarios are independent, so no communication is
-    introduced). Cached per (cfg, M, device count, param keys); the spec
-    is built from the actual ``p_stack`` keys so it cannot drift from
-    ``dynamic_params``."""
-    from repro.launch.mesh import compat_make_mesh
-
-    mesh = compat_make_mesh((n_dev,), ("scenario",))
-    shard = jax.sharding.NamedSharding(
-        mesh, jax.sharding.PartitionSpec("scenario")
-    )
-    replicate = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
-    return jax.jit(
-        lambda keys, p_stack: _run_batch.__wrapped__(keys, p_stack, cfg, M),
-        in_shardings=(replicate, {k: shard for k in p_keys}),
-    )
-
-
-def _dispatch_batch(keys, p_stack: dict, cfg: SimConfig, M: int):
-    """Run the batch sharded across all visible devices (one device when
-    only one is visible).
-
-    Scenario counts that don't divide the device count are padded with
-    repeats of the last scenario (scenarios are independent SPMD rows, so
-    the pad rows change nothing and are sliced off) — sharding engages on
-    any host rather than silently falling back to one device.
-
-    On multi-core CPU hosts, launch with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=$(nproc)`` to
-    expose one XLA device per core (``benchmarks/run.py`` does)."""
-    n_dev = len(jax.devices())
-    n_scen = p_stack["lam"].shape[0]
-    if n_dev <= 1:
-        return _run_batch(keys, p_stack, cfg, M)
-    pad = (-n_scen) % n_dev
-    if pad:
-        p_stack = {
-            k: jnp.concatenate([v, jnp.repeat(v[-1:], pad, axis=0)])
-            for k, v in p_stack.items()
-        }
-    outs = _sharded_run_batch(cfg, M, n_dev, tuple(sorted(p_stack)))(
-        keys, p_stack
-    )
-    if pad:
-        outs = {k: v[:n_scen] for k, v in outs.items()}
-    return outs
 
 
 def scan_carry_bytes(cfg: SimConfig, M: int) -> int:
@@ -407,25 +389,17 @@ def simulate_batch(
     Returns a ``BatchSimOutputs`` with traces shaped (len(ps), len(seeds),
     n_samples, ...).
 
-    When more than one XLA device is visible the scenario axis is sharded
-    across all of them (pure SPMD — no communication; counts that don't
-    divide the device count are padded with repeats and sliced back); on
-    CPU hosts expose one device per core with
-    ``XLA_FLAGS=--xla_force_host_platform_device_count=$(nproc)``.
+    This is a thin wrapper over the sweep runner
+    (``repro.sim.sweep.run(..., reduce="trace")``): the flattened
+    (scenario x seed) work axis is padded and sharded over every visible
+    XLA device (pure SPMD — no communication; the planner factorizes the
+    device count over both axes, so seed-heavy and uneven grids
+    parallelize too). On CPU hosts expose one device per core with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=$(nproc)``. For
+    large grids prefer calling ``repro.sim.sweep.run`` directly — chunked
+    streaming execution and on-device reductions keep device memory and
+    host transfers flat.
     """
-    if isinstance(ps, FGParams):
-        ps = [ps]
-    M = _check_params(ps)
-    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(list(seeds), jnp.uint32))
-    outs = _dispatch_batch(keys, stack_dynamic_params(ps), cfg, M)
-    pick = lambda name: np.asarray(outs[name])
-    return BatchSimOutputs(
-        t=_sample_times(cfg),
-        availability=pick("availability"),
-        busy_frac=pick("busy_frac"),
-        stored_info=pick("stored"),
-        obs_birth=pick("obs_birth"),
-        obs_holders=pick("obs_holders"),
-        model_holders=pick("model_holders"),
-        n_in_rz=pick("n_in_rz"),
-    )
+    from repro.sim import sweep
+
+    return sweep.run(ps, cfg, seeds, reduce="trace")

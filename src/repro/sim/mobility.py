@@ -123,7 +123,7 @@ register_mobility(MobilityModel(name="rdm", init=_rdm_init, step=_rdm_step))
 
 
 # --------------------------------------------------------------------------
-# Random Waypoint (no pause)
+# Random Waypoint (constant waypoint pause, ``cfg.pause_s``; 0 = classic)
 # --------------------------------------------------------------------------
 
 
@@ -132,13 +132,14 @@ register_mobility(MobilityModel(name="rdm", init=_rdm_init, step=_rdm_step))
 class RWPState:
     pos: jnp.ndarray     # (N, 2)
     dest: jnp.ndarray    # (N, 2) current waypoint
+    wait: jnp.ndarray    # (N,) remaining pause time at the waypoint [s]
 
 
 def _rwp_init(key, cfg):
     k_pos, k_dest, key = jax.random.split(key, 3)
     pos = jax.random.uniform(k_pos, (cfg.n_nodes, 2), maxval=cfg.area_side)
     dest = jax.random.uniform(k_dest, (cfg.n_nodes, 2), maxval=cfg.area_side)
-    return RWPState(pos=pos, dest=dest), key
+    return RWPState(pos=pos, dest=dest, wait=jnp.zeros((cfg.n_nodes,))), key
 
 
 def _rwp_step(k_dest, _k_unused, s: RWPState, cfg) -> RWPState:
@@ -146,12 +147,22 @@ def _rwp_step(k_dest, _k_unused, s: RWPState, cfg) -> RWPState:
     step_len = cfg.speed * cfg.dt
     delta = s.dest - s.pos
     dist = jnp.linalg.norm(delta, axis=-1)
-    arrive = dist <= step_len
+    paused = s.wait > 0.0
+    arrive = (dist <= step_len) & ~paused
     direction = delta / jnp.maximum(dist, 1e-9)[:, None]
-    pos = jnp.where(arrive[:, None], s.dest, s.pos + direction * step_len)
+    pos = jnp.where(
+        paused[:, None], s.pos,
+        jnp.where(arrive[:, None], s.dest, s.pos + direction * step_len),
+    )
+    # the next waypoint is drawn at arrival (key use identical for any
+    # pause_s); with cfg.pause_s > 0 the node then sits at the waypoint for
+    # ceil(pause_s / dt) slots before moving toward it
     new_dest = jax.random.uniform(k_dest, (n, 2), maxval=cfg.area_side)
     dest = jnp.where(arrive[:, None], new_dest, s.dest)
-    return RWPState(pos=pos, dest=dest)
+    wait = jnp.where(
+        arrive, cfg.pause_s, jnp.where(paused, s.wait - cfg.dt, s.wait)
+    )
+    return RWPState(pos=pos, dest=dest, wait=wait)
 
 
 register_mobility(MobilityModel(name="rwp", init=_rwp_init, step=_rwp_step))

@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sim.compute import packed_onehot, packed_popcount, pack_mask, unpack_mask
+from repro.sim.compute import (packed_onehot, packed_popcount, pack_mask,
+                               shared_barrier, unpack_mask)
 
 __all__ = ["generate_observations", "apply_completions", "slot_outputs",
            "estimate_o_of_tau"]
@@ -57,15 +58,20 @@ def generate_observations(
     # (out-of-RZ nodes pushed to the back) and take the Λ smallest scores —
     # identical to the legacy top-Λ gather, but Λ stays dynamic (a traced
     # threshold, not a static slice), so scenario batches can sweep it.
-    # Scores are continuous, so ties have probability zero and
-    # "score <= Λ-th smallest" selects exactly Λ nodes.
+    # Selection is expressed through each node's *rank* (#scores strictly
+    # below its own) rather than a sort + k-th-value threshold: "rank < Λ"
+    # picks exactly the same set as "score <= Λ-th smallest" — including
+    # under f32 score ties, where both forms admit every tied holder of the
+    # threshold value — while the O(N²) compare-reduce vectorizes where
+    # XLA's CPU sort lowers to a scalar comparator loop. Like the scores
+    # themselves, the rank matrix depends only on the per-seed key chain,
+    # so sweep batches compute it once per seed, not once per scenario.
     who_scores = jax.random.uniform(k_who, (m_count, n)) + (~in_rz)[None, :] * 1e3
-    k_idx = jnp.clip(jnp.round(Lam).astype(jnp.int32) - 1, 0, n - 1)
-    kth = jnp.take_along_axis(
-        jnp.sort(who_scores, axis=-1),
-        jnp.full((m_count, 1), k_idx, dtype=jnp.int32), axis=1,
-    )
-    is_obs = (who_scores <= kth) & in_rz[None, :] & new_obs[:, None]
+    rank = shared_barrier(jnp.sum(
+        who_scores[:, :, None] > who_scores[:, None, :], axis=-1
+    ))
+    lam_n = jnp.clip(jnp.round(Lam).astype(jnp.int32), 1, n)
+    is_obs = (rank < lam_n) & in_rz[None, :] & new_obs[:, None]
     want_train = is_obs.T                                          # (N, M)
     slot_payload = jnp.broadcast_to(slot_of[None, :], (n, m_count))
     return obs_birth, obs_head, inc, want_train, slot_payload
@@ -102,33 +108,44 @@ def apply_completions(
     return inc, has_model
 
 
-def slot_outputs(*, inc, has_model, obs_birth, in_rz, partner, t_now, tau_l):
+def slot_outputs(*, inc, has_model, obs_birth, in_rz, partner, t_now, tau_l,
+                 with_obs_trace: bool = True):
     """Per-slot observables (the quantities Figs. 1-4 are built from).
 
     ``inc`` arrives bit-packed; stored-information is a popcount and the
     per-observation holder counts unpack once per *sample* (not per slot),
-    so the packed format never costs the inner loop anything."""
+    so the packed format never costs the inner loop anything.
+
+    ``with_obs_trace=False`` drops the per-observation quantities
+    (``obs_birth`` ring snapshot and the holder-count GEMV, which needs the
+    only full unpack of ``inc`` in the engine) — the light mode used by
+    reduced-output sweeps (``repro.sim.sweep``), where only the scalar
+    observables feed the on-device reduction and the o(τ) estimator is not
+    run."""
     k_count = obs_birth.shape[1]
     age = t_now - obs_birth  # (M, K)
     live = (obs_birth > -jnp.inf) & (age <= tau_l)
     livew = pack_mask(live)                                   # (M, KW)
     stored = jnp.sum(packed_popcount(inc & livew[None]), axis=1)  # per node
-    inc_bits = unpack_mask(inc, k_count)                      # (N, M, K)
     n_rz = jnp.maximum(jnp.sum(in_rz), 1)
-    # holder counts as a GEMV over the node axis — counts <= N are exact in
-    # f32, so this is bitwise the boolean-sum result at matmul speed
-    obs_holders = jnp.einsum(
-        "n,nmk->mk", in_rz.astype(jnp.float32), inc_bits.astype(jnp.float32)
-    ).astype(jnp.int32)
-    return dict(
+    out = dict(
         availability=jnp.sum(has_model & in_rz[:, None], axis=0) / n_rz,
         busy_frac=jnp.sum((partner >= 0) & in_rz) / n_rz,
         stored=jnp.sum(jnp.where(in_rz, stored, 0)) / n_rz,
-        obs_birth=obs_birth,
-        obs_holders=obs_holders,
         model_holders=jnp.sum(has_model & in_rz[:, None], axis=0),
         n_in_rz=jnp.sum(in_rz),
     )
+    if with_obs_trace:
+        inc_bits = unpack_mask(inc, k_count)                  # (N, M, K)
+        # holder counts as a GEMV over the node axis — counts <= N are
+        # exact in f32, so this is bitwise the boolean-sum result at
+        # matmul speed
+        out["obs_birth"] = obs_birth
+        out["obs_holders"] = jnp.einsum(
+            "n,nmk->mk", in_rz.astype(jnp.float32),
+            inc_bits.astype(jnp.float32),
+        ).astype(jnp.int32)
+    return out
 
 
 def estimate_o_of_tau(out, tau_grid: np.ndarray, warmup_frac: float = 0.3):

@@ -1,0 +1,374 @@
+"""Fleet-scale sweep execution for the Monte-Carlo engine.
+
+This module replaces the ad-hoc scenario-axis SPMD that used to live in
+``engine.simulate_batch`` with a sweep-execution subsystem built from
+three pieces:
+
+**Flattened (scenario x seed) work axis.** A sweep is a grid of
+``n_scenarios x n_seeds`` independent work items. The planner
+(:func:`plan_sweep`) factorizes the visible device count over *both* grid
+axes — picking the factorization that minimizes padded work — so uneven
+grids (``n_scenarios % n_devices != 0``) and seed-heavy sweeps (many
+seeds, few scenarios) parallelize instead of silently falling back to one
+device. Both axes are padded with repeats of their last row (work items
+are independent SPMD rows, so pad items change nothing and are sliced
+off) and sharded over a 2-D device mesh built with
+``repro.launch.mesh.compat_make_mesh``; partition specs come from the
+``sweep_scenario`` / ``sweep_seed`` logical axes in
+``repro.sharding.logical.SWEEP_RULES``. The (scenario, seed) *structure*
+of each device block is deliberately preserved rather than physically
+flattened to one axis: everything in the per-slot program that depends
+only on the per-seed PRNG chain — mobility, RZ membership, the O(N²)
+distance matrix, observer scores — is computed once per seed and
+broadcast across the scenario axis by ``vmap``; a physically flattened
+axis re-computes all of it per work item (measured ~25% slower at paper
+scale).
+
+**Streaming chunked execution.** Large grids run as a stream of
+fixed-shape chunks along the scenario axis. Chunk inputs are donated
+(``jit(..., donate_argnums=...)``), letting XLA reuse their buffers for
+the scan carry and outputs of the same dispatch, and the runner is
+double-buffered: chunk ``k+1`` is dispatched before chunk ``k``'s outputs
+are materialized on the host, so host transfers and result assembly
+overlap device compute. Device memory stays flat in the grid size —
+only one chunk's traces (plus the in-flight chunk) ever exist on device.
+
+**On-device sweep reductions.** For figure-sized parameter studies the
+full per-slot trace is rarely wanted — its host transfer dominates the
+sweep at scale. ``reduce="mean" | "final" | "quantiles"`` reduce each
+run's trace over the (post-warmup) sample axis *inside* the compiled
+program and ship only the reduced statistics (a few scalars per run
+instead of the whole ``(runs, samples, ...)`` trace, >100x fewer bytes at
+paper scale); the per-observation traces (``obs_birth``/``obs_holders``,
+needed only by the o(τ) estimator) are skipped entirely on this path.
+``reduce="trace"`` returns the full :class:`~repro.sim.engine.
+BatchSimOutputs` and is **bitwise identical** to the historical
+``simulate_batch`` — pinned by ``tests/test_sim_sweep.py`` against the
+unsharded nested-vmap reference, chunked or not, sharded or not.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from functools import lru_cache
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.meanfield import FGParams
+from repro.launch.mesh import compat_make_mesh
+from repro.sharding.logical import SWEEP_RULES, spec_for
+from repro.sim.engine import (
+    BatchSimOutputs, SimConfig, _check_params, _run, _sample_times,
+    stack_dynamic_params,
+)
+
+__all__ = ["SweepPlan", "SweepSummary", "plan_sweep", "run", "REDUCERS"]
+
+#: Valid ``reduce=`` modes: "trace" ships the full per-sample trace
+#: (bitwise the historical ``simulate_batch``); the others reduce on
+#: device over the post-warmup sample axis and ship only statistics.
+REDUCERS = ("trace", "mean", "final", "quantiles")
+
+#: Quantities present in the light (reduced) trace, reduced per run over
+#: the sample axis.
+_LIGHT_KEYS = ("availability", "busy_frac", "stored", "model_holders",
+               "n_in_rz")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPlan:
+    """Placement of a (scenarios x seeds) grid onto a device mesh.
+
+    ``mesh_shape = (d_scen, d_seed)`` multiplies to the device count; the
+    grid axes are padded to ``pad_scenarios`` / ``pad_seeds`` (multiples
+    of the respective mesh axis) and the scenario axis streams in
+    ``n_chunks`` dispatches of ``chunk_scenarios`` each."""
+
+    n_scenarios: int
+    n_seeds: int
+    n_devices: int
+    mesh_shape: tuple[int, int]
+    pad_scenarios: int
+    pad_seeds: int
+    chunk_scenarios: int
+
+    @property
+    def n_chunks(self) -> int:
+        return self.pad_scenarios // self.chunk_scenarios
+
+    @property
+    def padded_runs(self) -> int:
+        return self.pad_scenarios * self.pad_seeds
+
+    @property
+    def utilization(self) -> float:
+        """Real work items / padded work items (1.0 = no padding waste)."""
+        return self.n_scenarios * self.n_seeds / self.padded_runs
+
+
+def plan_sweep(
+    n_scenarios: int,
+    n_seeds: int,
+    n_devices: int | None = None,
+    chunk_size: int | None = None,
+) -> SweepPlan:
+    """Factorize the device count over the (scenario, seed) grid.
+
+    Every divisor pair ``(d_scen, d_seed)`` of ``n_devices`` is scored by
+    the padded work it implies (each grid axis rounds up to a multiple of
+    its mesh axis); the minimum wins, ties preferring scenario-axis
+    sharding (the historical layout, and the axis chunking streams along).
+    A 3x5 grid on 2 devices therefore shards the *seed* axis (15 -> 18
+    padded runs) instead of the scenario axis (-> 20) — and instead of not
+    sharding at all, as the pre-sweep engine did when the scenario count
+    did not divide the device count.
+
+    ``chunk_size`` is the number of *scenarios* per dispatched chunk
+    (rounded up to a multiple of ``d_scen``); ``None`` means a single
+    dispatch. The scenario axis additionally pads up to a multiple of the
+    chunk so every dispatch shares one compiled shape.
+    """
+    if n_devices is None:
+        n_devices = len(jax.devices())
+    if n_scenarios < 1 or n_seeds < 1:
+        raise ValueError("empty sweep grid")
+
+    best = None
+    for d_scen in range(n_devices, 0, -1):
+        if n_devices % d_scen:
+            continue
+        d_seed = n_devices // d_scen
+        pad_p = -(-n_scenarios // d_scen) * d_scen
+        pad_r = -(-n_seeds // d_seed) * d_seed
+        cost = pad_p * pad_r
+        # strict < keeps the largest d_scen (first seen) on ties
+        if best is None or cost < best[0]:
+            best = (cost, d_scen, d_seed, pad_p, pad_r)
+    _, d_scen, d_seed, pad_p, pad_r = best
+
+    if chunk_size is None:
+        chunk_p = pad_p
+    else:
+        chunk_p = max(1, min(chunk_size, pad_p))
+        chunk_p = -(-chunk_p // d_scen) * d_scen
+        pad_p = -(-pad_p // chunk_p) * chunk_p
+    return SweepPlan(
+        n_scenarios=n_scenarios, n_seeds=n_seeds, n_devices=n_devices,
+        mesh_shape=(d_scen, d_seed), pad_scenarios=pad_p, pad_seeds=pad_r,
+        chunk_scenarios=chunk_p,
+    )
+
+
+@dataclasses.dataclass
+class SweepSummary:
+    """On-device-reduced sweep result.
+
+    ``stats`` maps each light-trace quantity to an array with leading
+    (scenario, seed) axes: time-means (+ ``*_std``) for ``reduce="mean"``,
+    the last sample for ``"final"``, and a trailing quantile axis for
+    ``"quantiles"`` (scalar quantities: ``(scen, seed, Q)``; per-model
+    quantities: ``(scen, seed, M, Q)``). ``host_bytes`` counts the bytes
+    actually materialized from device — padded chunk outputs included —
+    the number the transfer-reduction benchmark column tracks.
+    """
+
+    reduce: str
+    t: np.ndarray
+    warmup_samples: int
+    stats: dict[str, np.ndarray]
+    plan: SweepPlan
+    devices_used: int
+    host_bytes: int
+    quantiles: tuple[float, ...] | None = None
+
+
+def _reduce_outs(outs: dict, reduce: str, s0: int, qs) -> dict:
+    """Per-run on-device reduction over the sample axis (axis 2)."""
+    if reduce == "mean":
+        red = {}
+        for k in _LIGHT_KEYS:
+            v = outs[k][:, :, s0:]
+            red[k] = jnp.mean(v, axis=2)
+            red[k + "_std"] = jnp.std(v, axis=2)
+        return red
+    if reduce == "final":
+        return {k: outs[k][:, :, -1] for k in _LIGHT_KEYS}
+    if reduce == "quantiles":
+        q = jnp.asarray(qs, jnp.float32)
+        # quantile levels land on the TRAILING axis for every quantity,
+        # scalar (scen, seed, Q) and vector (scen, seed, M, Q) alike
+        return {
+            k: jnp.moveaxis(
+                jnp.quantile(outs[k][:, :, s0:], q, axis=2), 0, -1
+            )
+            for k in _LIGHT_KEYS
+        }
+    raise ValueError(f"unknown reduce mode {reduce!r}; known: {REDUCERS}")
+
+
+@lru_cache(maxsize=None)
+def _chunk_worker(cfg: SimConfig, M: int, plan: SweepPlan, reduce: str,
+                  s0: int, qs: tuple, p_keys: tuple):
+    """Compiled per-chunk runner, cached per (config, plan, reduction).
+
+    Inputs are sharded over the plan's 2-D mesh via the ``sweep_scenario``
+    / ``sweep_seed`` logical axes and the per-chunk parameter buffers are
+    donated — each chunk's arrays are dead after its dispatch, so XLA may
+    reuse their memory for the scan carry and outputs of the same step.
+    """
+    mesh = compat_make_mesh(plan.mesh_shape, ("sweep_scenario", "sweep_seed"))
+    chunk_p, pad_r = plan.chunk_scenarios, plan.pad_seeds
+    scen_spec = spec_for(mesh, ("sweep_scenario",), (chunk_p,), SWEEP_RULES)
+    seed_spec = spec_for(mesh, ("sweep_seed", None), (pad_r, 2), SWEEP_RULES)
+    trace = "full" if reduce == "trace" else "light"
+
+    def worker(keys, p_chunk):
+        over_seeds = jax.vmap(
+            lambda k, pd: _run(k, pd, cfg, M, trace=trace),
+            in_axes=(0, None),
+        )
+        outs = jax.vmap(over_seeds, in_axes=(None, 0))(keys, p_chunk)
+        if reduce == "trace":
+            return outs
+        return _reduce_outs(outs, reduce, s0, qs)
+
+    return jax.jit(
+        worker,
+        in_shardings=(
+            jax.sharding.NamedSharding(mesh, seed_spec),
+            {k: jax.sharding.NamedSharding(mesh, scen_spec) for k in p_keys},
+        ),
+        donate_argnums=(1,),
+    )
+
+
+def _pad_rows(arr: jnp.ndarray, to: int) -> jnp.ndarray:
+    pad = to - arr.shape[0]
+    if pad == 0:
+        return arr
+    return jnp.concatenate([arr, jnp.repeat(arr[-1:], pad, axis=0)])
+
+
+def run(
+    ps: Sequence[FGParams] | FGParams,
+    cfg: SimConfig,
+    seeds: Sequence[int] = (0,),
+    *,
+    reduce: str = "trace",
+    warmup_frac: float | None = None,
+    chunk_size: int | None = None,
+    quantiles: Sequence[float] = (0.1, 0.5, 0.9),
+    n_devices: int | None = None,
+):
+    """Execute a (scenarios x seeds) sweep on the planned device mesh.
+
+    Args:
+      ps:         one ``FGParams`` or a sequence (the scenario axis); all
+                  scenarios share the model count ``M``.
+      cfg:        shared simulation geometry/discretization.
+      seeds:      PRNG seeds (the replication axis).
+      reduce:     ``"trace"`` (full per-sample traces, bitwise the
+                  historical ``simulate_batch``) or an on-device
+                  reduction: ``"mean"`` (post-warmup time-mean + std),
+                  ``"final"`` (last sample), ``"quantiles"`` (post-warmup
+                  time-quantiles).
+      warmup_frac: fraction of samples discarded before reducing
+                  (defaults to ``cfg.warmup_frac``; ignored for
+                  ``"trace"``/``"final"``).
+      chunk_size: scenarios per dispatched chunk (``None`` = one
+                  dispatch). Chunks stream with double-buffering: the
+                  next chunk is dispatched before the previous chunk's
+                  outputs are pulled to the host.
+      quantiles:  quantile levels for ``reduce="quantiles"``.
+      n_devices:  mesh size override (defaults to all visible devices).
+
+    Returns:
+      ``BatchSimOutputs`` for ``reduce="trace"`` — with the extra
+      attributes ``plan``/``devices_used``/``host_bytes`` attached — or a
+      :class:`SweepSummary` for the reduced modes.
+    """
+    if isinstance(ps, FGParams):
+        ps = [ps]
+    if reduce not in REDUCERS:
+        raise ValueError(f"unknown reduce mode {reduce!r}; known: {REDUCERS}")
+    M = _check_params(ps)
+    plan = plan_sweep(len(ps), len(seeds), n_devices=n_devices,
+                      chunk_size=chunk_size)
+
+    p_stack = {
+        k: _pad_rows(v, plan.pad_scenarios)
+        for k, v in stack_dynamic_params(ps).items()
+    }
+    keys = _pad_rows(
+        jax.vmap(jax.random.PRNGKey)(jnp.asarray(list(seeds), jnp.uint32)),
+        plan.pad_seeds,
+    )
+
+    n_samples = cfg.n_slots // cfg.sample_every
+    wf = cfg.warmup_frac if warmup_frac is None else warmup_frac
+    s0 = min(int(n_samples * wf), n_samples - 1)
+    # normalize the compile-cache key to what the reduction actually
+    # reads: trace/final ignore the warmup index, only quantiles reads
+    # the quantile levels — so varying the unused knobs can't trigger a
+    # spurious recompilation
+    key_s0 = s0 if reduce in ("mean", "quantiles") else 0
+    key_qs = tuple(quantiles) if reduce == "quantiles" else ()
+    worker = _chunk_worker(cfg, M, plan, reduce, key_s0, key_qs,
+                           tuple(sorted(p_stack)))
+
+    cp = plan.chunk_scenarios
+    host_chunks: list[dict] = []
+    pending = None
+    devices_used = 0
+    for c in range(plan.n_chunks):
+        p_chunk = {k: v[c * cp:(c + 1) * cp] for k, v in p_stack.items()}
+        with warnings.catch_warnings():
+            # CPU cannot always alias donated input pages into outputs;
+            # the donation is still honored where the backend supports it
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            out = worker(keys, p_chunk)
+        devices_used = max(
+            devices_used,
+            len(jax.tree_util.tree_leaves(out)[0].sharding.device_set),
+        )
+        if pending is not None:
+            # double buffer: materialize chunk c-1 while chunk c runs
+            host_chunks.append(jax.tree_util.tree_map(np.asarray, pending))
+        pending = out
+    host_chunks.append(jax.tree_util.tree_map(np.asarray, pending))
+
+    P, R = plan.n_scenarios, plan.n_seeds
+    # what actually crossed the device/host boundary: the materialized
+    # (padded) chunks, before the pad rows are sliced off
+    host_bytes = sum(
+        v.nbytes for hc in host_chunks for v in hc.values()
+    )
+    outs = {
+        k: np.concatenate([hc[k] for hc in host_chunks])[:P, :R]
+        for k in host_chunks[0]
+    }
+    t = _sample_times(cfg)
+
+    if reduce == "trace":
+        return BatchSimOutputs(
+            t=t,
+            availability=outs["availability"],
+            busy_frac=outs["busy_frac"],
+            stored_info=outs["stored"],
+            obs_birth=outs["obs_birth"],
+            obs_holders=outs["obs_holders"],
+            model_holders=outs["model_holders"],
+            n_in_rz=outs["n_in_rz"],
+            plan=plan, devices_used=devices_used, host_bytes=host_bytes,
+        )
+    return SweepSummary(
+        reduce=reduce, t=t, warmup_samples=s0, stats=outs, plan=plan,
+        devices_used=devices_used, host_bytes=host_bytes,
+        quantiles=tuple(quantiles) if reduce == "quantiles" else None,
+    )

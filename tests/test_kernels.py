@@ -87,9 +87,12 @@ def test_ssd_kernel_matches_model_path():
 
 
 @pytest.mark.parametrize("n,blk_i", [
+    (20, 32),      # n < one packed word AND < one tile (pad bits dominate)
     (33, 128),     # padding path (n < one 32-aligned tile)
+    (65, 32),      # several minimal tiles + a 1-row remainder tile
     (120, 64),     # multiple row tiles
     (128, 128),    # exact tile fit
+    (130, 128),    # one full tile + a nearly-empty edge tile
     (200, 128),    # the paper's node count
 ])
 @pytest.mark.parametrize("density", [0.0, 0.3, 1.0])
@@ -117,6 +120,33 @@ def test_pairwise_contacts_kernel_matches_jnp_bitwise(n, blk_i, density):
         np.testing.assert_array_equal(
             np.asarray(got), np.asarray(want), err_msg=name
         )
+
+
+def test_pairwise_contacts_edge_tile_rows_masked():
+    """Edge-tile pad rows must not leak: pad coordinates are far away, so
+    every pad row/column of closew is zero and no pad index can win the
+    candidate reduction, at N just past a tile boundary."""
+    n, blk_i = 130, 128
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 3)
+    # cluster everyone inside one radius so the contact matrix is dense —
+    # maximal pressure on the pad masking
+    pos = jax.random.uniform(ks[0], (n, 2), maxval=4.0)
+    in_rz = jnp.ones((n,), bool)
+    elig = jax.random.uniform(ks[1], (n,)) < 0.9
+    prevw = jnp.zeros((n, (n + 31) // 32), jnp.uint32)
+    closew, best_j, has = pairwise_contacts(
+        pos, in_rz, elig, prevw, 25.0, blk_i=blk_i, interpret=True
+    )
+    ref = pairwise_contacts_ref(pos, in_rz, elig, prevw, 25.0)
+    np.testing.assert_array_equal(np.asarray(closew), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(best_j), np.asarray(ref[1]))
+    np.testing.assert_array_equal(np.asarray(has), np.asarray(ref[2]))
+    # pad bits of the last packed word are zero
+    used = n % 32
+    assert not np.any(np.asarray(closew)[:, -1] >> used)
+    # winning indices are real nodes
+    assert np.all(np.asarray(best_j)[np.asarray(has)] < n)
 
 
 def test_pairwise_contacts_kernel_no_candidates():

@@ -87,6 +87,54 @@ def test_positions_stay_in_area(name):
     assert pos.min() >= -1e-6 and pos.max() <= cfg.area_side + 1e-6
 
 
+class TestPauseTimeRWP:
+    """Bettstetter pause-time correction: the analytic ``rwp`` model with
+    ``pause_s`` tracks the simulator's paused Random Waypoint."""
+
+    PAUSE = 60.0
+
+    def test_pause_zero_matches_base_model(self):
+        base = contact_model_for("rwp", **GEOM)
+        with_field = contact_model_for("rwp", pause_s=0.0, **GEOM)
+        np.testing.assert_allclose(float(base.g), float(with_field.g))
+        np.testing.assert_allclose(
+            np.asarray(base.pdf), np.asarray(with_field.pdf)
+        )
+
+    def test_pause_needs_area_side(self):
+        with pytest.raises(ValueError, match="area_side"):
+            contact_model_for(
+                "rwp", speed=SPEED_DEFAULT, r_tx=R_TX, density=DENSITY,
+                pause_s=10.0,
+            )
+
+    def test_pause_reduces_contact_rate(self):
+        g0 = float(contact_model_for("rwp", **GEOM).g)
+        gp = float(contact_model_for("rwp", pause_s=self.PAUSE, **GEOM).g)
+        assert 0 < gp < g0
+        # pauses also lengthen durations (slower move-pause chords)
+        d0 = float(contact_model_for("rwp", **GEOM).mean_duration)
+        dp = float(
+            contact_model_for("rwp", pause_s=self.PAUSE, **GEOM).mean_duration
+        )
+        assert dp > d0
+
+    def test_simulated_paused_contact_rate_matches_analytic_g(self):
+        cfg = SimConfig(n_nodes=200, mobility="rwp", pause_s=self.PAUSE)
+        g_sim = float(measure_contact_rate(
+            jax.random.PRNGKey(1), name="rwp", cfg=cfg, n_slots=4000
+        ))
+        g_analytic = float(
+            contact_model_for("rwp", pause_s=self.PAUSE, **GEOM).g
+        )
+        rel = abs(g_sim - g_analytic) / g_analytic
+        assert rel < 0.2, (g_sim, g_analytic, rel)
+        # the pause effect is much larger than the tolerance: the paused
+        # sim must NOT match the no-pause analytic rate
+        g_nopause = float(contact_model_for("rwp", **GEOM).g)
+        assert abs(g_sim - g_nopause) / g_nopause > 0.2, (g_sim, g_nopause)
+
+
 def test_manhattan_stays_on_street_graph():
     cfg = SimConfig(n_nodes=50, mobility="manhattan", street_spacing=25.0)
     model = get_mobility("manhattan")

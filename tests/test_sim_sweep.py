@@ -1,0 +1,199 @@
+"""Sweep-runner guarantees (``repro.sim.sweep``):
+
+1. ``sweep.run(reduce="trace")`` is *bitwise* the nested-vmap reference
+   (and hence PR-2 ``simulate_batch``) on a divisible grid — and stays
+   bitwise under chunked streaming execution and work-axis padding;
+2. on-device reductions equal post-hoc reductions of the full trace and
+   ship orders of magnitude fewer bytes;
+3. the planner factorizes the device mesh over both grid axes, so uneven
+   and seed-heavy grids shard instead of falling back to one device
+   (asserted via sharding introspection in a forced-2-device subprocess).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fg_paper import paper_params
+from repro.sim import SimConfig, plan_sweep, sweep
+from repro.sim.engine import _check_params, _run_batch, stack_dynamic_params
+
+CFG = SimConfig(n_nodes=40, n_slots=160, sample_every=8)
+PS = [paper_params(lam=l, M=1) for l in (0.1, 0.2, 0.3)]
+SEEDS = [0, 1, 2, 3, 4]
+
+TRACE_KEYS = (
+    ("availability", "availability"), ("busy_frac", "busy_frac"),
+    ("stored", "stored_info"), ("obs_birth", "obs_birth"),
+    ("obs_holders", "obs_holders"), ("model_holders", "model_holders"),
+    ("n_in_rz", "n_in_rz"),
+)
+
+
+def _reference(ps, cfg, seeds):
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds, jnp.uint32))
+    return _run_batch(keys, stack_dynamic_params(ps), cfg, _check_params(ps))
+
+
+def test_trace_bitwise_equals_reference_divisible_grid():
+    """2 scenarios x 2 seeds (divides any 1/2-device mesh): the sweep
+    runner's trace output is bit for bit the PR-2 nested-vmap batch."""
+    ps, seeds = PS[:2], [0, 3]
+    batch = sweep.run(ps, CFG, seeds, reduce="trace")
+    ref = _reference(ps, CFG, seeds)
+    for out_key, attr in TRACE_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(ref[out_key]), getattr(batch, attr), err_msg=out_key
+        )
+
+
+def test_trace_bitwise_with_padding_and_chunking():
+    """3 x 5 grid, chunked into 2-scenario dispatches (forcing a padded
+    final chunk): still bitwise the unchunked reference."""
+    batch = sweep.run(PS, CFG, SEEDS, reduce="trace", chunk_size=2)
+    assert batch.plan.n_chunks == 2
+    assert batch.plan.pad_scenarios == 4
+    ref = _reference(PS, CFG, SEEDS)
+    for out_key, attr in TRACE_KEYS:
+        np.testing.assert_array_equal(
+            np.asarray(ref[out_key]), getattr(batch, attr), err_msg=out_key
+        )
+
+
+def test_reductions_match_posthoc_trace_reductions():
+    batch = sweep.run(PS, CFG, SEEDS, reduce="trace")
+    mean = sweep.run(PS, CFG, SEEDS, reduce="mean")
+    s0 = mean.warmup_samples
+    np.testing.assert_allclose(
+        mean.stats["availability"],
+        np.asarray(batch.availability[:, :, s0:]).mean(axis=2),
+        atol=1e-6,
+    )
+    np.testing.assert_allclose(
+        mean.stats["stored"],
+        np.asarray(batch.stored_info[:, :, s0:]).mean(axis=2),
+        atol=1e-5,
+    )
+    final = sweep.run(PS, CFG, SEEDS, reduce="final")
+    np.testing.assert_array_equal(
+        final.stats["n_in_rz"], batch.n_in_rz[:, :, -1]
+    )
+    quant = sweep.run(PS, CFG, SEEDS, reduce="quantiles",
+                      quantiles=(0.1, 0.5))
+    # quantile levels are the TRAILING axis for scalar and vector stats
+    assert quant.stats["busy_frac"].shape == (len(PS), len(SEEDS), 2)
+    assert quant.stats["availability"].shape == (len(PS), len(SEEDS), 1, 2)
+    med = np.quantile(np.asarray(batch.busy_frac[:, :, s0:]), 0.5, axis=2)
+    np.testing.assert_allclose(quant.stats["busy_frac"][..., 1], med,
+                               atol=1e-6)
+
+
+def test_reduced_path_transfers_far_fewer_bytes():
+    batch = sweep.run(PS, CFG, SEEDS, reduce="trace")
+    mean = sweep.run(PS, CFG, SEEDS, reduce="mean")
+    assert batch.host_bytes / mean.host_bytes >= 10
+
+
+def test_warmup_frac_override():
+    a = sweep.run(PS[:1], CFG, [0], reduce="mean", warmup_frac=0.0)
+    b = sweep.run(PS[:1], CFG, [0], reduce="mean", warmup_frac=0.9)
+    assert a.warmup_samples == 0
+    assert b.warmup_samples > 0
+    assert not np.allclose(a.stats["stored"], b.stats["stored"])
+
+
+def test_unknown_reduce_mode_rejected():
+    with pytest.raises(ValueError, match="reduce"):
+        sweep.run(PS, CFG, SEEDS, reduce="median")
+
+
+class TestPlanner:
+    def test_seed_heavy_grid_shards_seed_axis(self):
+        # 3 % 2 != 0: the pre-sweep engine fell back to one device here.
+        # The planner shards the seed axis instead (15 -> 18 padded runs,
+        # vs 20 for scenario-axis sharding).
+        plan = plan_sweep(3, 5, n_devices=2)
+        assert plan.mesh_shape == (1, 2)
+        assert (plan.pad_scenarios, plan.pad_seeds) == (3, 6)
+        assert plan.padded_runs == 18
+
+    def test_divisible_grid_prefers_scenario_axis(self):
+        plan = plan_sweep(8, 16, n_devices=2)
+        assert plan.mesh_shape == (2, 1)
+        assert plan.padded_runs == 128 and plan.utilization == 1.0
+
+    def test_four_device_factorization(self):
+        plan = plan_sweep(6, 2, n_devices=4)
+        # (2, 2): 6x2 pads to 6x2 = 12; (4, 1) would pad to 8x2 = 16
+        assert plan.mesh_shape == (2, 2)
+        assert plan.padded_runs == 12
+
+    def test_chunk_rounds_to_mesh_axis(self):
+        plan = plan_sweep(8, 4, n_devices=2, chunk_size=3)
+        assert plan.chunk_scenarios % plan.mesh_shape[0] == 0
+        assert plan.pad_scenarios % plan.chunk_scenarios == 0
+
+    def test_empty_grid_rejected(self):
+        with pytest.raises(ValueError, match="empty"):
+            plan_sweep(0, 4, n_devices=2)
+
+
+def test_uneven_sweep_shards_across_two_devices():
+    """Satellite regression: a 3-scenario x 5-seed sweep on 2 forced CPU
+    devices actually shards (sharding introspection: the dispatched device
+    buffers span both devices) and equals the single-device reference
+    bitwise. Subprocess because the device count is fixed at jax init."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.configs.fg_paper import paper_params
+        from repro.sim import SimConfig, sweep
+        from repro.sim.engine import _run_batch, _check_params, \\
+            stack_dynamic_params
+
+        assert len(jax.devices()) == 2
+        cfg = SimConfig(n_nodes=40, n_slots=160, sample_every=8)
+        ps = [paper_params(lam=l, M=1) for l in (0.1, 0.2, 0.3)]
+        seeds = [0, 1, 2, 3, 4]
+
+        batch = sweep.run(ps, cfg, seeds, reduce="trace")
+        assert batch.plan.mesh_shape == (1, 2), batch.plan
+        assert batch.devices_used == 2, batch.devices_used
+
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds, jnp.uint32))
+        ref = _run_batch(keys, stack_dynamic_params(ps), cfg,
+                         _check_params(ps))
+        np.testing.assert_array_equal(
+            batch.availability, np.asarray(ref["availability"]))
+        np.testing.assert_array_equal(
+            batch.stored_info, np.asarray(ref["stored"]))
+        np.testing.assert_array_equal(
+            batch.obs_holders, np.asarray(ref["obs_holders"]))
+
+        # chunked + reduced streaming path shards too
+        mean = sweep.run(ps, cfg, seeds, reduce="mean", chunk_size=2)
+        assert mean.devices_used == 2
+        s0 = mean.warmup_samples
+        np.testing.assert_allclose(
+            mean.stats["availability"][..., 0],
+            np.asarray(ref["availability"])[:, :, s0:, 0].mean(axis=2),
+            atol=1e-6)
+        print("SWEEP-SHARDED-OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "SWEEP-SHARDED-OK" in out.stdout, out.stdout + out.stderr
