@@ -24,7 +24,7 @@ os.environ.setdefault(
 
 from benchmarks import (  # noqa: E402
     fig1_availability, fig2_capacity, fig3_stability, fig4_staleness,
-    gossip_throughput, roofline_table, sim_engine,
+    fig_multizone, gossip_throughput, roofline_table, sim_engine,
 )
 
 BENCHES = {
@@ -32,6 +32,7 @@ BENCHES = {
     "fig2": fig2_capacity.main,
     "fig3": fig3_stability.main,
     "fig4": fig4_staleness.main,
+    "fig_multizone": fig_multizone.main,
     "gossip": gossip_throughput.main,
     "roofline": roofline_table.main,
     "sim_engine": sim_engine.main,

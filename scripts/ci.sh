@@ -10,8 +10,18 @@
 # dispatch) are exercised in-process — not only inside the dedicated
 # subprocess tests.
 #
-# Usage:  bash scripts/ci.sh [--bench-smoke] [extra pytest args...]
+# Tests run in two lanes, split by the `slow` pytest marker
+# (registered in pytest.ini): the default tier-1 lane excludes
+# slow-marked tests (the multi-thousand-slot simulation validations);
+# --nightly runs the whole suite, slow tests included. Each pytest run
+# ends with a TEST-SUMMARY line (test count + wall time), so collection
+# regressions (tests silently dropping out of a lane) are visible in
+# the log diff.
 #
+# Usage:  bash scripts/ci.sh [--bench-smoke] [--nightly] [extra pytest args...]
+#
+#   --nightly       run the full suite including `slow`-marked tests
+#                   (the tier split: tier-1 excludes them).
 #   --bench-smoke   additionally gate on sweep performance: run the quick
 #                   sim_engine bench and fail if (a) the same-run
 #                   reduced-sweep/serial speedup ratio regressed more than 30%
@@ -30,15 +40,33 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BENCH_SMOKE=0
+NIGHTLY=0
 ARGS=()
 for a in "$@"; do
-  if [ "$a" = "--bench-smoke" ]; then BENCH_SMOKE=1; else ARGS+=("$a"); fi
+  case "$a" in
+    --bench-smoke) BENCH_SMOKE=1 ;;
+    --nightly)     NIGHTLY=1 ;;
+    *)             ARGS+=("$a") ;;
+  esac
 done
 
+if [ "$NIGHTLY" = "1" ]; then
+  LANE="nightly"
+  MARKER=()
+else
+  LANE="tier1"
+  MARKER=(-m "not slow")
+fi
+
 for DC in 1 2; do
-  echo "=== tier-1: pytest (xla_force_host_platform_device_count=$DC) ==="
+  echo "=== $LANE: pytest (xla_force_host_platform_device_count=$DC) ==="
+  T0=$(date +%s)
   XLA_FLAGS="--xla_force_host_platform_device_count=$DC" \
-    python -m pytest -x -q "${ARGS[@]+"${ARGS[@]}"}"
+    python -m pytest -x -q "${MARKER[@]+"${MARKER[@]}"}" \
+    "${ARGS[@]+"${ARGS[@]}"}" | tee /tmp/ci_pytest_$DC.log
+  T1=$(date +%s)
+  TAIL=$(grep -E "passed|failed|error" /tmp/ci_pytest_$DC.log | tail -1)
+  echo "TEST-SUMMARY lane=$LANE devices=$DC wall_s=$((T1 - T0)) :: $TAIL"
   echo
 done
 

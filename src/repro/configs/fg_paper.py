@@ -67,10 +67,19 @@ def paper_params(
     t0: float = T0_DEFAULT,
     k: float = K_DEFAULT,
     tau_l: float = TAU_L,
+    zones=None,
 ) -> FGParams:
-    """FGParams for the paper scenario. W defaults to M (w = 1, as in §VI)."""
+    """FGParams for the paper scenario. W defaults to M (w = 1, as in §VI).
+
+    ``zones`` optionally attaches a multi-zone ``ZoneSet``
+    (``repro.core.zones``) for the coupled multi-zone solvers; ``N`` and
+    ``alpha`` still describe the paper's single default RZ (per-zone
+    populations and exit rates are derived from the geometry by
+    ``solve_fixed_point_multizone``).
+    """
     alpha = 2.0 * DENSITY * speed * RZ_RADIUS
     return FGParams(
         N=N_RZ, alpha=alpha, lam=lam, Lam=Lam, M=M, W=W if W is not None else M,
         T_T=T_T, T_M=T_M, t0=t0, L=L, C=CHANNEL_RATE, k=k, tau_l=tau_l,
+        zones=zones,
     )

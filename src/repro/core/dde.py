@@ -41,6 +41,7 @@ __all__ = [
     "DDESolution",
     "solve_observation_availability",
     "solve_observation_availability_batch",
+    "solve_observation_availability_multizone",
 ]
 
 
@@ -140,6 +141,7 @@ def _integrate_batch(
     n_total: int,
     buf_len: int,
     dt: float,
+    couple=None,                 # optional (P, P) zone coupling matrix
 ):
     """One scan over the shared τ grid for every point at once.
 
@@ -150,6 +152,18 @@ def _integrate_batch(
     the plateau ``o0`` — exactly the Eq. (6) history). Points with
     ``start >= n_total`` (unstable: infinite delays) never activate and
     emit zero. Bitwise the same trajectory as the scalar ``_integrate``.
+
+    ``couple`` (zero-diagonal, used by the multi-zone solver) adds the
+    inter-point exchange term
+
+        do_i += sum_j couple[i, j] * (o_j(τ) - o_i(τ)),
+
+    where the neighbour value ``o_j(τ)`` is point j's *emitted*
+    trajectory — 0 before its ``d_I``, the Eq. (6) plateau on the
+    history interval, the integrated value after — so a still-plateaued
+    zone couples through its plateau, exactly what its members look
+    like to migrants at that age. ``couple=None`` (the batched-sweep
+    path) traces the identical program as before the parameter existed.
     """
     p_count = o0.shape[0]
     lanes = jnp.arange(buf_len)
@@ -164,6 +178,9 @@ def _integrate_batch(
         )
         do = coeff * ((1.0 - a) * o + a * o_delayed * (1.0 - o_delayed)) \
             - leak * o
+        if couple is not None:
+            cur = jnp.where(t < n_pre, 0.0, jnp.where(active, o, o0))
+            do = do + couple @ cur - jnp.sum(couple, axis=1) * o
         o_new = jnp.clip(o + dt * do, 0.0, 1.0)
         write = jnp.mod(k, buf_len)
         buf = jnp.where(
@@ -242,5 +259,78 @@ def solve_observation_availability_batch(
         jnp.asarray(start, jnp.int32), jnp.asarray(n_pre, jnp.int32),
         jnp.asarray(n_delay, jnp.int32),
         n_total, buf_len, dt,
+    )
+    return DDESolution(tau=tau, o=o, dt=dt)
+
+
+def solve_observation_availability_multizone(
+    p: FGParams,
+    mz,
+    *,
+    dt: float = 0.05,
+    tau_max: float | None = None,
+) -> DDESolution:
+    """Zone-coupled Theorem-1 DDE for a multi-zone operating point.
+
+    ``mz`` is a ``repro.core.meanfield.MultizoneSolution``. Each zone
+    integrates Eq. (5) with its own coefficients (``a_z``, ``b_z``,
+    ``S_z``, ``T_S_z``, leak ``alpha_z w / N_z``) and its own Eq. (6)
+    initial condition (``o0_z = Lam_z / ceil(a_z N_z)`` on
+    ``[d_I_z, d_I_z + d_M_z]``), plus the migration exchange term
+
+        + sum_{z'} (w R[z, z'] a_{z'} / (a_z N_z)) (o_{z'} - o_z):
+
+    holders enter zone ``z`` from ``z'`` at rate ``R[z, z'] a_{z'}``
+    (the state-transferring migrations of the coupled fixed point)
+    carrying incorporation probability ``o_{z'}``, replacing that
+    fraction of the ``a_z N_z`` holder population per second. With a
+    zero off-diagonal ``R`` (disjoint zones) every row equals the
+    uncoupled per-zone solve. Unstable zones (infinite delays) emit
+    o == 0 and couple as empty.
+
+    Returns a ``DDESolution`` whose ``o`` has a leading zone axis;
+    ``point(z)``/``integral`` work per zone as in the batched solver.
+    """
+    tau_max = float(tau_max if tau_max is not None else p.tau_l)
+    n_total = max(int(round(tau_max / dt)) + 1, 2)
+    tau = jnp.arange(n_total) * dt
+
+    d_I = np.asarray(mz.d_I, dtype=np.float64)
+    d_M = np.asarray(mz.d_M, dtype=np.float64)
+    finite = np.isfinite(d_I) & np.isfinite(d_M)
+    d_I0 = np.where(finite, d_I, 0.0)
+    d_M0 = np.where(finite, d_M, 0.0)
+    n_pre = np.minimum(np.round(d_I0 / dt).astype(np.int64), n_total)
+    n_plateau = np.minimum(
+        np.round(d_M0 / dt).astype(np.int64) + 1, n_total - n_pre
+    )
+    n_delay = np.maximum(np.round(d_M0 / dt).astype(np.int64), 1)
+    n_pre = np.where(finite, n_pre, n_total)
+    n_plateau = np.where(finite, n_plateau, 0)
+    start = n_pre + n_plateau
+    n_delay = np.where(start < n_total, n_delay, 1)
+    buf_len = int(n_delay.max())
+
+    a = jnp.asarray(mz.a)
+    N_z = jnp.asarray(mz.N_z)
+    o0 = jnp.asarray(mz.Lam_z) / jnp.ceil(jnp.maximum(a * N_z, 1.0))
+    o0 = jnp.where(jnp.asarray(finite), o0, 0.0)
+    coeff = jnp.asarray(mz.b) * jnp.asarray(mz.S) * p.w * p.w \
+        / jnp.maximum(jnp.asarray(mz.T_S), 1e-12)
+    leak = jnp.asarray(mz.alpha_z) * p.w / N_z
+
+    R = np.asarray(mz.R, dtype=np.float64)
+    R_off = R - np.diag(np.diag(R))
+    a_np = np.asarray(mz.a, dtype=np.float64)
+    holders = np.maximum(a_np * np.asarray(mz.N_z, dtype=np.float64), 1e-12)
+    couple = p.w * R_off * a_np[None, :] / holders[:, None]
+    couple = np.where(finite[:, None] & finite[None, :], couple, 0.0)
+
+    o = _integrate_batch(
+        coeff, a, leak, o0.astype(jnp.float32),
+        jnp.asarray(start, jnp.int32), jnp.asarray(n_pre, jnp.int32),
+        jnp.asarray(n_delay, jnp.int32),
+        n_total, buf_len, dt,
+        couple=jnp.asarray(couple, jnp.float32),
     )
     return DDESolution(tau=tau, o=o, dt=dt)

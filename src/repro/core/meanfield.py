@@ -30,15 +30,19 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.mobility import ContactModel
+from repro.core.zones import ZoneSet, migration_rate_matrix, union_area
 
 __all__ = [
     "FGParams",
     "MeanFieldSolution",
+    "MultizoneSolution",
     "transfer_stats",
     "solve_fixed_point",
     "solve_fixed_point_batch",
+    "solve_fixed_point_multizone",
     "merge_arrival_rate",
     "queueing_delays",
     "stability_lhs",
@@ -64,6 +68,12 @@ class FGParams:
     C: float            # D2D channel rate [bits/s]
     k: float            # coefficients-per-bit constant (capacity L/k)
     tau_l: float        # observation lifetime [s]
+    zones: ZoneSet | None = None   # optional multi-zone RZ geometry; the
+                                   # default None is the paper's single
+                                   # disc (N/alpha describe it directly).
+                                   # ``solve_fixed_point_multizone`` and
+                                   # the zone-coupled DDE read it when no
+                                   # explicit ZoneSet is passed.
 
     @property
     def w(self) -> float:
@@ -139,11 +149,19 @@ def transfer_stats(
     )
 
 
+def _busy_core(T_S, *, g, alpha, N):
+    """Array-based Lemma 1 busy probability shared by every solver:
+    b = K - sqrt(K^2 - 1), K = 1 + 1/(4 g T_S) + alpha/(2 g N) — one
+    implementation, so the scalar, batched, and multizone fixed points
+    cannot drift apart. ``T_S`` must already be clamped away from 0."""
+    K = 1.0 + 1.0 / (4.0 * g * T_S) + alpha / (2.0 * g * N)
+    return K - jnp.sqrt(jnp.maximum(K * K - 1.0, 0.0))
+
+
 def _busy_prob(T_S: jnp.ndarray, p: FGParams, contact: ContactModel) -> jnp.ndarray:
     """b = K - sqrt(K^2 - 1), K = 1 + 1/(4 g T_S) + alpha/(2 g N)  (Lemma 1)."""
-    g = contact.g
-    K = 1.0 + 1.0 / (4.0 * g * jnp.maximum(T_S, _EPS)) + p.alpha / (2.0 * g * p.N)
-    return K - jnp.sqrt(jnp.maximum(K * K - 1.0, 0.0))
+    return _busy_core(jnp.maximum(T_S, _EPS), g=contact.g, alpha=p.alpha,
+                      N=p.N)
 
 
 @partial(jax.jit, static_argnames=("iters",))
@@ -173,9 +191,7 @@ def _fixed_point_iterate(
 
     def body(_, a):
         S, T_S = stats(a)
-        K = 1.0 + 1.0 / (4.0 * g * T_S) + alpha / (2.0 * g * N)
-        b = K - jnp.sqrt(jnp.maximum(K * K - 1.0, 0.0))
-        b = jnp.maximum(b, _EPS)
+        b = jnp.maximum(_busy_core(T_S, g=g, alpha=alpha, N=N), _EPS)
         denom = b * N * S * w
         H = 1.0 - T_S * (alpha + lam * Lam) / denom
         a_new = 0.5 * (H + jnp.sqrt(H * H + 4.0 * T_S * lam * Lam / denom))
@@ -184,8 +200,7 @@ def _fixed_point_iterate(
 
     a = jax.lax.fori_loop(0, iters, body, a0)
     S, T_S = stats(a)
-    K = 1.0 + 1.0 / (4.0 * g * T_S) + alpha / (2.0 * g * N)
-    b = jnp.maximum(K - jnp.sqrt(jnp.maximum(K * K - 1.0, 0.0)), _EPS)
+    b = jnp.maximum(_busy_core(T_S, g=g, alpha=alpha, N=N), _EPS)
     return a, b, S, T_S
 
 
@@ -294,6 +309,166 @@ def stability_lhs(
     return _stability(
         r, M=p.M, w=p.w, lam=p.lam, Lam=p.Lam, N=p.N, alpha=p.alpha,
         T_T=p.T_T, T_M=p.T_M,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class MultizoneSolution:
+    """Coupled per-zone mean-field operating point (k zones).
+
+    Every per-zone field carries a leading ``(k,)`` axis; ``R`` is the
+    inter-zone migration-rate matrix the zones are coupled through
+    (``repro.core.zones.migration_rate_matrix`` layout: off-diagonal
+    ``R[z, z']`` = state-transferring migration flux between ``z`` and
+    ``z'``, diagonal = total zone exit rate ``alpha_z``).
+    """
+
+    a: jnp.ndarray          # (k,) per-zone model availability
+    b: jnp.ndarray          # (k,) busy probability
+    S: jnp.ndarray          # (k,) transfer success probability
+    T_S: jnp.ndarray        # (k,) mean exchange time [s]
+    r: jnp.ndarray          # (k,) merging-task arrival rate [1/s]
+    d_M: jnp.ndarray        # (k,) mean merge delay [s]
+    d_I: jnp.ndarray        # (k,) mean incorporation delay [s]
+    stability: jnp.ndarray  # (k,) Eq. (3) LHS per zone
+    rho: jnp.ndarray        # (k,) compute utilization per zone
+    N_z: jnp.ndarray        # (k,) mean nodes per zone
+    alpha_z: jnp.ndarray    # (k,) total zone exit rate [1/s]
+    Lam_z: jnp.ndarray      # (k,) mean simultaneous observers per zone
+    R: jnp.ndarray          # (k, k) migration-rate matrix [nodes/s]
+
+    @property
+    def stable(self) -> jnp.ndarray:
+        return self.stability <= 1.0
+
+    def zone(self, z: int) -> MeanFieldSolution:
+        """The ``MeanFieldSolution`` view of zone ``z``."""
+        return MeanFieldSolution(
+            a=self.a[z], b=self.b[z], S=self.S[z], T_S=self.T_S[z],
+            r=self.r[z], d_M=self.d_M[z], d_I=self.d_I[z],
+            stability=self.stability[z], rho=self.rho[z],
+        )
+
+
+def solve_fixed_point_multizone(
+    p: FGParams,
+    contact: ContactModel,
+    zones: ZoneSet | None = None,
+    *,
+    density: float,
+    speed: float,
+    t: float = 0.0,
+    area_side: float | None = None,
+    iters: int = 200,
+) -> MultizoneSolution:
+    """Coupled per-zone Lemma 1-3 fixed point for a ``ZoneSet``.
+
+    Each zone runs the paper's single-RZ balance with zone-local
+    population ``N_z = density * pi * r_z**2`` and exit rate ``alpha_z``,
+    plus two multi-zone couplings:
+
+    * **migration injection** — the Lemma 1 quadratic comes from the
+      holder balance ``G a (1-a) + lam*Lam (1-a) - alpha a = 0`` with
+      ``G = b N S w / T_S`` (gossip spread, training injection,
+      departure loss). Nodes entering zone ``z`` through the part of its
+      boundary covered by zone ``z'`` are members of ``z'`` at the
+      crossing — they carry the model with probability ``a_{z'}`` (the
+      state-transferring migrations; entrants from uncovered boundary
+      carry nothing, their state was dropped). This adds the source term
+      ``inj_z = sum_{z' != z} R[z, z'] a_{z'}`` and the per-zone closed
+      form becomes
+
+          a_z = [(G - lam*Lam_z - alpha_z)
+                 + sqrt((G - lam*Lam_z - alpha_z)^2
+                        + 4 G (lam*Lam_z + inj_z))] / (2 G),
+
+      which collapses to the paper's Lemma 1 expression at ``inj = 0``
+      (single zone);
+    * **observer splitting** — the simulator draws the ``Lam``
+      simultaneous observers among the members of the *union* of zones,
+      so zone ``z`` receives ``Lam_z = Lam * N_z / N_union`` of them in
+      the mean (``N_union`` from pairwise inclusion-exclusion of the
+      disc areas; triple overlaps are ignored).
+
+    The damped iteration updates all zones simultaneously (a ``(k,)``
+    vector state); Lemma 2-3 quantities are then evaluated per zone with
+    its ``(N_z, alpha_z, Lam_z)``. All zones share the contact model
+    ``contact`` — with a uniform stationary node density the contact
+    rate ``g`` is density-set and zone-independent.
+
+    ``zones`` is a ``repro.core.zones.ZoneSet`` (default:
+    ``p.zones``); ``density``/``speed`` are the simulation-area node
+    density and node speed the migration fluxes are derived from (see
+    ``migration_rate_matrix``).
+
+    Moving zones: the coupling geometry (migration arcs, union area) is
+    evaluated at the zone positions of time ``t`` (default 0; pass
+    ``area_side`` so drifting centers reflect into the area). Zone
+    overlaps — hence the fixed point — change as drifting zones move, so
+    for a trajectory-level answer solve at several ``t`` and average.
+    """
+    if zones is None:
+        zones = p.zones
+    if zones is None:
+        raise ValueError(
+            "no ZoneSet: pass zones= or set FGParams.zones"
+        )
+    R = np.asarray(migration_rate_matrix(
+        zones, density=density, speed=speed, t=t, area_side=area_side,
+    ))
+    k = zones.k
+    radii = np.asarray(zones.radii, dtype=np.float64)
+    N_z = density * np.pi * radii**2
+    alpha_z = np.diag(R).copy()
+    R_off = R - np.diag(alpha_z)
+
+    # union population by pairwise inclusion-exclusion (lens areas), at
+    # the same time-t geometry as the migration arcs
+    centers = (
+        zones.centers_at(t, area_side)
+        if zones.moving and area_side is not None
+        else np.asarray(zones.centers, dtype=np.float64)
+    )
+    Lam_z = p.Lam * N_z / max(density * union_area(centers, radii), _EPS)
+
+    N_zj = jnp.asarray(N_z, jnp.float32)
+    alpha_j = jnp.asarray(alpha_z, jnp.float32)
+    Lam_j = jnp.asarray(Lam_z, jnp.float32)
+    R_off_j = jnp.asarray(R_off, jnp.float32)
+    M, w, lam = float(p.M), p.w, p.lam
+    g = contact.g
+
+    def stats(a):
+        S, T_S = jax.vmap(
+            lambda a_z: _transfer_stats_core(
+                a_z, M=M, w=w, t0=p.t0, T_L=p.T_L,
+                t_grid=contact.t_grid, pdf=contact.pdf,
+                weights=contact.weights,
+            )
+        )(a)
+        return jnp.maximum(S, _EPS), jnp.maximum(T_S, _EPS)
+
+    def body(_, a):
+        S, T_S = stats(a)
+        b = jnp.maximum(_busy_core(T_S, g=g, alpha=alpha_j, N=N_zj), _EPS)
+        G = jnp.maximum(b * N_zj * S * w / T_S, _EPS)
+        inj = R_off_j @ a                    # inj_z = sum_z' R[z, z'] a_z'
+        lt = lam * Lam_j
+        H = G - lt - alpha_j
+        a_new = (H + jnp.sqrt(H * H + 4.0 * G * (lt + inj))) / (2.0 * G)
+        return 0.5 * a + 0.5 * jnp.clip(a_new, _EPS, 1.0)
+
+    a = jax.lax.fori_loop(0, iters, body, jnp.full((k,), 0.5))
+    S, T_S = stats(a)
+    b = jnp.maximum(_busy_core(T_S, g=g, alpha=alpha_j, N=N_zj), _EPS)
+
+    r = _merge_rate(a, b, S, M=M, w=w, g=g)
+    kw = dict(M=M, w=w, lam=lam, Lam=Lam_j, N=N_zj, T_T=p.T_T, T_M=p.T_M)
+    d_M, d_I = _delays(r, **kw)
+    lhs, rho = _stability(r, alpha=alpha_j, **kw)
+    return MultizoneSolution(
+        a=a, b=b, S=S, T_S=T_S, r=r, d_M=d_M, d_I=d_I, stability=lhs,
+        rho=rho, N_z=N_zj, alpha_z=alpha_j, Lam_z=Lam_j, R=jnp.asarray(R),
     )
 
 

@@ -1,0 +1,242 @@
+"""Multi-zone Replication-Zone geometry (``ZoneSet``) and the analytic
+inter-zone migration-rate matrix coupling the per-zone mean-field models.
+
+The paper analyzes a *single* static disc-shaped Replication Zone. The
+Floating Content systems it builds on (DeepFloat, Manzo et al. 2019)
+manage many — possibly moving — anchor zones at once; a :class:`ZoneSet`
+describes ``k`` discs with per-zone centers and radii plus an optional
+per-zone drift velocity. It is a frozen, hashable, pure-Python record so
+it can ride inside the static ``SimConfig`` jit argument of the
+simulation engine and inside ``FGParams`` for the mean-field side.
+
+Zone-coupling semantics (shared by the simulator and the mean-field
+model):
+
+* a node is a *member* of every zone whose disc contains it (overlap
+  regions belong to all covering zones);
+* protocol state (model instances, incorporation masks, queues) is
+  dropped exactly when a node leaves the **union** of all zones —
+  crossing directly from one zone into another (overlap crossing)
+  *transfers* the state;
+* D2D exchanges require the two endpoints to **share** at least one
+  zone: each zone is its own Floating Gossip system, coupled to the
+  others only through node migration.
+
+Migration-rate matrix
+---------------------
+
+:func:`migration_rate_matrix` derives the coupling from the same
+kinetic-gas boundary-flux argument the paper uses for its RZ exit rate
+``alpha = D v P / pi`` (uniform stationary node density ``D``, isotropic
+headings at mean speed ``v``, boundary perimeter ``P``; the paper's
+``alpha = 2 D v r`` is this formula at ``P = 2 pi r``). For zones ``z !=
+z'``:
+
+    R[z, z'] = D * v_eff(z or z') / pi * len(arc of the boundary of z
+               that lies strictly inside z')   [nodes / s]
+
+i.e. the flux of nodes crossing *out* of zone ``z`` through the part of
+its boundary covered by ``z'`` — exactly the transitions after which the
+mover is still a member of ``z'`` (state transferred, not dropped). The
+needed arc length has a closed form for two discs at center distance
+``d``: the half-opening angle of the chord of circle ``z`` cut by circle
+``z'`` is ``theta = arccos((d^2 + r_z^2 - r_z'^2) / (2 d r_z))`` and the
+arc length is ``2 theta r_z`` (0 when disjoint, the full perimeter when
+``z`` is contained in ``z'``).
+
+The diagonal carries the **total** exit rate ``alpha_z = D v_eff 2 r_z``
+(flux through the whole perimeter) — the per-zone model-loss rate of the
+coupled fixed point; exits that keep no zone membership happen at rate
+``alpha_z - sum_{z'} R[z, z']`` (clamped at 0: overlapping covers can
+double-count the covered boundary, a deliberate union upper bound).
+
+Moving zones enter through ``v_eff``: a zone drifting at speed ``u``
+sees nodes at the mean *relative* speed ``E|v - u|`` over isotropic node
+headings (:func:`mean_relative_speed`, a short quadrature; equal to
+``v`` at ``u = 0``), which rescales both its exit rate and its incident
+arcs' fluxes. Relative *zone-zone* drift changes which boundary arcs
+overlap over time; the matrix is evaluated at the zone positions of
+``t = 0`` (callers can re-evaluate at other times via
+``ZoneSet.centers_at``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = [
+    "ZoneSet",
+    "single_zone",
+    "mean_relative_speed",
+    "migration_rate_matrix",
+    "lens_area",
+    "union_area",
+]
+
+#: Zone membership words are one uint32 bit per zone.
+MAX_ZONES = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class ZoneSet:
+    """``k`` disc Replication Zones, optionally drifting.
+
+    Plain tuples (not arrays) keep the record hashable, so it can live
+    inside the static ``SimConfig`` jit argument: two equal zone sets
+    share one compiled program.
+    """
+
+    centers: tuple[tuple[float, float], ...]   # (k, 2) disc centers [m]
+    radii: tuple[float, ...]                   # (k,) disc radii [m]
+    drift: tuple[tuple[float, float], ...] = ()  # (k, 2) velocities [m/s]
+
+    def __post_init__(self):
+        k = len(self.centers)
+        if not 1 <= k <= MAX_ZONES:
+            raise ValueError(f"need 1..{MAX_ZONES} zones, got {k}")
+        if len(self.radii) != k:
+            raise ValueError("centers and radii length mismatch")
+        if self.drift and len(self.drift) != k:
+            raise ValueError("drift must be empty or match the zone count")
+        if any(r <= 0 for r in self.radii):
+            raise ValueError("zone radii must be positive")
+
+    @property
+    def k(self) -> int:
+        return len(self.centers)
+
+    @property
+    def moving(self) -> bool:
+        """True iff any zone has a nonzero drift velocity."""
+        return any(vx != 0.0 or vy != 0.0 for vx, vy in self.drift)
+
+    def drift_speeds(self) -> np.ndarray:
+        """(k,) drift speed magnitudes [m/s] (zeros when static)."""
+        if not self.drift:
+            return np.zeros(self.k)
+        return np.hypot(*np.asarray(self.drift, dtype=np.float64).T)
+
+    def centers_at(self, t: float, area_side: float) -> np.ndarray:
+        """(k, 2) zone centers at time ``t``, reflected into the area.
+
+        Drifting centers bounce off the area boundary exactly like the
+        mobility models' nodes do (specular reflection), via the
+        triangle-wave fold of ``c + u t`` into ``[0, side]``. Static
+        zone sets return their centers verbatim (no fold — callers
+        relying on bitwise-stable static geometry stay exact).
+        """
+        c = np.asarray(self.centers, dtype=np.float64)
+        if not self.moving:
+            return c
+        u = np.asarray(self.drift, dtype=np.float64)
+        raw = c + u * float(t)
+        m = np.mod(raw, 2.0 * area_side)
+        return area_side - np.abs(area_side - m)
+
+
+def single_zone(center: tuple[float, float], radius: float) -> ZoneSet:
+    """The legacy geometry: one static disc."""
+    return ZoneSet(centers=(tuple(center),), radii=(float(radius),))
+
+
+def mean_relative_speed(v: float, u: float, n_theta: int = 720) -> float:
+    """``E|v - u|`` for node speed ``v`` with isotropic heading against a
+    translating frame of speed ``u`` (a drifting zone boundary).
+
+    ``E = (1/2pi) int sqrt(v^2 + u^2 - 2 v u cos t) dt``; equals ``v``
+    exactly at ``u = 0`` and tends to ``u`` for ``u >> v``. Midpoint
+    quadrature — the integrand is smooth and periodic, so it converges
+    spectrally.
+    """
+    if u == 0.0:
+        return float(v)
+    theta = (np.arange(n_theta) + 0.5) * (2.0 * math.pi / n_theta)
+    return float(
+        np.mean(np.sqrt(v * v + u * u - 2.0 * v * u * np.cos(theta)))
+    )
+
+
+def lens_area(c1, r1, c2, r2) -> float:
+    """Intersection area of two discs (0 when disjoint)."""
+    d = math.hypot(c1[0] - c2[0], c1[1] - c2[1])
+    if d >= r1 + r2:
+        return 0.0
+    if d <= abs(r1 - r2):
+        rm = min(r1, r2)
+        return math.pi * rm * rm
+    a1 = math.acos((d * d + r1 * r1 - r2 * r2) / (2 * d * r1))
+    a2 = math.acos((d * d + r2 * r2 - r1 * r1) / (2 * d * r2))
+    return (r1 * r1 * (a1 - math.sin(2 * a1) / 2)
+            + r2 * r2 * (a2 - math.sin(2 * a2) / 2))
+
+
+def union_area(centers: np.ndarray, radii: np.ndarray) -> float:
+    """Area of the union of discs by pairwise inclusion-exclusion.
+
+    Exact for pairwise overlaps; triple overlaps are ignored (an upper
+    bound on the subtracted area, i.e. a lower bound on the union)."""
+    area = float(np.sum(np.pi * np.asarray(radii) ** 2))
+    for i in range(len(radii)):
+        for j in range(i + 1, len(radii)):
+            area -= lens_area(centers[i], radii[i], centers[j], radii[j])
+    return area
+
+
+def _arc_inside(c_z, r_z, c_o, r_o) -> float:
+    """Length of the boundary arc of disc ``z`` lying inside disc ``o``."""
+    d = math.hypot(c_z[0] - c_o[0], c_z[1] - c_o[1])
+    if d >= r_z + r_o:                       # disjoint (touching = measure 0)
+        return 0.0
+    if d + r_z <= r_o:                       # z contained in o
+        return 2.0 * math.pi * r_z
+    if d + r_o <= r_z:                       # o contained in z: boundary of z
+        return 0.0                           # is entirely outside o
+    cos_t = (d * d + r_z * r_z - r_o * r_o) / (2.0 * d * r_z)
+    theta = math.acos(min(1.0, max(-1.0, cos_t)))
+    return 2.0 * theta * r_z
+
+
+def migration_rate_matrix(
+    zones: ZoneSet,
+    *,
+    density: float,
+    speed: float,
+    t: float = 0.0,
+    area_side: float | None = None,
+) -> np.ndarray:
+    """(k, k) inter-zone migration/exit rate matrix [nodes/s].
+
+    Off-diagonal ``R[z, z']``: rate of nodes crossing out of zone ``z``
+    through the part of its boundary covered by zone ``z'`` (they remain
+    members of ``z'`` — the state-transferring migrations). Diagonal
+    ``R[z, z]``: the *total* exit rate of zone ``z`` (the per-zone
+    ``alpha`` of the coupled fixed point). See the module docstring for
+    the boundary-flux derivation and the moving-zone ``v_eff``
+    correction.
+
+    ``t``/``area_side`` place drifting zones before measuring overlaps
+    (ignored for static sets).
+    """
+    k = zones.k
+    centers = (
+        zones.centers_at(t, area_side)
+        if zones.moving and area_side is not None
+        else np.asarray(zones.centers, dtype=np.float64)
+    )
+    radii = np.asarray(zones.radii, dtype=np.float64)
+    v_eff = np.asarray(
+        [mean_relative_speed(speed, u) for u in zones.drift_speeds()]
+    )
+    R = np.zeros((k, k))
+    for z in range(k):
+        flux = density * v_eff[z] / math.pi          # per unit arc length
+        R[z, z] = flux * 2.0 * math.pi * radii[z]    # = 2 D v_eff r_z
+        for o in range(k):
+            if o != z:
+                R[z, o] = flux * _arc_inside(
+                    centers[z], radii[z], centers[o], radii[o]
+                )
+    return R

@@ -1,8 +1,11 @@
 """Tiled Pallas pairwise-contact kernel (plus its ``jnp`` oracle).
 
 The per-slot hot path of the simulator is the O(N²) pairwise sweep:
-squared distances, the transmission-radius threshold, the RZ membership
-mask, and the mutual-best candidate reduction used for pair matching.
+squared distances, the transmission-radius threshold, the zone-membership
+gate (a pair is admissible iff the two nodes share at least one
+Replication Zone — per-node uint32 zone *words*, whose intersection test
+is bitwise the historical ``in_rz_i & in_rz_j`` at a single zone), and
+the mutual-best candidate reduction used for pair matching.
 The kernel fuses all four so that neither the (N, N) float32 distance
 matrix nor the (N, N) boolean contact matrix ever materializes in HBM —
 per i-row tile it emits
@@ -50,6 +53,7 @@ __all__ = [
     "pairwise_contacts_ref",
     "pairwise_close_ref",
     "candidate_best_ref",
+    "zone_words",
 ]
 
 _FAR = 1e9  # padding coordinate: d2 = O(1e18) is finite and > any r_tx²
@@ -57,15 +61,48 @@ _FAR = 1e9  # padding coordinate: d2 = O(1e18) is finite and > any r_tx²
 
 
 
+def _as_member(in_rz: jnp.ndarray) -> jnp.ndarray:
+    """Normalize RZ membership to the multi-zone ``(N, K)`` bool form.
+
+    Every contact entry point accepts either the legacy single-zone
+    ``(N,)`` bool vector (treated as one zone) or a ``(N, K)`` per-zone
+    membership matrix (K <= 32 discs of a ``ZoneSet``)."""
+    return in_rz[:, None] if in_rz.ndim == 1 else in_rz
+
+
+def zone_words(in_rz: jnp.ndarray) -> jnp.ndarray:
+    """(N,) uint32 zone-membership words (bit ``z`` = member of zone z).
+
+    Accepts ``(N,)`` bool (legacy single zone → bit 0) or ``(N, K)``
+    bool. Two nodes may exchange iff their words intersect — for a
+    single zone that is bitwise the historical ``in_rz_i & in_rz_j``
+    gate."""
+    from repro.sim.compute import pack_mask
+
+    member = _as_member(in_rz)
+    if member.shape[1] > 32:
+        raise ValueError("zone membership words support at most 32 zones")
+    return pack_mask(member)[..., 0]
+
+
 def pairwise_close_ref(pos, in_rz, r_tx2):
     """Shared stage of the pairwise sweep: packed contact matrix + d².
 
-    Everything here depends only on positions and RZ membership — in a
+    Everything here depends only on positions and zone membership — in a
     (scenario x seed) sweep batch these are functions of the per-seed
     PRNG chain alone, so ``vmap`` computes this stage once per seed and
     broadcasts it across the scenario axis. Returns ``(closew, d2b3)``:
     the bit-packed contact matrix and the padded bitcast-d² context
     ``(N, ceil(N/32), 32)`` consumed by :func:`candidate_best_ref`.
+
+    ``in_rz`` may be the legacy ``(N,)`` bool vector or a ``(N, K)``
+    multi-zone membership matrix (see :func:`_as_member`); the contact
+    gate is *zone-sharing* — ``close[i, j]`` requires i and j to be
+    members of at least one common zone. In the packed word domain that
+    is a per-row OR of the per-zone column masks: row i's admissible
+    columns are ``OR_z (member[i, z] ? colw[z] : 0)`` with ``colw[z]``
+    the packed member set of zone z — for K = 1 bitwise the historical
+    ``where(in_rz_i, inside & rzw, 0)`` single-RZ gating.
 
     ``closew[i] >> j & 1`` is bitwise ``close[i, j]`` of the dense matrix
     (same subtraction order), so the engine extracts partner-proximity
@@ -73,17 +110,21 @@ def pairwise_close_ref(pos, in_rz, r_tx2):
     """
     from repro.sim.compute import pack_mask, packed_onehot, shared_barrier
 
+    member = _as_member(in_rz)
     n = pos.shape[0]
     nw = (n + 31) // 32
     dx = pos[:, None, 0] - pos[None, :, 0]
     dy = pos[:, None, 1] - pos[None, :, 1]
     d2 = shared_barrier(dx * dx + dy * dy)
     inside = pack_mask(d2 <= r_tx2)                      # (N, NW)
-    rzw = pack_mask(in_rz)                               # (NW,)
+    colw = pack_mask(member.T)                           # (K, NW)
     diagw = packed_onehot(jnp.arange(n), n)              # constant-folded
-    closew = jnp.where(
-        in_rz[:, None], inside & rzw[None, :] & ~diagw, jnp.uint32(0)
-    )
+    rowmask = jnp.zeros((n, nw), jnp.uint32)
+    for z in range(member.shape[1]):                     # K is static, small
+        rowmask = rowmask | jnp.where(
+            member[:, z, None], colw[z][None, :], jnp.uint32(0)
+        )
+    closew = inside & rowmask & ~diagw
     d2b = jax.lax.bitcast_convert_type(d2, jnp.uint32)
     d2b3 = shared_barrier(jnp.pad(
         d2b, ((0, 0), (0, nw * 32 - n)),
@@ -168,7 +209,8 @@ def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2):
 
     Args:
       pos:    (N, 2) float32 positions.
-      in_rz:  (N,) bool RZ membership.
+      in_rz:  (N,) bool RZ membership, or (N, K) bool per-zone
+              membership (the contact gate is then zone-*sharing*).
       elig:   (N,) bool pairing eligibility (idle, in RZ).
       prevw:  (N, ceil(N/32)) packed previous-slot contact matrix.
       r_tx2:  squared transmission radius.
@@ -181,7 +223,7 @@ def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2):
     return closew, best_j, has
 
 
-def _kernel(xi_ref, yi_ref, x_ref, y_ref, rzi_ref, rz_ref, eligi_ref,
+def _kernel(xi_ref, yi_ref, x_ref, y_ref, zwi_ref, zw_ref, eligi_ref,
             elig_ref, prevw_ref, closew_ref, bestj_ref, has_ref, *,
             r_tx2, blk_i, n_pad):
     # the pack/unpack helpers are plain jnp ops, valid inside the kernel
@@ -198,9 +240,11 @@ def _kernel(xi_ref, yi_ref, x_ref, y_ref, rzi_ref, rz_ref, eligi_ref,
 
     row = ti * blk_i + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 0)
     col = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    # zone-sharing gate on the uint32 membership words — for a single
+    # zone the words are 0/1 and this is bitwise the old in_rz_i & in_rz_j
     close = (
         (d2 <= r_tx2)
-        & (rzi_ref[0] != 0)[:, None] & (rz_ref[0] != 0)[None, :]
+        & ((zwi_ref[0][:, None] & zw_ref[0][None, :]) != 0)
         & (row != col)
     )
 
@@ -222,9 +266,14 @@ def pairwise_contacts(pos, in_rz, elig, prevw, r_tx2, *, blk_i: int = 128,
                       interpret: bool = False):
     """Fused Pallas pairwise-contact pass (see module docstring).
 
+    ``in_rz`` is either the legacy ``(N,)`` bool membership, a ``(N, K)``
+    multi-zone membership matrix, or a precomputed ``(N,)`` uint32 zone
+    word (:func:`zone_words`); the in-kernel contact gate is the
+    zone-word intersection, bitwise the historical RZ gate at K = 1.
     ``N`` is padded to a multiple of ``max(blk_i, 32)`` with far-away
     coordinates (masked out of every output); ``closew`` pad bits are zero
-    by construction, matching ``pack_mask``.
+    by construction, matching ``pack_mask``, and pad zone words are zero
+    (pad rows never pass the gate).
     """
     n = pos.shape[0]
     blk_i = min(blk_i, -(-n // 32) * 32)
@@ -232,9 +281,10 @@ def pairwise_contacts(pos, in_rz, elig, prevw, r_tx2, *, blk_i: int = 128,
     n_pad = -(-n // blk_i) * blk_i
     pad = n_pad - n
 
+    zw = in_rz if in_rz.dtype == jnp.uint32 else zone_words(in_rz)
     x = jnp.pad(pos[:, 0], (0, pad), constant_values=_FAR)[None, :]
     y = jnp.pad(pos[:, 1], (0, pad), constant_values=_FAR)[None, :]
-    rz = jnp.pad(in_rz.astype(jnp.uint32), (0, pad))[None, :]
+    rz = jnp.pad(zw, (0, pad))[None, :]
     el = jnp.pad(elig.astype(jnp.uint32), (0, pad))[None, :]
     nw, nw_pad = prevw.shape[1], n_pad // 32
     prevw = jnp.pad(prevw, ((0, pad), (0, nw_pad - nw)))

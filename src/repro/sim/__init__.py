@@ -25,6 +25,13 @@ Module map
                   per-slot trace outputs, and the post-hoc o(τ) estimator.
 ``engine``        The ``lax.scan`` driver: ``simulate`` (single run) and
                   ``simulate_batch`` (seeds x scenarios in one jit).
+                  Replication-Zone geometry is a first-class ``ZoneSet``
+                  (``SimConfig.zones``): k discs, optionally drifting,
+                  with packed per-node zone-membership words,
+                  zone-sharing contact gating, union-exit churn
+                  (zone-to-zone migration transfers state) and per-zone
+                  ``*_z`` traces with a trailing zone axis. ``None``
+                  keeps the legacy single centered disc — bitwise.
 ``sweep``         Fleet-scale sweep execution: the flattened, padded
                   (scenario x seed) work axis sharded over a 2-D device
                   mesh, streaming chunked dispatch with donated buffers,
@@ -42,6 +49,8 @@ from repro.sim.engine import (
     BatchSimOutputs,
     SimConfig,
     SimOutputs,
+    ZoneSet,
+    effective_zones,
     simulate,
     simulate_batch,
 )
@@ -60,6 +69,8 @@ __all__ = [
     "BatchSimOutputs",
     "SimConfig",
     "SimOutputs",
+    "ZoneSet",
+    "effective_zones",
     "SweepPlan",
     "SweepSummary",
     "plan_sweep",

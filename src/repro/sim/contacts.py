@@ -78,34 +78,40 @@ def close_matrix(pos: jnp.ndarray, in_rz: jnp.ndarray, r_tx) -> jnp.ndarray:
     return close & ~jnp.eye(n, dtype=bool), d2
 
 
-def pair_still_close(pos, in_rz, partner, r_tx2):
+def pair_still_close(pos, zonew, partner, r_tx2):
     """O(N) row of the contact matrix at ``(i, partner[i])``.
 
-    Bitwise the same value as ``close[i, partner[i]]`` of the dense
-    matrix (same subtraction order), without materializing it; only
-    meaningful where ``partner >= 0``."""
+    ``zonew`` is the ``(N,)`` uint32 zone-membership word
+    (``repro.kernels.contacts.zone_words``); the pair is still close iff
+    within radius *and* still sharing a zone. Bitwise the same value as
+    ``close[i, partner[i]]`` of the dense matrix (same subtraction
+    order), without materializing it; only meaningful where
+    ``partner >= 0``."""
     n = pos.shape[0]
     pidx = jnp.clip(partner, 0, n - 1)
     dx = pos[:, 0] - pos[pidx, 0]
     dy = pos[:, 1] - pos[pidx, 1]
     d2 = dx * dx + dy * dy
-    return (d2 <= r_tx2) & in_rz & in_rz[pidx] & (jnp.arange(n) != pidx)
+    return (d2 <= r_tx2) & ((zonew & zonew[pidx]) != 0) \
+        & (jnp.arange(n) != pidx)
 
 
-def pairwise_close(pos, in_rz, r_tx2):
+def pairwise_close(pos, member, r_tx2):
     """Shared stage of the per-slot pairwise sweep: ``(closew, d2ctx)``.
 
-    ``closew`` is the packed contact matrix of this slot (the next
-    ``prev_close`` carry); ``d2ctx`` is the backend context
+    ``member`` is the ``(N,)`` bool single-RZ membership or the
+    ``(N, K)`` multi-zone membership matrix (contacts then require a
+    shared zone). ``closew`` is the packed contact matrix of this slot
+    (the next ``prev_close`` carry); ``d2ctx`` is the backend context
     :func:`match_candidates` finishes the candidate search from. Both
-    depend only on positions and RZ membership — in sweep batches they
+    depend only on positions and zone membership — in sweep batches they
     are computed once per seed and broadcast over scenarios. On TPU the
     kernel fuses the whole sweep instead: the context carries the raw
     inputs and :func:`match_candidates` invokes the fused kernel.
     """
     if jax.default_backend() == "tpu":
-        return None, (pos, in_rz, r_tx2)
-    closew, d2b3 = pairwise_close_ref(pos, in_rz, r_tx2)
+        return None, (pos, member, r_tx2)
+    closew, d2b3 = pairwise_close_ref(pos, member, r_tx2)
     return closew, (closew, d2b3)
 
 
@@ -120,11 +126,11 @@ def match_candidates(d2ctx, prevw, elig):
     :func:`mutual_best_pairs` without materializing the (N, N) score
     matrix — bitwise so, pinned by the engine equivalence tests."""
     if jax.default_backend() == "tpu":
-        pos, in_rz, r_tx2 = d2ctx
+        pos, member, r_tx2 = d2ctx
         from repro.kernels.contacts import pairwise_contacts
 
         closew, best_j, has = pairwise_contacts(
-            pos, in_rz, elig, prevw, r_tx2, interpret=False
+            pos, member, elig, prevw, r_tx2, interpret=False
         )
         return closew, _mutualize(best_j, has)
     closew, d2b3 = d2ctx
@@ -171,6 +177,26 @@ def advance_exchanges(
     return elapsed, done, broke, ending, eff_time, pidx
 
 
+def _deliveries_general(
+    *, order_seed, snap_has, snap, pidx, eff_time, ending, t0, T_L
+):
+    """The any-M delivery path: per-connection random send order (one
+    threefry hash per node per slot), rank via double argsort."""
+    m_count = snap_has.shape[1]
+
+    def deliveries(order_seed_i, sender_has, eff):
+        rnd = jax.random.uniform(
+            jax.random.fold_in(jax.random.PRNGKey(0), order_seed_i), (m_count,)
+        )
+        rnd = jnp.where(sender_has, rnd, jnp.inf)
+        rank = jnp.argsort(jnp.argsort(rnd))  # 0-based among all models
+        fin = t0 + (rank + 1).astype(jnp.float32) * T_L
+        return sender_has & (fin <= eff)
+
+    delivered = jax.vmap(deliveries)(order_seed[pidx], snap_has[pidx], eff_time)
+    return delivered & ending[:, None], snap[pidx]
+
+
 def compute_deliveries(
     *, order_seed, snap_has, snap, pidx, eff_time, ending, t0, T_L
 ):
@@ -186,23 +212,17 @@ def compute_deliveries(
     if m_count == 1:
         # Single-model fast path (the paper's default M=1 sweeps): a lone
         # instance always has send rank 0, so the per-connection order PRNG
-        # (one threefry hash per node per slot) and the double argsort drop
-        # out. Bit-identical to the general path below.
+        # and the double argsort of :func:`_deliveries_general` drop out.
+        # Bit-identical to the general path — pinned against it in
+        # ``tests/test_sim_contacts.py``.
         fin = t0 + jnp.float32(1.0) * T_L
         delivered = snap_has[pidx] & (fin <= eff_time)[:, None]
         return delivered & ending[:, None], snap[pidx]
 
-    def deliveries(order_seed_i, sender_has, eff):
-        rnd = jax.random.uniform(
-            jax.random.fold_in(jax.random.PRNGKey(0), order_seed_i), (m_count,)
-        )
-        rnd = jnp.where(sender_has, rnd, jnp.inf)
-        rank = jnp.argsort(jnp.argsort(rnd))  # 0-based among all models
-        fin = t0 + (rank + 1).astype(jnp.float32) * T_L
-        return sender_has & (fin <= eff)
-
-    delivered = jax.vmap(deliveries)(order_seed[pidx], snap_has[pidx], eff_time)
-    return delivered & ending[:, None], snap[pidx]
+    return _deliveries_general(
+        order_seed=order_seed, snap_has=snap_has, snap=snap, pidx=pidx,
+        eff_time=eff_time, ending=ending, t0=t0, T_L=T_L,
+    )
 
 
 def form_connections(

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.meanfield import FGParams
+from repro.core.zones import ZoneSet, single_zone
 from repro.sim import compute, contacts, observations
 from repro.sim.mobility import get_mobility
 from repro.sim.state import init_sim_state
@@ -35,6 +36,9 @@ __all__ = [
     "SimConfig",
     "SimOutputs",
     "BatchSimOutputs",
+    "ZoneSet",
+    "effective_zones",
+    "zone_churn",
     "simulate",
     "simulate_batch",
     "dynamic_params",
@@ -68,6 +72,19 @@ class SimConfig:
     mobility: str = "rdm"                # key into repro.sim.mobility registry
     street_spacing: float = 25.0         # Manhattan-grid street spacing [m]
     pause_s: float = 0.0                 # RWP waypoint pause time [s]
+    zones: ZoneSet | None = None         # k Replication Zones; None = the
+                                         # legacy single centered disc of
+                                         # radius rz_radius (bitwise-equal
+                                         # to an explicit k=1 ZoneSet)
+
+
+def effective_zones(cfg: SimConfig) -> ZoneSet:
+    """The ``ZoneSet`` a config runs: ``cfg.zones``, or the legacy single
+    centered disc built from ``cfg.rz_radius``."""
+    if cfg.zones is not None:
+        return cfg.zones
+    c = cfg.area_side / 2.0
+    return single_zone((c, c), cfg.rz_radius)
 
 
 @dataclasses.dataclass
@@ -82,6 +99,10 @@ class SimOutputs:
     obs_holders: np.ndarray      # (S, M, K) #in-RZ nodes having incorporated
     model_holders: np.ndarray    # (S, M) #in-RZ nodes with the model
     n_in_rz: np.ndarray          # (S,)
+    # per-zone traces (trailing zone axis; zone 0 is the legacy RZ)
+    availability_z: np.ndarray | None = None   # (S, M, K_zones)
+    stored_info_z: np.ndarray | None = None    # (S, K_zones)
+    n_in_rz_z: np.ndarray | None = None        # (S, K_zones)
 
 
 @dataclasses.dataclass
@@ -102,6 +123,9 @@ class BatchSimOutputs:
     obs_holders: np.ndarray      # (P, R, S, M, K)
     model_holders: np.ndarray    # (P, R, S, M)
     n_in_rz: np.ndarray          # (P, R, S)
+    availability_z: np.ndarray | None = None   # (P, R, S, M, K_zones)
+    stored_info_z: np.ndarray | None = None    # (P, R, S, K_zones)
+    n_in_rz_z: np.ndarray | None = None        # (P, R, S, K_zones)
     plan: Any = None             # SweepPlan of the producing sweep
     devices_used: int | None = None
     host_bytes: int | None = None
@@ -115,6 +139,9 @@ class BatchSimOutputs:
         return self.availability.shape[1]
 
     def point(self, scenario: int, seed: int) -> SimOutputs:
+        def _z(arr):
+            return None if arr is None else arr[scenario, seed]
+
         return SimOutputs(
             t=self.t,
             availability=self.availability[scenario, seed],
@@ -124,7 +151,37 @@ class BatchSimOutputs:
             obs_holders=self.obs_holders[scenario, seed],
             model_holders=self.model_holders[scenario, seed],
             n_in_rz=self.n_in_rz[scenario, seed],
+            availability_z=_z(self.availability_z),
+            stored_info_z=_z(self.stored_info_z),
+            n_in_rz_z=_z(self.n_in_rz_z),
         )
+
+
+def zone_churn(zone_prev, zonew, *, inc, has_model, tq_model, mq_model,
+               serving, serv_left):
+    """Apply the zone-churn rule to the protocol state.
+
+    A node drops its packed protocol state (incorporation words, model
+    flags, queues, running job) exactly when it leaves the **union** of
+    Replication Zones — ``zone_prev``/``zonew`` are the uint32 zone
+    membership words of the previous and current slot. Crossing directly
+    from one zone into another (the zone word changes but stays nonzero)
+    *transfers* the state: migration keeps everything. With a single zone
+    the words are 0/1 and ``left`` is bitwise the legacy
+    ``in_rz_prev & ~in_rz``.
+
+    Returns ``(left, dict-of-updated-fields)``; tested (property tests
+    over random membership trajectories) in ``tests/test_sim_zones.py``.
+    """
+    left = (zone_prev != 0) & (zonew == 0)
+    return left, dict(
+        inc=jnp.where(left[:, None, None], jnp.uint32(0), inc),
+        has_model=jnp.where(left[:, None], False, has_model),
+        tq_model=jnp.where(left[:, None], -1, tq_model),
+        mq_model=jnp.where(left[:, None], -1, mq_model),
+        serving=jnp.where(left, -1, serving),
+        serv_left=jnp.where(left, 0.0, serv_left),
+    )
 
 
 def dynamic_params(p: FGParams) -> dict:
@@ -166,8 +223,10 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
 
     The scan carry is the bit-packed ``SimState`` (see ``repro.sim.state``);
     all boolean-mask algebra below is uint32 word ops. Per-step constants
-    (RZ center, squared transmission radius) are hoisted here — nothing
-    geometry-shaped is rebuilt inside ``step``.
+    (zone centers/radii, squared transmission radius) are hoisted here —
+    nothing geometry-shaped is rebuilt inside ``step`` (drifting zone
+    centers are a closed-form function of the slot time, not carried
+    state).
 
     ``trace`` selects the per-sample output set: ``"full"`` emits every
     trace (the single-run / trace-sweep format), ``"light"`` drops the
@@ -178,27 +237,58 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
     dt = cfg.dt
     t0, T_L, T_T, T_M = (p_dyn[k] for k in ("t0", "T_L", "T_T", "T_M"))
     lam, tau_l, Lam = p_dyn["lam"], p_dyn["tau_l"], p_dyn["Lam"]
-    center = jnp.asarray([cfg.area_side / 2.0, cfg.area_side / 2.0])
     r_tx2 = cfg.r_tx**2
     model = get_mobility(cfg.mobility)
+
+    zs = effective_zones(cfg)
+    kz = zs.k
+    zcenters = jnp.asarray(zs.centers, jnp.float32)      # (K, 2)
+    zradii = jnp.asarray(zs.radii, jnp.float32)          # (K,)
+    zdrift = jnp.asarray(zs.drift, jnp.float32) if zs.moving else None
+
+    def zone_member(pos, t_now):
+        """(N, K) bool per-zone membership at time ``t_now``.
+
+        Drifting zone centers reflect off the area boundary (the same
+        specular fold the mobility models use); static sets skip the
+        fold so the geometry — and the K = 1 path, which reproduces the
+        legacy centered-disc expression exactly — stays bitwise
+        stable."""
+        if zdrift is not None:
+            raw = zcenters + zdrift * t_now
+            m = jnp.mod(raw, 2.0 * cfg.area_side)
+            c = cfg.area_side - jnp.abs(cfg.area_side - m)
+        else:
+            c = zcenters
+        if kz == 1:
+            # bitwise the legacy `norm(pos - center) <= rz_radius`
+            return (
+                jnp.linalg.norm(pos - c[0], axis=-1) <= zradii[0]
+            )[:, None]
+        d = jnp.linalg.norm(pos[:, None, :] - c[None, :, :], axis=-1)
+        return d <= zradii[None, :]
 
     def step(carry, slot_idx):
         state, key = carry
         t_now = slot_idx.astype(jnp.float32) * dt
         key, k_mob1, k_mob2, k_obs, k_who = jax.random.split(key, 5)
 
-        # ---- mobility & RZ membership ----
+        # ---- mobility & zone membership ----
         mob = model.step(k_mob1, k_mob2, state.mob, cfg)
-        in_rz = jnp.linalg.norm(mob.pos - center, axis=-1) <= cfg.rz_radius
+        member = zone_member(mob.pos, t_now)             # (N, K)
+        zonew = compute.pack_mask(member)[:, 0]          # (N,) uint32
+        in_rz = zonew != 0                               # union membership
 
-        # ---- RZ churn: leaving the RZ drops everything ----
-        left = state.in_rz_prev & ~in_rz
-        inc = jnp.where(left[:, None, None], jnp.uint32(0), state.inc)
-        has_model = jnp.where(left[:, None], False, state.has_model)
-        tq_model = jnp.where(left[:, None], -1, state.tq_model)
-        mq_model = jnp.where(left[:, None], -1, state.mq_model)
-        serving = jnp.where(left, -1, state.serving)
-        serv_left = jnp.where(left, 0.0, state.serv_left)
+        # ---- zone churn: leaving the *union* of zones drops everything;
+        # crossing directly from one zone into another transfers state ----
+        left, churned = zone_churn(
+            state.zone_prev, zonew, inc=state.inc, has_model=state.has_model,
+            tq_model=state.tq_model, mq_model=state.mq_model,
+            serving=state.serving, serv_left=state.serv_left,
+        )
+        inc, has_model = churned["inc"], churned["has_model"]
+        tq_model, mq_model = churned["tq_model"], churned["mq_model"]
+        serving, serv_left = churned["serving"], churned["serv_left"]
 
         # ---- contact dynamics ----
         # The O(N²) pairwise sweep runs in two stages: the shared part
@@ -208,10 +298,10 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         # once this slot's eligibility is known. On TPU the fused Pallas
         # kernel runs later instead (no early matrix) and the O(N)
         # distance recompute supplies the proximity bit.
-        closew_shared, d2ctx = contacts.pairwise_close(mob.pos, in_rz, r_tx2)
+        closew_shared, d2ctx = contacts.pairwise_close(mob.pos, member, r_tx2)
         if closew_shared is None:
             still_close = contacts.pair_still_close(
-                mob.pos, in_rz, state.partner, r_tx2
+                mob.pos, zonew, state.partner, r_tx2
             )
         else:
             still_close = contacts.partner_close_bit(
@@ -283,7 +373,7 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         new_state = state.replace(
             mob=mob, prev_close=closew, inc=inc, has_model=has_model,
             obs_birth=obs_birth, obs_head=obs_head, tq_slot=tq_slot,
-            mq_mask=mq_mask, in_rz_prev=in_rz, **conn, **served,
+            mq_mask=mq_mask, zone_prev=zonew, **conn, **served,
         )
         return (new_state, key), None
 
@@ -296,15 +386,16 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         t_now = slots[-1].astype(jnp.float32) * dt
         out = observations.slot_outputs(
             inc=state.inc, has_model=state.has_model,
-            obs_birth=state.obs_birth, in_rz=state.in_rz_prev,
+            obs_birth=state.obs_birth, in_rz=state.zone_prev != 0,
+            member=compute.unpack_mask(state.zone_prev[:, None], kz),
             partner=state.partner, t_now=t_now, tau_l=tau_l,
             with_obs_trace=(trace == "full"),
         )
         return (state, key), out
 
     mob0, key = model.init(key, cfg)
-    in_rz0 = jnp.linalg.norm(mob0.pos - center, axis=-1) <= cfg.rz_radius
-    state0 = init_sim_state(mob0, in_rz0, M=M, cfg=cfg)
+    zonew0 = compute.pack_mask(zone_member(mob0.pos, 0.0))[:, 0]
+    state0 = init_sim_state(mob0, zonew0, M=M, cfg=cfg)
     n_chunks = cfg.n_slots // cfg.sample_every
     (_, _), outs = jax.lax.scan(
         chunk, (state0, key), jnp.arange(n_chunks), length=n_chunks
@@ -338,10 +429,9 @@ def scan_carry_bytes(cfg: SimConfig, M: int) -> int:
     def build():
         key = jax.random.PRNGKey(0)
         model = get_mobility(cfg.mobility)
-        center = jnp.asarray([cfg.area_side / 2.0, cfg.area_side / 2.0])
         mob0, key = model.init(key, cfg)
-        in_rz0 = jnp.linalg.norm(mob0.pos - center, axis=-1) <= cfg.rz_radius
-        return init_sim_state(mob0, in_rz0, M=M, cfg=cfg), key
+        zonew0 = jnp.zeros((cfg.n_nodes,), jnp.uint32)
+        return init_sim_state(mob0, zonew0, M=M, cfg=cfg), key
 
     shapes = jax.eval_shape(build)
     return sum(
@@ -370,6 +460,9 @@ def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
         obs_holders=np.asarray(outs["obs_holders"]),
         model_holders=np.asarray(outs["model_holders"]),
         n_in_rz=np.asarray(outs["n_in_rz"]),
+        availability_z=np.asarray(outs["availability_z"]),
+        stored_info_z=np.asarray(outs["stored_z"]),
+        n_in_rz_z=np.asarray(outs["n_in_rz_z"]),
     )
 
 

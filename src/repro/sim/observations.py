@@ -109,12 +109,19 @@ def apply_completions(
 
 
 def slot_outputs(*, inc, has_model, obs_birth, in_rz, partner, t_now, tau_l,
-                 with_obs_trace: bool = True):
+                 member=None, with_obs_trace: bool = True):
     """Per-slot observables (the quantities Figs. 1-4 are built from).
 
     ``inc`` arrives bit-packed; stored-information is a popcount and the
     per-observation holder counts unpack once per *sample* (not per slot),
     so the packed format never costs the inner loop anything.
+
+    ``in_rz`` is the *union* zone membership (the legacy single-RZ
+    semantics — every union-level trace is unchanged). ``member`` — the
+    ``(N, K_zones)`` per-zone membership matrix — additionally emits the
+    per-zone traces ``availability_z`` (M, K), ``stored_z`` (K,) and
+    ``n_in_rz_z`` (K,), each with a *trailing* zone axis; for a single
+    zone these are the union traces with a length-1 zone axis appended.
 
     ``with_obs_trace=False`` drops the per-observation quantities
     (``obs_birth`` ring snapshot and the holder-count GEMV, which needs the
@@ -135,6 +142,16 @@ def slot_outputs(*, inc, has_model, obs_birth, in_rz, partner, t_now, tau_l,
         model_holders=jnp.sum(has_model & in_rz[:, None], axis=0),
         n_in_rz=jnp.sum(in_rz),
     )
+    if member is not None:
+        n_z = jnp.sum(member, axis=0)                         # (K,)
+        denom = jnp.maximum(n_z, 1)
+        out["n_in_rz_z"] = n_z
+        out["availability_z"] = jnp.sum(
+            has_model[:, :, None] & member[:, None, :], axis=0
+        ) / denom[None, :]                                    # (M, K)
+        out["stored_z"] = jnp.sum(
+            jnp.where(member, stored[:, None], 0), axis=0
+        ) / denom                                             # (K,)
     if with_obs_trace:
         inc_bits = unpack_mask(inc, k_count)                  # (N, M, K)
         # holder counts as a GEMV over the node axis — counts <= N are

@@ -82,14 +82,20 @@ class SimState:
     serv_model: jnp.ndarray      # (N,)
     serv_mask: jnp.ndarray       # (N, ceil(K/32)) packed served merge payload
     serv_slot: jnp.ndarray       # (N,)  train payload being served
-    in_rz_prev: jnp.ndarray      # (N,) was inside the RZ last slot
+    zone_prev: jnp.ndarray       # (N,) uint32 zone-membership word last slot
+                                 # (bit z = member of zone z; bit 0 is the
+                                 # legacy single-RZ in_rz flag)
 
     def replace(self, **kw) -> "SimState":
         return dataclasses.replace(self, **kw)
 
 
-def init_sim_state(mob_state, in_rz0: jnp.ndarray, *, M: int, cfg) -> SimState:
+def init_sim_state(mob_state, zone0: jnp.ndarray, *, M: int, cfg) -> SimState:
     """Empty protocol state around an initialized mobility state.
+
+    ``zone0`` is the initial zone membership: a ``(N,)`` uint32 zone word
+    (``repro.kernels.contacts.zone_words``), or — legacy single-RZ call
+    sites — a ``(N,)`` bool in-RZ vector (packed to bit 0 here).
 
     Queue entries are stored at the narrowest safe width (model ids int8
     while M fits, ring slots int16) — with the masks bit-packed the int32
@@ -98,6 +104,10 @@ def init_sim_state(mob_state, in_rz0: jnp.ndarray, *, M: int, cfg) -> SimState:
     qt, qm = cfg.q_train, cfg.q_merge
     kw, nw = (k + 31) // 32, (n + 31) // 32
     id_dt, slot_dt = queue_dtypes(M, k)
+    if zone0.dtype == jnp.bool_:
+        from repro.kernels.contacts import zone_words
+
+        zone0 = zone_words(zone0)
     return SimState(
         mob=mob_state,
         partner=jnp.full((n,), -1, dtype=jnp.int32),
@@ -120,5 +130,5 @@ def init_sim_state(mob_state, in_rz0: jnp.ndarray, *, M: int, cfg) -> SimState:
         serv_model=jnp.zeros((n,), dtype=jnp.int32),
         serv_mask=jnp.zeros((n, kw), dtype=jnp.uint32),
         serv_slot=jnp.zeros((n,), dtype=jnp.int32),
-        in_rz_prev=in_rz0,
+        zone_prev=zone0,
     )

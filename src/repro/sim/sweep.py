@@ -74,9 +74,12 @@ __all__ = ["SweepPlan", "SweepSummary", "plan_sweep", "run", "REDUCERS"]
 REDUCERS = ("trace", "mean", "final", "quantiles")
 
 #: Quantities present in the light (reduced) trace, reduced per run over
-#: the sample axis.
+#: the sample axis. The ``*_z`` entries are the per-zone traces (trailing
+#: zone axis — K_zones = 1 for the legacy single-RZ geometry); reductions
+#: apply over the sample axis only, so every reduced statistic keeps its
+#: zone axis.
 _LIGHT_KEYS = ("availability", "busy_frac", "stored", "model_holders",
-               "n_in_rz")
+               "n_in_rz", "availability_z", "stored_z", "n_in_rz_z")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -365,6 +368,9 @@ def run(
             obs_holders=outs["obs_holders"],
             model_holders=outs["model_holders"],
             n_in_rz=outs["n_in_rz"],
+            availability_z=outs["availability_z"],
+            stored_info_z=outs["stored_z"],
+            n_in_rz_z=outs["n_in_rz_z"],
             plan=plan, devices_used=devices_used, host_bytes=host_bytes,
         )
     return SweepSummary(

@@ -149,6 +149,72 @@ def test_pairwise_contacts_edge_tile_rows_masked():
     assert np.all(np.asarray(best_j)[np.asarray(has)] < n)
 
 
+@pytest.mark.parametrize("n,blk_i,k_zones", [
+    (20, 32, 3),      # N < one tile AND zone count not a power-of-two
+    (65, 32, 5),      # several minimal tiles + 1-row remainder, 5 zones
+    (130, 128, 2),    # tile + 1 edge row
+    (130, 128, 31),   # zone count not a multiple of the tile width and
+                      # nearly filling the 32-bit zone word
+    (200, 128, 4),    # the paper's node count, 4 zones
+])
+def test_pairwise_contacts_multizone_matches_jnp_bitwise(n, blk_i, k_zones):
+    """Multi-zone membership: the kernel's zone-word intersection gate must
+    equal the word-domain oracle bit for bit at edge-tile shapes and for
+    zone counts that do not divide the tile/word geometry."""
+    key = jax.random.PRNGKey(1000 + 31 * n + k_zones)
+    ks = jax.random.split(key, 4)
+    pos = jax.random.uniform(ks[0], (n, 2), maxval=60.0)
+    member = jax.random.uniform(ks[1], (n, k_zones)) < 0.4   # overlapping OK
+    elig = jax.random.uniform(ks[2], (n,)) < 0.7
+    prev_bool = jax.random.uniform(ks[3], (n, n)) < 0.2
+    prev_bool = prev_bool & prev_bool.T
+    from repro.sim.compute import pack_mask
+    prevw = pack_mask(prev_bool)
+    r_tx2 = 5.0 ** 2
+
+    ref = pairwise_contacts_ref(pos, member, elig, prevw, r_tx2)
+    out = pairwise_contacts(pos, member, elig, prevw, r_tx2,
+                            blk_i=blk_i, interpret=True)
+    for got, want, name in zip(out, ref, ("closew", "best_j", "has")):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=name
+        )
+
+
+def test_pairwise_contacts_straddling_two_overlapping_zones():
+    """A node inside two overlapping zones pairs with members of either
+    zone; two nodes in different disjoint zones never pair even inside
+    the transmission radius. Kernel == oracle bitwise, and the gate
+    semantics are checked against a dense boolean reference."""
+    # zones: A = {0..9}, B = {5..14} (5..9 straddle), C = {15..19} disjoint
+    n = 20
+    member = np.zeros((n, 3), bool)
+    member[0:10, 0] = True
+    member[5:15, 1] = True
+    member[15:20, 2] = True
+    # everyone within radius of everyone: the zone gate decides alone
+    pos = jnp.asarray(np.random.default_rng(0).uniform(0, 3.0, (n, 2)),
+                      jnp.float32)
+    elig = jnp.ones((n,), bool)
+    prevw = jnp.zeros((n, 1), jnp.uint32)
+    memberj = jnp.asarray(member)
+
+    ref = pairwise_contacts_ref(pos, memberj, elig, prevw, 25.0)
+    out = pairwise_contacts(pos, memberj, elig, prevw, 25.0, interpret=True)
+    for got, want, name in zip(out, ref, ("closew", "best_j", "has")):
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(want), err_msg=name
+        )
+
+    from repro.sim.compute import unpack_mask
+    close = np.asarray(unpack_mask(out[0], n))
+    share = (member[:, None, :] & member[None, :, :]).any(-1)
+    np.testing.assert_array_equal(close, share & ~np.eye(n, dtype=bool))
+    # straddler pairs across both, disjoint zones never pair
+    assert close[7, 0] and close[7, 14]
+    assert not close[0, 14] and not close[0, 17]
+
+
 def test_pairwise_contacts_kernel_no_candidates():
     """All-ineligible input: packed contacts still exact, no best pair."""
     n = 48

@@ -1,0 +1,81 @@
+"""Contact-subsystem pins: the M=1 delivery fast path (added with the
+PR-3 perf pass, previously unpinned) must equal the general
+``compute_deliveries`` path bit for bit, across ending/broken exchanges,
+empty snapshots, and boundary effective times."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sim.contacts import _deliveries_general, compute_deliveries
+
+
+def _delivery_inputs(seed: int, n: int = 64, kw: int = 2):
+    """Random per-node exchange endings shaped like an engine slot."""
+    rng = np.random.default_rng(seed)
+    order_seed = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    snap_has = jnp.asarray(rng.random((n, 1)) < 0.7)
+    snap = jnp.asarray(rng.integers(0, 2**32, (n, 1, kw), dtype=np.uint32))
+    pidx = jnp.asarray(rng.integers(0, n, n, dtype=np.int32))
+    eff_time = jnp.asarray(
+        rng.choice([0.0, 0.05, 0.1, 0.102, 0.15, 1.0], n).astype(np.float32)
+    )
+    ending = jnp.asarray(rng.random(n) < 0.5)
+    return dict(
+        order_seed=order_seed, snap_has=snap_has, snap=snap, pidx=pidx,
+        eff_time=eff_time, ending=ending,
+    )
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("t0,T_L", [
+    (0.1, 0.002),     # the paper's defaults
+    (0.1, 0.05),      # fin == some eff_time values exactly (tie boundary)
+    (0.0, 0.1),
+])
+def test_m1_delivery_fast_path_matches_general(seed, t0, T_L):
+    kw = _delivery_inputs(seed)
+    t0 = jnp.float32(t0)
+    T_L = jnp.float32(T_L)
+    fast = compute_deliveries(**kw, t0=t0, T_L=T_L)
+    general = _deliveries_general(**kw, t0=t0, T_L=T_L)
+    np.testing.assert_array_equal(
+        np.asarray(fast[0]), np.asarray(general[0]), err_msg="delivered"
+    )
+    np.testing.assert_array_equal(
+        np.asarray(fast[1]), np.asarray(general[1]), err_msg="sender_words"
+    )
+
+
+def test_m1_fast_path_is_the_dispatched_path():
+    """compute_deliveries really takes the fast branch at M=1 (no
+    per-node threefry): the traced program contains no random_bits op."""
+    kw = _delivery_inputs(0)
+    jaxpr = jax.make_jaxpr(
+        lambda: compute_deliveries(
+            **kw, t0=jnp.float32(0.1), T_L=jnp.float32(0.002)
+        )
+    )()
+    prims = {eqn.primitive.name for eqn in jaxpr.jaxpr.eqns}
+    assert not any("random" in p or "threefry" in p for p in prims), prims
+
+
+def test_general_path_multi_model_ranks_bound_deliveries():
+    """Sanity on the general path: with M models and eff_time admitting
+    exactly r transfers, at most r instances deliver per receiver."""
+    rng = np.random.default_rng(7)
+    n, m = 32, 5
+    kw = dict(
+        order_seed=jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32)),
+        snap_has=jnp.ones((n, m), bool),
+        snap=jnp.asarray(rng.integers(0, 2**32, (n, m, 1), dtype=np.uint32)),
+        pidx=jnp.asarray(rng.integers(0, n, n, dtype=np.int32)),
+        eff_time=jnp.full((n,), 0.1 + 3 * 0.002 + 1e-4, jnp.float32),
+        ending=jnp.ones((n,), bool),
+    )
+    delivered, _ = compute_deliveries(
+        **kw, t0=jnp.float32(0.1), T_L=jnp.float32(0.002)
+    )
+    counts = np.asarray(delivered).sum(axis=1)
+    assert counts.max() == 3 and counts.min() == 3

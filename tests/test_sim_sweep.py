@@ -100,6 +100,67 @@ def test_reduced_path_transfers_far_fewer_bytes():
     assert batch.host_bytes / mean.host_bytes >= 10
 
 
+def test_reductions_match_numpy_on_padded_chunked_grid():
+    """Satellite pin: ``reduce="quantiles"``/``"mean"`` equal plain numpy
+    reductions of ``reduce="trace"`` on the SAME grid even when the work
+    axis is padded and masked — 3 scenarios chunked into 2-scenario
+    dispatches (final chunk half pad rows) and 5 seeds. The pad rows
+    repeat real work; the assertion proves they are sliced off rather
+    than leaking into any statistic, for scalar, per-model, and per-zone
+    quantities alike."""
+    batch = sweep.run(PS, CFG, SEEDS, reduce="trace", chunk_size=2)
+    assert batch.plan.pad_scenarios > len(PS)          # padding exercised
+    trace = {
+        "availability": np.asarray(batch.availability),
+        "busy_frac": np.asarray(batch.busy_frac),
+        "stored": np.asarray(batch.stored_info),
+        "model_holders": np.asarray(batch.model_holders),
+        "n_in_rz": np.asarray(batch.n_in_rz),
+        "availability_z": np.asarray(batch.availability_z),
+        "stored_z": np.asarray(batch.stored_info_z),
+        "n_in_rz_z": np.asarray(batch.n_in_rz_z),
+    }
+
+    mean = sweep.run(PS, CFG, SEEDS, reduce="mean", chunk_size=2)
+    s0 = mean.warmup_samples
+    for k, v in trace.items():
+        np.testing.assert_allclose(
+            mean.stats[k], v[:, :, s0:].mean(axis=2), atol=1e-5,
+            err_msg=f"mean:{k}",
+        )
+        np.testing.assert_allclose(
+            mean.stats[k + "_std"], v[:, :, s0:].std(axis=2), atol=1e-5,
+            err_msg=f"std:{k}",
+        )
+
+    qs = (0.1, 0.5, 0.9)
+    quant = sweep.run(PS, CFG, SEEDS, reduce="quantiles", chunk_size=2,
+                      quantiles=qs)
+    for k, v in trace.items():
+        got = quant.stats[k]
+        want = np.moveaxis(
+            np.quantile(v[:, :, s0:].astype(np.float32), qs, axis=2), 0, -1
+        )
+        np.testing.assert_allclose(got, want, atol=1e-5, err_msg=f"q:{k}")
+
+    final = sweep.run(PS, CFG, SEEDS, reduce="final", chunk_size=2)
+    for k, v in trace.items():
+        np.testing.assert_allclose(
+            final.stats[k], v[:, :, -1], atol=1e-6, err_msg=f"final:{k}"
+        )
+
+
+def test_trace_zone_axes_ride_the_sweep():
+    """Per-zone traces carry a trailing zone axis through the sweep path
+    and equal the union traces at k=1."""
+    batch = sweep.run(PS[:2], CFG, [0, 1], reduce="trace")
+    assert batch.availability_z.shape == batch.availability.shape + (1,)
+    np.testing.assert_array_equal(
+        batch.availability_z[..., 0], batch.availability
+    )
+    np.testing.assert_array_equal(batch.n_in_rz_z[..., 0], batch.n_in_rz)
+
+
 def test_warmup_frac_override():
     a = sweep.run(PS[:1], CFG, [0], reduce="mean", warmup_frac=0.0)
     b = sweep.run(PS[:1], CFG, [0], reduce="mean", warmup_frac=0.9)

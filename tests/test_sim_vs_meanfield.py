@@ -21,6 +21,10 @@ import numpy as np
 import pytest
 
 from repro.configs.fg_paper import paper_contact_model, paper_params
+
+# 12000-slot simulation fixture: nightly lane (ci.sh runs tier-1 with
+# `-m "not slow"`; `--nightly` includes this module)
+pytestmark = pytest.mark.slow
 from repro.core.capacity import node_stored_information
 from repro.core.dde import solve_observation_availability
 from repro.core.meanfield import solve_fixed_point

@@ -1,0 +1,395 @@
+"""Multi-zone Replication-Zone guarantees:
+
+1. zone-membership / churn invariants of the engine's packed zone words
+   (property tests via hypothesis where available, seeded sweeps
+   otherwise): a node's packed state is dropped exactly once on
+   union-of-zones exit, never while it remains in *any* zone, and the
+   k=1 membership word path equals the legacy boolean ``in_rz`` path;
+2. a k=1 ``ZoneSet`` run is **bitwise** the default single-RZ engine
+   (the pinned PR-1/2 legacy-equivalence guarantees therefore extend to
+   the zone-generalized engine);
+3. k>=2 runs behave physically (per-zone populations match disc areas,
+   zone-sharing contact gating, migration transfers state);
+4. the coupled mean-field (``solve_fixed_point_multizone``) collapses
+   to the paper's Lemma 1-3 solution at k=1, and a k=2 simulation
+   validates the per-zone availability within the fig-2/4 spot-check
+   tolerance (slow lane);
+5. the zone-coupled DDE collapses to the scalar Theorem-1 solver at
+   k=1 / zero coupling.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fg_paper import (DENSITY, paper_contact_model,
+                                    paper_params)
+from repro.core.dde import (solve_observation_availability,
+                            solve_observation_availability_multizone)
+from repro.core.meanfield import (solve_fixed_point,
+                                  solve_fixed_point_multizone)
+from repro.core.zones import (ZoneSet, mean_relative_speed,
+                              migration_rate_matrix, single_zone)
+from repro.kernels.contacts import zone_words
+from repro.sim import SimConfig, simulate
+from repro.sim.engine import zone_churn
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - optional dep
+    HAVE_HYP = False
+
+
+# --------------------------------------------------------------------------
+# churn invariants (the property under test is repro.sim.engine.zone_churn,
+# the exact function the engine step applies)
+# --------------------------------------------------------------------------
+
+
+def _apply_trajectory(words: np.ndarray):
+    """Roll ``zone_churn`` over a (T, N) uint32 membership trajectory with
+    a nonzero initial packed state; returns the (T, N) bool drop matrix
+    and the final state fields."""
+    t_steps, n = words.shape
+    inc = jnp.full((n, 1, 1), 0xABCD, jnp.uint32)
+    has_model = jnp.ones((n, 1), bool)
+    tq = jnp.zeros((n, 2), jnp.int32)
+    mq = jnp.zeros((n, 2), jnp.int32)
+    serving = jnp.zeros((n,), jnp.int32)
+    serv_left = jnp.ones((n,))
+    drops, alive = [], []
+    prev = jnp.asarray(words[0])
+    for t in range(1, t_steps):
+        cur = jnp.asarray(words[t])
+        left, ch = zone_churn(
+            prev, cur, inc=inc, has_model=has_model, tq_model=tq,
+            mq_model=mq, serving=serving, serv_left=serv_left,
+        )
+        drops.append(np.asarray(left))
+        inc, has_model = ch["inc"], ch["has_model"]
+        tq, mq = ch["tq_model"], ch["mq_model"]
+        serving, serv_left = ch["serving"], ch["serv_left"]
+        alive.append(np.asarray(inc[:, 0, 0] != 0))
+        prev = cur
+    return np.asarray(drops), np.asarray(alive), dict(
+        inc=np.asarray(inc), has_model=np.asarray(has_model),
+        tq=np.asarray(tq), mq=np.asarray(mq),
+        serving=np.asarray(serving), serv_left=np.asarray(serv_left),
+    )
+
+
+def _check_churn_invariants(words: np.ndarray):
+    drops, alive, final = _apply_trajectory(words)
+    member = words != 0                       # in some zone
+    # dropped exactly when leaving the union, never while still in a zone
+    expect = member[:-1] & ~member[1:]
+    np.testing.assert_array_equal(drops, expect)
+    ever_dropped = expect.any(axis=0)
+    # packed state survives iff the node never left the union
+    np.testing.assert_array_equal(final["inc"][:, 0, 0] == 0, ever_dropped)
+    np.testing.assert_array_equal(~final["has_model"][:, 0], ever_dropped)
+    np.testing.assert_array_equal(final["tq"][:, 0] == -1, ever_dropped)
+    np.testing.assert_array_equal(final["mq"][:, 0] == -1, ever_dropped)
+    np.testing.assert_array_equal(final["serving"] == -1, ever_dropped)
+    # dropped exactly once: state is cleared at the FIRST union exit and
+    # never resurrects afterwards (alive goes monotonically False after
+    # the first drop)
+    first_drop = np.where(
+        ever_dropped, expect.argmax(axis=0), expect.shape[0]
+    )
+    steps = np.arange(expect.shape[0])[:, None]
+    np.testing.assert_array_equal(alive, steps < first_drop[None, :])
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_churn_drops_exactly_on_union_exit_seeded(seed):
+    rng = np.random.default_rng(seed)
+    k = rng.integers(1, 5)
+    words = rng.integers(0, 2 ** k, size=(12, 16)).astype(np.uint32)
+    _check_churn_invariants(words)
+
+
+def test_zone_migration_transfers_state():
+    """Direct zone-to-zone moves (word changes, stays nonzero) keep all
+    packed state; only the union exit clears it."""
+    words = np.asarray([
+        [0b01, 0b01],    # both in zone 0
+        [0b10, 0b11],    # node 0 jumped to zone 1, node 1 in the overlap
+        [0b10, 0b10],    # node 1 left zone 0 but remains in zone 1
+        [0b00, 0b10],    # node 0 left the union -> dropped
+    ], dtype=np.uint32)
+    drops, _, final = _apply_trajectory(words)
+    np.testing.assert_array_equal(
+        drops, [[False, False], [False, False], [True, False]]
+    )
+    assert final["inc"][0, 0, 0] == 0 and final["inc"][1, 0, 0] != 0
+    assert not final["has_model"][0, 0] and final["has_model"][1, 0]
+
+
+def test_k1_zone_words_equal_legacy_bool_path():
+    rng = np.random.default_rng(3)
+    in_rz = jnp.asarray(rng.random(200) < 0.6)
+    w = zone_words(in_rz)
+    assert w.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(w != 0), np.asarray(in_rz))
+    # the k=1 churn trigger is bitwise the legacy in_rz_prev & ~in_rz
+    prev = jnp.asarray(rng.random(200) < 0.6)
+    left, _ = zone_churn(
+        zone_words(prev), w,
+        inc=jnp.zeros((200, 1, 1), jnp.uint32),
+        has_model=jnp.zeros((200, 1), bool),
+        tq_model=jnp.zeros((200, 1), jnp.int32),
+        mq_model=jnp.zeros((200, 1), jnp.int32),
+        serving=jnp.zeros((200,), jnp.int32),
+        serv_left=jnp.zeros((200,)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(left), np.asarray(prev & ~in_rz)
+    )
+
+
+if HAVE_HYP:
+
+    @st.composite
+    def word_trajectories(draw):
+        k = draw(st.integers(min_value=1, max_value=6))
+        n = draw(st.integers(min_value=1, max_value=12))
+        t = draw(st.integers(min_value=2, max_value=10))
+        flat = draw(st.lists(
+            st.integers(min_value=0, max_value=2 ** k - 1),
+            min_size=t * n, max_size=t * n,
+        ))
+        return np.asarray(flat, dtype=np.uint32).reshape(t, n)
+
+    @settings(max_examples=50, deadline=None)
+    @given(word_trajectories())
+    def test_hypothesis_churn_invariants(words):
+        _check_churn_invariants(words)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.booleans(), min_size=1, max_size=80))
+    def test_hypothesis_k1_words_equal_bool(bits):
+        in_rz = jnp.asarray(np.asarray(bits, dtype=bool))
+        np.testing.assert_array_equal(
+            np.asarray(zone_words(in_rz) != 0), np.asarray(in_rz)
+        )
+
+
+# --------------------------------------------------------------------------
+# k=1 ZoneSet == default single-RZ engine, bitwise
+# --------------------------------------------------------------------------
+
+
+def test_k1_zoneset_bitwise_equals_default_engine():
+    """An explicit one-disc ZoneSet (the legacy geometry spelled out) runs
+    bit-for-bit the default ``rz_radius`` engine — every trace, zone
+    traces included."""
+    cfg = SimConfig(n_nodes=60, n_slots=400, sample_every=8)
+    zcfg = dataclasses.replace(
+        cfg, zones=single_zone((cfg.area_side / 2, cfg.area_side / 2),
+                               cfg.rz_radius),
+    )
+    p = paper_params(lam=0.2, M=2, Lam=2)
+    a = simulate(p, cfg, seed=5)
+    b = simulate(p, zcfg, seed=5)
+    for f in ("availability", "busy_frac", "stored_info", "obs_birth",
+              "obs_holders", "model_holders", "n_in_rz", "availability_z",
+              "stored_info_z", "n_in_rz_z"):
+        np.testing.assert_array_equal(
+            getattr(a, f), getattr(b, f), err_msg=f
+        )
+
+
+def test_k1_zone_traces_equal_union_traces():
+    """Single zone: the per-zone traces are the union traces with a
+    trailing length-1 zone axis."""
+    cfg = SimConfig(n_nodes=60, n_slots=400, sample_every=8)
+    out = simulate(paper_params(lam=0.2, M=1), cfg, seed=2)
+    assert out.availability_z.shape == out.availability.shape + (1,)
+    np.testing.assert_array_equal(out.availability_z[..., 0],
+                                  out.availability)
+    np.testing.assert_array_equal(out.n_in_rz_z[..., 0], out.n_in_rz)
+    np.testing.assert_allclose(out.stored_info_z[..., 0], out.stored_info,
+                               rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# k >= 2 physics
+# --------------------------------------------------------------------------
+
+
+def test_two_disjoint_zones_population_and_protocol():
+    zs = ZoneSet(centers=((50.0, 100.0), (150.0, 100.0)), radii=(45.0, 45.0))
+    cfg = SimConfig(n_nodes=200, n_slots=2400, sample_every=8, zones=zs)
+    out = simulate(paper_params(lam=0.2, M=1), cfg, seed=0)
+    s0 = len(out.t) // 2
+    # per-zone populations match the disc areas under uniform RDM density
+    # (single-seed mobility noise is ~10-15%: loose per-zone bound, tighter
+    # bound on the two-zone mean)
+    expect = DENSITY * np.pi * 45.0**2
+    for z in range(2):
+        n_z = out.n_in_rz_z[s0:, z].mean()
+        assert abs(n_z - expect) / expect < 0.3, (z, n_z, expect)
+    both = out.n_in_rz_z[s0:].mean()
+    assert abs(both - expect) / expect < 0.15, (both, expect)
+    # union trace counts every zone member exactly once (disjoint discs)
+    np.testing.assert_array_equal(out.n_in_rz_z.sum(axis=-1), out.n_in_rz)
+    # the protocol runs in both zones
+    assert (out.availability_z[s0:, 0, 0] > 0).any()
+    assert (out.availability_z[s0:, 0, 1] > 0).any()
+
+
+def test_moving_zone_population_follows_drift():
+    """One small drifting zone: the engine's per-zone population stays
+    near the disc population while the zone sweeps the area."""
+    zs = ZoneSet(centers=((50.0, 100.0),), radii=(40.0,),
+                 drift=((1.0, 0.0),))
+    cfg = SimConfig(n_nodes=200, n_slots=1600, sample_every=8, zones=zs)
+    out = simulate(paper_params(lam=0.2, M=1), cfg, seed=1)
+    expect = DENSITY * np.pi * 40.0**2
+    n_z = out.n_in_rz_z[len(out.t) // 4:, 0].mean()
+    assert abs(n_z - expect) / expect < 0.2
+
+
+# --------------------------------------------------------------------------
+# migration-rate matrix & coupled mean-field / DDE
+# --------------------------------------------------------------------------
+
+
+def test_migration_matrix_geometry():
+    # k=1: diagonal is the paper's alpha = 2 D v r, no off-diagonal
+    zs = single_zone((100.0, 100.0), 100.0)
+    R = migration_rate_matrix(zs, density=DENSITY, speed=1.0)
+    assert R.shape == (1, 1)
+    np.testing.assert_allclose(R[0, 0], 2.0 * DENSITY * 1.0 * 100.0)
+    # disjoint discs do not exchange
+    zs2 = ZoneSet(centers=((50.0, 100.0), (150.0, 100.0)),
+                  radii=(45.0, 45.0))
+    R2 = migration_rate_matrix(zs2, density=DENSITY, speed=1.0)
+    assert R2[0, 1] == 0.0 and R2[1, 0] == 0.0
+    # equal overlapping discs: symmetric positive coupling, bounded by
+    # the total exit rate
+    zs3 = ZoneSet(centers=((70.0, 100.0), (130.0, 100.0)),
+                  radii=(50.0, 50.0))
+    R3 = migration_rate_matrix(zs3, density=DENSITY, speed=1.0)
+    assert R3[0, 1] == pytest.approx(R3[1, 0])
+    assert 0.0 < R3[0, 1] < R3[0, 0]
+    # containment: the inner disc's boundary lies entirely inside the outer
+    zs4 = ZoneSet(centers=((100.0, 100.0), (100.0, 100.0)),
+                  radii=(30.0, 80.0))
+    R4 = migration_rate_matrix(zs4, density=DENSITY, speed=1.0)
+    np.testing.assert_allclose(R4[0, 1], R4[0, 0])   # all exits land in z1
+    assert R4[1, 0] == 0.0
+
+
+def test_migration_matrix_tracks_drifting_zones():
+    """Moving zones: the coupling geometry is evaluated at the requested
+    time — two zones disjoint at t=0 that drift toward each other gain a
+    nonzero migration coupling at the meeting time, and the drift raises
+    the exit rate via the mean relative boundary speed."""
+    zs = ZoneSet(centers=((40.0, 100.0), (160.0, 100.0)),
+                 radii=(40.0, 40.0),
+                 drift=((1.0, 0.0), (-1.0, 0.0)))
+    R0 = migration_rate_matrix(zs, density=DENSITY, speed=1.0,
+                               t=0.0, area_side=200.0)
+    assert R0[0, 1] == 0.0
+    # after 30 s the centers are 60 m apart (< 2r): overlapping
+    R30 = migration_rate_matrix(zs, density=DENSITY, speed=1.0,
+                                t=30.0, area_side=200.0)
+    assert R30[0, 1] > 0.0 and R30[1, 0] > 0.0
+    # drifting boundary: exit rate uses E|v - u| > v
+    static = single_zone((40.0, 100.0), 40.0)
+    Rs = migration_rate_matrix(static, density=DENSITY, speed=1.0)
+    assert R0[0, 0] > Rs[0, 0]
+    # the coupled fixed point follows the same time parameter
+    p = paper_params(lam=0.05, M=1)
+    cm = paper_contact_model()
+    mz0 = solve_fixed_point_multizone(p, cm, zs, density=DENSITY,
+                                      speed=1.0, t=0.0, area_side=200.0)
+    mz30 = solve_fixed_point_multizone(p, cm, zs, density=DENSITY,
+                                       speed=1.0, t=30.0, area_side=200.0)
+    assert np.asarray(mz0.R)[0, 1] == 0.0
+    assert np.asarray(mz30.R)[0, 1] > 0.0
+
+
+def test_mean_relative_speed_limits():
+    assert mean_relative_speed(1.0, 0.0) == 1.0
+    # u >> v tends to u; u = v gives the classic 4/pi * v
+    assert mean_relative_speed(1.0, 50.0) == pytest.approx(50.0, rel=0.01)
+    assert mean_relative_speed(1.0, 1.0) == pytest.approx(4.0 / np.pi,
+                                                          rel=1e-3)
+
+
+def test_multizone_fixed_point_collapses_to_lemma1_at_k1():
+    p = paper_params(lam=0.05, M=1)
+    cm = paper_contact_model()
+    sol = solve_fixed_point(p, cm)
+    mz = solve_fixed_point_multizone(
+        p, cm, single_zone((100.0, 100.0), 100.0),
+        density=DENSITY, speed=1.0,
+    )
+    for f in ("a", "b", "S", "T_S", "r", "d_M", "d_I", "stability"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(mz, f))[0], float(getattr(sol, f)),
+            rtol=2e-5, err_msg=f,
+        )
+    np.testing.assert_allclose(float(mz.N_z[0]), p.N, rtol=1e-5)
+    np.testing.assert_allclose(float(mz.Lam_z[0]), p.Lam, rtol=1e-5)
+
+
+def test_multizone_dde_collapses_to_scalar_at_k1():
+    p = paper_params(lam=0.05, M=1)
+    cm = paper_contact_model()
+    sol = solve_fixed_point(p, cm)
+    mz = solve_fixed_point_multizone(
+        p, cm, single_zone((100.0, 100.0), 100.0),
+        density=DENSITY, speed=1.0,
+    )
+    dde = solve_observation_availability(p, sol, dt=0.1)
+    ddez = solve_observation_availability_multizone(p, mz, dt=0.1)
+    assert ddez.o.shape == (1, dde.o.shape[0])
+    np.testing.assert_allclose(np.asarray(ddez.o[0]), np.asarray(dde.o),
+                               atol=2e-4)
+
+
+def test_multizone_coupling_lifts_weak_zone():
+    """Migration coupling is monotone the right way: overlapping a
+    low-observation zone with a strong one raises its availability vs
+    the same zone isolated."""
+    p = paper_params(lam=0.05, M=1)
+    cm = paper_contact_model()
+    iso = solve_fixed_point_multizone(
+        p, cm, ZoneSet(centers=((60.0, 100.0), (300.0, 100.0)),
+                       radii=(50.0, 50.0)),
+        density=DENSITY, speed=1.0,
+    )
+    coupled = solve_fixed_point_multizone(
+        p, cm, ZoneSet(centers=((60.0, 100.0), (140.0, 100.0)),
+                       radii=(50.0, 50.0)),
+        density=DENSITY, speed=1.0,
+    )
+    # same zone geometry, but the coupled pair exchanges model carriers
+    assert float(coupled.a[0]) > float(iso.a[0])
+
+
+@pytest.mark.slow
+def test_two_zone_sim_matches_multizone_meanfield():
+    """Acceptance spot check: a k=2 overlapping-zone simulation validates
+    the coupled per-zone mean-field availability within the fig-2/4
+    sim-check tolerance (15% relative, mean-field optimistic-leaning)."""
+    zs = ZoneSet(centers=((75.0, 100.0), (125.0, 100.0)), radii=(60.0, 60.0))
+    p = paper_params(lam=0.05, M=1)
+    cm = paper_contact_model()
+    mz = solve_fixed_point_multizone(p, cm, zs, density=DENSITY, speed=1.0)
+    cfg = SimConfig(n_slots=12000, sample_every=24, zones=zs)
+    out = simulate(p, cfg, seed=0)
+    s0 = len(out.t) // 2
+    for z in range(2):
+        a_sim = float(out.availability_z[s0:, 0, z].mean())
+        a_mf = float(mz.a[z])
+        assert abs(a_mf - a_sim) / max(a_sim, 1e-9) < 0.15, (z, a_mf, a_sim)
+        assert a_mf >= a_sim - 0.05     # optimistic, not pessimistic
