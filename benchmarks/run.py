@@ -24,7 +24,8 @@ os.environ.setdefault(
 
 from benchmarks import (  # noqa: E402
     fig1_availability, fig2_capacity, fig3_stability, fig4_staleness,
-    fig_multizone, gossip_throughput, roofline_table, sim_engine,
+    fig_convergence, fig_multizone, gossip_throughput, roofline_table,
+    sim_engine,
 )
 
 BENCHES = {
@@ -32,6 +33,7 @@ BENCHES = {
     "fig2": fig2_capacity.main,
     "fig3": fig3_stability.main,
     "fig4": fig4_staleness.main,
+    "fig_convergence": fig_convergence.main,
     "fig_multizone": fig_multizone.main,
     "gossip": gossip_throughput.main,
     "roofline": roofline_table.main,

@@ -161,6 +161,64 @@ def run(quick: bool = False, chunk_size: int | None = None) -> list[dict]:
     ]
 
 
+def scaling(ns: list[int], n_slots: int = 48, reps: int = 2) -> list[dict]:
+    """Per-slot step throughput vs N, dense vs cells backend, at fixed
+    density (the paper geometry scaled so area grows as sqrt(N)).
+
+    One row per (N, backend) with slots/s and the implied per-slot cost;
+    the cells rows carry the dense speedup where both ran. The dense
+    backend is skipped above ``_DENSE_MAX_N`` (its d² context alone is
+    O(N²) floats — 1 GB at N = 16384). Written to
+    ``reports/bench/sim_scaling.json``; ``scripts/ci.sh --bench-smoke``
+    gates the N=4096 speedup, and the checked-in pr5 rows in
+    ``BENCH_sim_engine.json`` come from ``--scaling`` on the reference
+    host.
+    """
+    import math
+
+    from repro.configs.fg_paper import DENSITY
+
+    _DENSE_MAX_N = 8192
+    p = paper_params(lam=0.05, M=1)
+    pd = dynamic_params(p)
+    rows = []
+    for n in ns:
+        area = math.sqrt(n / DENSITY)
+        per_backend = {}
+        for backend in ("dense", "cells"):
+            if backend == "dense" and n > _DENSE_MAX_N:
+                continue
+            cfg = SimConfig(
+                n_nodes=n, area_side=area, rz_radius=area / 2.0,
+                n_slots=n_slots, sample_every=n_slots,
+                contact_backend=backend,
+            )
+            key = jax.random.PRNGKey(0)
+            t0 = time.time()
+            out = jax.block_until_ready(_run_single(key, pd, cfg, 1))
+            compile_s = time.time() - t0
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.time()
+                out = jax.block_until_ready(_run_single(key, pd, cfg, 1))
+                best = min(best, time.time() - t0)
+            ovf = out.get("nbr_overflow")
+            per_backend[backend] = n_slots / best
+            rows.append(dict(
+                n_nodes=n, backend=backend,
+                slots_per_s=round(n_slots / best, 1),
+                ms_per_slot=round(1e3 * best / n_slots, 2),
+                compile_s=round(compile_s, 1),
+                nbr_overflow=(None if ovf is None else int(ovf[-1])),
+                speedup_x=None,
+            ))
+        if "dense" in per_backend and "cells" in per_backend:
+            rows[-1]["speedup_x"] = round(
+                per_backend["cells"] / per_backend["dense"], 2
+            )
+    return rows
+
+
 def main(quick: bool = False, chunk_size: int | None = None) -> None:
     t0 = time.time()
     rows = run(quick, chunk_size=chunk_size)
@@ -195,10 +253,33 @@ def main(quick: bool = False, chunk_size: int | None = None) -> None:
                        carry_bytes=mem, host_transfer=transfer), f, indent=2)
 
 
+def main_scaling(ns: list[int]) -> None:
+    t0 = time.time()
+    rows = scaling(ns)
+    by_n = {}
+    for r in rows:
+        if r["speedup_x"] is not None:
+            by_n[r["n_nodes"]] = r["speedup_x"]
+    emit("sim_scaling", rows, t0,
+         " ".join(f"N{n}_cells_over_dense={x}x" for n, x in by_n.items()))
+    report_dir = os.path.join(os.path.dirname(__file__), "..", "reports",
+                              "bench")
+    os.makedirs(report_dir, exist_ok=True)
+    with open(os.path.join(report_dir, "sim_scaling.json"), "w") as f:
+        json.dump(dict(rows=rows, n_devices=len(jax.devices())), f, indent=2)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="scenarios per dispatched chunk (streaming path)")
+    ap.add_argument("--scaling", default=None,
+                    help="comma-separated N list: time the dense vs cells "
+                         "contact backends at fixed density instead of "
+                         "running the sweep benchmark")
     args = ap.parse_args()
-    main(quick=args.quick, chunk_size=args.chunk_size)
+    if args.scaling:
+        main_scaling([int(x) for x in args.scaling.split(",")])
+    else:
+        main(quick=args.quick, chunk_size=args.chunk_size)

@@ -21,13 +21,23 @@
 # Usage:  bash scripts/ci.sh [--bench-smoke] [--nightly] [extra pytest args...]
 #
 #   --nightly       run the full suite including `slow`-marked tests
-#                   (the tier split: tier-1 excludes them).
+#                   (the tier split: tier-1 excludes them). The slow lane
+#                   includes the sim→mean-field convergence sweep
+#                   (tests/test_sim_convergence.py: the availability
+#                   error vs the Lemma 1-3 prediction must shrink from
+#                   the paper-scale N to a cells-backend large-N point).
 #   --bench-smoke   additionally gate on sweep performance: run the quick
 #                   sim_engine bench and fail if (a) the same-run
 #                   reduced-sweep/serial speedup ratio regressed more than 30%
 #                   against the checked-in BENCH_sim_engine.json baseline,
 #                   or (b) the reduced-output sweep path ships less than
 #                   10x fewer bytes to the host than the full-trace path.
+#                   Also runs the large-N contact-backend smoke: one
+#                   N=4096 scaling measurement, failing unless the
+#                   cell-list backend beats the dense O(N²) sweep by
+#                   >= 2x (the checked-in pr5 rows show ~2.9x here and
+#                   8x at N=8192; 2x leaves noise headroom) with zero
+#                   neighbor-list overflow.
 #                   The speedup ratio scales with the device (core)
 #                   count, so that gate only enforces when the host
 #                   exposes the same number of XLA devices the baseline
@@ -113,6 +123,30 @@ if cur_ndev != base_ndev:
 elif ratio < floor:
     print("FAIL: reduced-sweep speedup regressed more than 30% vs "
           "BENCH_sim_engine.json")
+    fail = True
+sys.exit(1 if fail else 0)
+EOF
+
+  echo
+  echo "=== bench-smoke: large-N cell-list contact backend gate (N=4096) ==="
+  python -m benchmarks.sim_engine --scaling 4096
+  python - <<'EOF'
+import json, sys
+
+with open("reports/bench/sim_scaling.json") as f:
+    rows = json.load(f)["rows"]
+cells = next(r for r in rows if r["backend"] == "cells")
+speedup = cells["speedup_x"]
+print(f"N=4096 cells-over-dense speedup: {speedup}x (gate: >= 2x), "
+      f"nbr_overflow={cells['nbr_overflow']}")
+fail = False
+if speedup is None or speedup < 2.0:
+    print("FAIL: cell-list backend no longer beats the dense sweep at "
+          "N=4096")
+    fail = True
+if cells["nbr_overflow"] != 0:
+    print("FAIL: auto-sized neighbor lists overflowed (contact detection "
+          "undercounted)")
     fail = True
 sys.exit(1 if fail else 0)
 EOF

@@ -54,6 +54,11 @@ __all__ = [
     "pairwise_close_ref",
     "candidate_best_ref",
     "zone_words",
+    "cell_close_words",
+    "cell_close_words_ref",
+    "padded_cell_id",
+    "cell_neighborhood_offsets",
+    "interior_cell_ids",
 ]
 
 _FAR = 1e9  # padding coordinate: d2 = O(1e18) is finite and > any r_tx²
@@ -191,9 +196,11 @@ def candidate_best_ref(d2b3, closew, prevw, elig):
         jnp.where(blk == bmin[:, None], jnp.arange(32, dtype=jnp.int32), 32),
         axis=-1,
     )
-    # no-candidate rows report index 0 (the historical all-sentinel argmin),
-    # matching the Pallas kernel bit for bit on every output
-    return jnp.where(has, wstar * 32 + lane, 0), has
+    # no-candidate rows report the -1 sentinel (historically they leaked
+    # the all-sentinel argmin's index 0, which callers had to remember to
+    # gate on ``has``); the Pallas kernel applies the same where, so the
+    # two stay bitwise equal on every output
+    return jnp.where(has, wstar * 32 + lane, -1), has
 
 
 def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2):
@@ -255,8 +262,11 @@ def _kernel(xi_ref, yi_ref, x_ref, y_ref, zwi_ref, zw_ref, eligi_ref,
         & (eligi_ref[0] != 0)[:, None] & (elig_ref[0] != 0)[None, :]
     )
     scores = jnp.where(cand, d2, jnp.inf)
-    bestj_ref[0] = jnp.argmin(scores, axis=1).astype(jnp.int32)
-    has_ref[0] = jnp.isfinite(jnp.min(scores, axis=1)).astype(jnp.int32)
+    has = jnp.isfinite(jnp.min(scores, axis=1))
+    bestj_ref[0] = jnp.where(
+        has, jnp.argmin(scores, axis=1).astype(jnp.int32), -1
+    )
+    has_ref[0] = has.astype(jnp.int32)
 
 
 @functools.partial(
@@ -320,4 +330,150 @@ def pairwise_contacts(pos, in_rz, elig, prevw, r_tx2, *, blk_i: int = 128,
         interpret=interpret,
     )(x, y, x, y, rz, rz, el, el, prevw)
     return closew[:n, :nw], best_j[0, :n], has[0, :n] != 0
+
+
+# --------------------------------------------------------------------------
+# Cell-list (3×3 neighborhood) close-word kernel — the large-N contact path
+# --------------------------------------------------------------------------
+#
+# Inputs are *cell-major* planes built by ``repro.sim.cells``: for a
+# padded grid of ``(ncx + 2) * (ncy + 2)`` cells (one-cell empty border
+# ring) and per-cell capacity ``cap``, each plane is ``(n_pad_cells,
+# cap)`` — x, y (far-filled for empty slots), the uint32 zone word (0 for
+# empty slots) and the node id (-1 for empty slots). For every *interior*
+# cell the pass compares its ≤ cap nodes against the ≤ 9·cap nodes of the
+# 3×3 neighborhood and emits the close decision **bit-packed over the
+# candidate axis**: ``(ncx * ncy, cap, ceil(9 cap / 32))`` uint32 words.
+# Neither an (N, N) object nor even an (N, 9 cap) boolean ever reaches
+# HBM — the word output is 32x smaller, and the caller
+# (``repro.sim.cells.neighbor_lists``) turns it into bounded per-node
+# neighbor lists.
+#
+# The Pallas grid runs one step per interior cell; the 9 neighbor blocks
+# of each input plane are expressed as 9 views of the same array whose
+# index maps add the flattened neighborhood offsets — the border ring
+# makes every offset in-bounds. Like the pairwise kernel, outputs are
+# discrete (packed bits) so kernel and oracle are bitwise comparable.
+
+
+_CELL_PLANES = 4            # x, y, zone word, node id
+_NEIGHBORHOOD = 9
+
+
+# The padded-grid layout — border ring of width 1, row-major interior,
+# stride ncy + 2 — is defined ONCE here; ``repro.sim.cells`` (binning,
+# node-centric gathers) and the kernel/oracle below all derive their
+# indexing from these two helpers.
+
+
+def padded_cell_id(cx, cy, ncy: int):
+    """Flattened padded-grid id of interior cell ``(cx, cy)``."""
+    return (cx + 1) * (ncy + 2) + (cy + 1)
+
+
+def cell_neighborhood_offsets(ncy: int) -> tuple[int, ...]:
+    """The 3×3 neighborhood as flattened padded-grid offsets."""
+    s = ncy + 2
+    return tuple(dx * s + dy for dx in (-1, 0, 1) for dy in (-1, 0, 1))
+
+
+def interior_cell_ids(ncx: int, ncy: int) -> jnp.ndarray:
+    """(ncx * ncy,) padded-grid ids of the interior cells, row-major."""
+    cxy = jnp.arange(ncx * ncy, dtype=jnp.int32)
+    return padded_cell_id(cxy // ncy, cxy % ncy, ncy)
+
+
+def _cell_close(xi, yi, zi, ii, xj, yj, zj, ij, r_tx2):
+    """The shared close decision of kernel and oracle: (rows, cands) ->
+    packed close words. ``i`` axes are the center cell's slots, ``j``
+    axes the concatenated 3×3 candidate slots."""
+    from repro.sim.compute import pack_mask
+
+    dx = xi[:, None] - xj[None, :]
+    dy = yi[:, None] - yj[None, :]
+    d2 = dx * dx + dy * dy
+    close = (
+        (d2 <= r_tx2)
+        & ((zi[:, None] & zj[None, :]) != 0)
+        & (ii[:, None] != ij[None, :])           # same id = same node (or
+        & (ij[None, :] >= 0)                     # both empty, id -1)
+    )
+    return pack_mask(close)
+
+
+def cell_close_words_ref(xc, yc, zc, idc, ncx: int, ncy: int, r_tx2):
+    """Pure-``jnp`` oracle of the cell kernel (word domain, bit-identical).
+
+    Args are the cell-major planes described above (``(n_pad_cells,
+    cap)`` each); returns ``(ncx * ncy, cap, ceil(9 cap / 32))`` packed
+    close words for the interior cells in row-major (cx, cy) order.
+    """
+    cap = xc.shape[1]
+    pids = interior_cell_ids(ncx, ncy)                       # (C,)
+    nbrp = pids[:, None] + jnp.asarray(
+        cell_neighborhood_offsets(ncy), jnp.int32
+    )
+
+    def gather9(plane):
+        return plane[nbrp].reshape(ncx * ncy, _NEIGHBORHOOD * cap)
+
+    return jax.vmap(_cell_close, in_axes=(0,) * 8 + (None,))(
+        xc[pids], yc[pids], zc[pids], idc[pids],
+        gather9(xc), gather9(yc), gather9(zc), gather9(idc), r_tx2,
+    )
+
+
+def _cell_kernel(*refs, r_tx2, cap):
+    # refs: 4 planes x 9 neighborhood views (center = offset index 4),
+    # then the output block
+    groups = [refs[p * _NEIGHBORHOOD:(p + 1) * _NEIGHBORHOOD]
+              for p in range(_CELL_PLANES)]
+    out_ref = refs[_CELL_PLANES * _NEIGHBORHOOD]
+    xg, yg, zg, ig = groups
+    xj = jnp.concatenate([r[0] for r in xg])     # (9 * cap,)
+    yj = jnp.concatenate([r[0] for r in yg])
+    zj = jnp.concatenate([r[0] for r in zg])
+    ij = jnp.concatenate([r[0] for r in ig])
+    out_ref[0] = _cell_close(
+        xg[4][0], yg[4][0], zg[4][0], ig[4][0], xj, yj, zj, ij, r_tx2
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("ncx", "ncy", "r_tx2", "interpret")
+)
+def cell_close_words(xc, yc, zc, idc, ncx: int, ncy: int, r_tx2, *,
+                     interpret: bool = False):
+    """Tiled Pallas 3×3-cell-neighborhood close pass (see block comment).
+
+    One grid step per interior cell; each input plane contributes nine
+    ``(1, cap)`` blocks whose index maps translate the interior cell
+    index to the padded-grid neighbor cell. Pinned bitwise against
+    :func:`cell_close_words_ref` in ``tests/test_kernels.py``.
+    """
+    cap = xc.shape[1]
+    offsets = cell_neighborhood_offsets(ncy)
+    nwords = (_NEIGHBORHOOD * cap + 31) // 32
+
+    def imap(i, off=0):
+        return (padded_cell_id(i // ncy, i % ncy, ncy) + off, 0)
+
+    in_specs = []
+    inputs = []
+    for plane in (xc, yc, zc, idc):
+        for off in offsets:
+            in_specs.append(
+                pl.BlockSpec((1, cap), functools.partial(imap, off=off))
+            )
+            inputs.append(plane)
+
+    kernel = functools.partial(_cell_kernel, r_tx2=r_tx2, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(ncx * ncy,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, cap, nwords), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((ncx * ncy, cap, nwords), jnp.uint32),
+        interpret=interpret,
+    )(*inputs)
 

@@ -19,6 +19,12 @@ Module map
                   sweep dispatches to ``repro.kernels.contacts`` (fused
                   Pallas kernel on TPU, bit-identical word-domain ``jnp``
                   oracle elsewhere).
+``cells``         O(N) cell-list contact detection for large N
+                  (``SimConfig.contact_backend="cells"`` / ``"auto"``):
+                  uniform spatial grid, bounded ascending per-node
+                  neighbor lists with an overflow counter, match-for-match
+                  equivalent to the dense sweep while never materializing
+                  an (N, N) object.
 ``compute``       Merge/train priority queues as vectorized scatter ops —
                   the traced program is independent of the model count M.
 ``observations``  Observation ring, observer selection, job completions,
@@ -63,9 +69,10 @@ from repro.sim.mobility import (
 )
 from repro.sim.observations import estimate_o_of_tau
 from repro.sim.sweep import SweepPlan, SweepSummary, plan_sweep
-from repro.sim import sweep
+from repro.sim import cells, sweep
 
 __all__ = [
+    "cells",
     "BatchSimOutputs",
     "SimConfig",
     "SimOutputs",

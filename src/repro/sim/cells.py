@@ -1,0 +1,340 @@
+"""Cell-list (spatial-hash) contact detection: O(N) per slot.
+
+The dense contact path builds a packed ``(N, ceil(N/32))`` contact matrix
+every slot — O(N²) compute *and* memory — which caps validated system
+sizes near the paper's N ≈ 157. This module is the large-N alternative:
+the classic molecular-dynamics **cell list**. The area is covered by a
+uniform grid of square cells with side ≥ the transmission radius, so any
+pair within ``r_tx`` of each other lives in the same or an adjacent cell;
+contact detection then only ever compares a node against the ≤ 3×3 cell
+neighborhood around it:
+
+1. **Binning** (:func:`bin_nodes`) — each node's cell id, a cell-id sort
+   of the node indices (``jnp.argsort`` is stable, so nodes within a cell
+   stay in ascending index order), and a ``(n_cells_padded, cap_cell)``
+   scatter of node ids per cell. The padded grid carries an empty
+   one-cell border ring, so 3×3 neighborhood indexing never needs a
+   branch at the area boundary.
+2. **Neighbor lists** (:func:`neighbor_lists`) — per node, the ids of all
+   *close* nodes (within ``r_tx`` and sharing a Replication Zone — the
+   same zone-word gate as the dense path), compacted to a bounded
+   ``(N, nbr_cap)`` int32 list, **sorted ascending by neighbor id** and
+   padded with ``-1``. Sorting by id makes the candidate argmin's
+   first-minimum tie-break identical to the dense path's
+   lowest-column-first rule, which is what lets the cells path reproduce
+   dense partner matching *exactly* (see ``tests/test_sim_cells.py``).
+3. **Candidate matching** (:func:`candidate_best`) — the per-run stage:
+   among a node's current neighbors, the best (minimum-d²) *new* contact
+   with both sides eligible; "new" is a membership test against the
+   previous slot's neighbor list, the cells-path replacement for the
+   packed ``prev_close`` matrix.
+
+All d² values use the same subtraction order as the dense sweep
+(``pos[i] - pos[j]`` — row node minus candidate), so the float compares
+are bitwise identical pair-for-pair; as long as no list overflows, the
+cells path produces the same matches, the same deliveries, and hence the
+same traces as the dense path, bit for bit.
+
+Capacity model: both caps are *static* (they size arrays). Exceeding
+either is not an error — a traced program cannot raise — it degrades:
+a node that overflows its cell buffer sits out contact detection for
+the slot (on every execution path, keeping the close relation
+symmetric and backends identical), and a neighbor list past ``nbr_cap``
+drops its highest-id entries. Both kinds of drop are counted into the
+per-slot overflow diagnostic (dropped nodes + cut list entries; 0 ⇔
+contact detection exact); the engine carries its running max as
+``nbr_overflow`` and reports it per sample — any nonzero value means
+caps should be raised (``SimConfig.cell_cap`` / ``SimConfig.nbr_cap``).
+The auto sizing (:func:`make_grid`) targets a uniform spatial density
+with a ≥ 6σ Poisson margin, which also covers the ~2.25x center peaking
+of RWP.
+
+On TPU backends the 3×3-neighborhood distance/zone/threshold pass runs
+as a tiled Pallas kernel (``repro.kernels.contacts.cell_close_words``);
+everywhere else a node-centric ``jnp`` gather computes the same bits.
+Both reduce to identical neighbor lists (the kernel's word-domain oracle
+is pinned bit-for-bit in ``tests/test_kernels.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CellGrid",
+    "contact_backend",
+    "make_grid",
+    "bin_nodes",
+    "neighbor_lists",
+    "candidate_best",
+]
+
+#: ``contact_backend="auto"`` switches to cells at this node count (the
+#: dense path stays bitwise-pinned for every paper-scale config below it).
+AUTO_CELLS_MIN_N = 1024
+
+#: Minimum number of grid cells for the cells path to make sense — below
+#: this the 3×3 neighborhood covers most of the area and dense wins.
+_MIN_CELLS = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class CellGrid:
+    """Static geometry of the uniform contact grid (hashable; derived
+    from the ``SimConfig`` so it rides the jit static args).
+
+    ``cell >= r_tx`` guarantees the 3×3 neighborhood covers the
+    transmission radius. ``n_pad_cells = (ncx + 2) * (ncy + 2)`` includes
+    the empty border ring.
+    """
+
+    ncx: int
+    ncy: int
+    cell: float
+    cap_cell: int   # node-id slots per cell
+    nbr_cap: int    # close-neighbor slots per node
+
+    @property
+    def n_cells(self) -> int:
+        return self.ncx * self.ncy
+
+    @property
+    def n_pad_cells(self) -> int:
+        return (self.ncx + 2) * (self.ncy + 2)
+
+    def padded_cell_id(self, cx, cy):
+        """Flattened padded-grid id of interior cell ``(cx, cy)`` (the
+        one layout definition in ``repro.kernels.contacts``)."""
+        from repro.kernels.contacts import padded_cell_id
+
+        return padded_cell_id(cx, cy, self.ncy)
+
+
+def _auto_caps(n_nodes: int, area_side: float, r_tx: float,
+               cell: float) -> tuple[int, int]:
+    """(cap_cell, nbr_cap) with a 6σ Poisson margin over the uniform
+    density — generous at paper densities, still tiny next to N."""
+    mu_cell = n_nodes * cell * cell / (area_side * area_side)
+    cap_cell = max(4, math.ceil(mu_cell + 6.0 * math.sqrt(mu_cell) + 6.0))
+    mu_nbr = n_nodes * math.pi * r_tx * r_tx / (area_side * area_side)
+    nbr_cap = max(8, math.ceil(mu_nbr + 6.0 * math.sqrt(mu_nbr) + 8.0))
+    return cap_cell, nbr_cap
+
+
+def make_grid(cfg) -> CellGrid:
+    """Build the :class:`CellGrid` for a ``SimConfig``-like object.
+
+    The cell count per axis is the largest giving ``cell >= r_tx``, then
+    shrunk by one when the margin is under ``1e-4 * r_tx`` — at the paper
+    geometry 200 m / 5 m divides exactly, and a zero margin would leave
+    radius-boundary pairs one float ulp from spanning two cells.
+    """
+    ncx = max(1, int(math.floor(cfg.area_side / cfg.r_tx)))
+    if ncx > 1 and cfg.area_side / ncx - cfg.r_tx < 1e-4 * cfg.r_tx:
+        ncx -= 1
+    cell = cfg.area_side / ncx
+    cap_cell, nbr_cap = _auto_caps(cfg.n_nodes, cfg.area_side, cfg.r_tx, cell)
+    if getattr(cfg, "cell_cap", None) is not None:
+        cap_cell = int(cfg.cell_cap)
+    if getattr(cfg, "nbr_cap", None) is not None:
+        nbr_cap = int(cfg.nbr_cap)
+    return CellGrid(ncx=ncx, ncy=ncx, cell=cell, cap_cell=cap_cell,
+                    nbr_cap=nbr_cap)
+
+
+def contact_backend(cfg) -> str:
+    """Resolve ``cfg.contact_backend`` to ``"dense"`` or ``"cells"``.
+
+    ``"auto"`` keeps the dense path (bitwise the PR-4 engine) below
+    :data:`AUTO_CELLS_MIN_N` nodes or when the geometry yields too few
+    cells for the 3×3 neighborhood to prune anything; above it, cells.
+    """
+    mode = getattr(cfg, "contact_backend", "auto")
+    if mode in ("dense", "cells"):
+        return mode
+    if mode != "auto":
+        raise ValueError(
+            f"unknown contact_backend {mode!r}; known: 'dense', 'cells', "
+            "'auto'"
+        )
+    # judge the grid that would actually be built (make_grid applies the
+    # exact-divide safety decrement), not a re-derived cell count
+    if (cfg.n_nodes >= AUTO_CELLS_MIN_N
+            and make_grid(cfg).n_cells >= _MIN_CELLS):
+        return "cells"
+    return "dense"
+
+
+def bin_nodes(pos: jnp.ndarray, grid: CellGrid):
+    """Bin nodes into the padded cell buffer.
+
+    Returns ``(cellbuf, pcid, binned, bin_overflow)``:
+
+    * ``cellbuf`` — ``(n_pad_cells, cap_cell)`` int32 node ids, ``-1``
+      empty; within a cell, ids ascend (stable sort order).
+    * ``pcid``    — ``(N,)`` int32 padded-grid cell id per node.
+    * ``binned``  — ``(N,)`` bool, node made it into the buffer. A
+      dropped node takes no part in contact detection this slot (it is
+      neither found *nor searches* — keeping the close relation
+      symmetric and the jnp path identical to the kernel path, which
+      can only emit rows for buffered nodes).
+    * ``bin_overflow`` — int32, the number of dropped nodes
+      (``~binned``).
+    """
+    n = pos.shape[0]
+    cell = jnp.float32(grid.cell)
+    cx = jnp.clip((pos[:, 0] // cell).astype(jnp.int32), 0, grid.ncx - 1)
+    cy = jnp.clip((pos[:, 1] // cell).astype(jnp.int32), 0, grid.ncy - 1)
+    pcid = grid.padded_cell_id(cx, cy)
+
+    order = jnp.argsort(pcid)                    # stable: ids ascend in-cell
+    sorted_cid = pcid[order]
+    # rank of each node within its cell: position minus the first index
+    # holding the same cell id in the sorted sequence
+    first = jnp.searchsorted(sorted_cid, sorted_cid, side="left")
+    rank = jnp.arange(n, dtype=jnp.int32) - first.astype(jnp.int32)
+
+    flat = jnp.full((grid.n_pad_cells * grid.cap_cell,), -1, jnp.int32)
+    slot = sorted_cid * grid.cap_cell + rank
+    # ranks beyond the cap scatter out of range and are dropped
+    slot = jnp.where(rank < grid.cap_cell, slot,
+                     grid.n_pad_cells * grid.cap_cell)
+    cellbuf = flat.at[slot].set(order.astype(jnp.int32), mode="drop")
+    cellbuf = cellbuf.reshape(grid.n_pad_cells, grid.cap_cell)
+    binned = jnp.zeros((n,), bool).at[order].set(rank < grid.cap_cell)
+    bin_overflow = (n - jnp.sum(binned)).astype(jnp.int32)
+    return cellbuf, pcid, binned, bin_overflow
+
+
+def _compact_sorted(cand: jnp.ndarray, closebit: jnp.ndarray, nbr_cap: int):
+    """Compact a masked candidate-id row set to the ``(N, nbr_cap)``
+    ascending-id neighbor list (+ per-node dropped-neighbor count)."""
+    n = cand.shape[0]
+    key = jnp.where(closebit, cand, n)
+    skey = jnp.sort(key, axis=1)[:, :nbr_cap]
+    nbr = jnp.where(skey < n, skey, -1).astype(jnp.int32)
+    n_close = jnp.sum(closebit, axis=1)
+    dropped = jnp.maximum(n_close - nbr_cap, 0)
+    return nbr, dropped
+
+
+def neighbor_lists(pos, zonew, grid: CellGrid, r_tx2, *,
+                   use_kernel: bool | None = None, interpret: bool = False):
+    """Per-node close-neighbor lists via the cell grid: ``(nbr, overflow)``.
+
+    ``nbr`` is ``(N, nbr_cap)`` int32 — ids of nodes within ``r_tx``
+    sharing a zone (``zonew`` is the packed ``(N,)`` uint32 zone word),
+    ascending, ``-1``-padded — the cells-path equivalent of one row of
+    the dense packed contact matrix. ``overflow`` is the drop
+    diagnostic: the number of nodes excluded by cell-buffer overflow
+    plus the number of neighbor-list entries cut by ``nbr_cap``; 0
+    means contact detection was exact this slot, any other value means
+    it undercounted and the caps should grow.
+
+    Everything here depends only on positions and zone membership, so in
+    sweep batches this is the shared per-seed stage (the engine wraps the
+    result in ``shared_barrier``). ``use_kernel`` forces the Pallas
+    3×3-cell kernel path (default: TPU backends only; ``interpret=True``
+    is for tests); both paths produce identical lists — under
+    cell-buffer overflow too, because dropped nodes sit out contact
+    detection entirely on either path (see :func:`bin_nodes`).
+    """
+    from repro.kernels.contacts import cell_neighborhood_offsets
+
+    n = pos.shape[0]
+    cellbuf, pcid, binned, bin_overflow = bin_nodes(pos, grid)
+    offs = jnp.asarray(cell_neighborhood_offsets(grid.ncy), jnp.int32)
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+
+    if use_kernel:
+        from repro.kernels.contacts import cell_close_words, interior_cell_ids
+        from repro.sim.compute import unpack_mask
+
+        # cell-major far-padded coordinate/zone/id planes
+        idc = cellbuf
+        safe = jnp.clip(idc, 0, n - 1)
+        empty = idc < 0
+        xc = jnp.where(empty, jnp.float32(1e9), pos[safe, 0])
+        yc = jnp.where(empty, jnp.float32(1e9), pos[safe, 1])
+        zc = jnp.where(empty, jnp.uint32(0), zonew[safe])
+        words = cell_close_words(xc, yc, zc, idc, grid.ncx, grid.ncy,
+                                 r_tx2, interpret=interpret)
+        ncand = 9 * grid.cap_cell
+        # rows back to node order (dropped nodes have no row: all-zero
+        # close bits, matching their exclusion on the jnp path)
+        ids_int = cellbuf[interior_cell_ids(grid.ncx, grid.ncy)]
+        rows = jnp.zeros((n, words.shape[-1]), jnp.uint32)
+        rows = rows.at[
+            jnp.where(ids_int >= 0, ids_int, n).reshape(-1)
+        ].set(words.reshape(-1, words.shape[-1]), mode="drop")
+        # the kernel's candidate axis for a node in cell c is exactly the
+        # 3×3 scan of cellbuf around c — the same gather the jnp branch
+        # uses
+        cand = cellbuf[pcid[:, None] + offs[None, :]].reshape(n, ncand)
+        closebit = unpack_mask(rows, ncand)
+    else:
+        cand = cellbuf[pcid[:, None] + offs[None, :]]       # (N, 9, cap)
+        cand = cand.reshape(n, 9 * grid.cap_cell)
+        cidx = jnp.clip(cand, 0, n - 1)
+        # same subtraction order as the dense sweep: row node minus column
+        dx = pos[:, 0, None] - pos[cidx, 0]
+        dy = pos[:, 1, None] - pos[cidx, 1]
+        d2 = dx * dx + dy * dy
+        closebit = (
+            binned[:, None]          # dropped nodes sit out symmetrically
+            & (cand >= 0)
+            & (cand != jnp.arange(n, dtype=cand.dtype)[:, None])
+            & (d2 <= r_tx2)
+            & ((zonew[:, None] & zonew[cidx]) != 0)
+        )
+
+    nbr, dropped = _compact_sorted(cand, closebit, grid.nbr_cap)
+    overflow = (bin_overflow + jnp.sum(dropped)).astype(jnp.int32)
+    return nbr, overflow
+
+
+def candidate_best(pos, nbr, prev_nbr, elig):
+    """Per-run stage: best *new*-contact candidate per node, ``(best, has)``.
+
+    A neighbor ``j`` of node ``i`` is a candidate iff it was not in
+    ``i``'s previous-slot neighbor list and both sides are eligible; the
+    winner minimizes d² with ties to the lowest ``j`` (``nbr`` ascends,
+    so the first slot attaining the minimum is the lowest id — the dense
+    path's first-column-minimum rule). ``best`` is ``-1`` where no
+    candidate exists; finish matching with
+    :func:`repro.sim.contacts.mutualize`.
+
+    No radius check happens here: ``nbr`` is by contract the close set
+    (within ``r_tx``, zone-shared) of this slot. The d² compare runs on
+    bitcast uint32 scores exactly like the dense ``candidate_best_ref``
+    (non-negative floats order identically as integers; the all-ones
+    sentinel is +inf).
+    """
+    n, k = nbr.shape
+    j = jnp.clip(nbr, 0, n - 1)
+    dx = pos[:, 0, None] - pos[j, 0]
+    dy = pos[:, 1, None] - pos[j, 1]
+    d2 = dx * dx + dy * dy
+    was_close = jnp.any(nbr[:, :, None] == prev_nbr[:, None, :], axis=-1)
+    cand = (nbr >= 0) & ~was_close & elig[:, None] & elig[j]
+
+    ff = jnp.uint32(0xFFFFFFFF)
+    d2b = jax.lax.bitcast_convert_type(d2, jnp.uint32)
+    score = jnp.where(cand, d2b, ff)
+    best_score = jnp.min(score, axis=1)
+    has = best_score != ff
+    slot = jnp.min(
+        jnp.where(score == best_score[:, None],
+                  jnp.arange(k, dtype=jnp.int32), k),
+        axis=1,
+    )
+    best = jnp.take_along_axis(
+        nbr, jnp.clip(slot, 0, k - 1)[:, None], axis=1
+    )[:, 0]
+    return jnp.where(has, best, -1), has

@@ -16,6 +16,12 @@ per-run best new-contact candidate + mutual-best matching). On TPU the
 fused Pallas kernel runs the whole sweep in the second stage instead.
 Only O(N) work — the partner-proximity bit and the mutual-best check —
 remains here. Exchange snapshots (``snap``) travel bit-packed as well.
+
+This module is the *dense* contact backend. For large N the engine
+swaps these stages for the O(N) cell-list backend (``repro.sim.cells``,
+``SimConfig.contact_backend``), which reuses :func:`pair_still_close`
+and :func:`mutualize` and is match-for-match equivalent while never
+materializing an (N, N) object.
 """
 
 from __future__ import annotations
@@ -26,6 +32,7 @@ import jax.numpy as jnp
 from repro.kernels.contacts import candidate_best_ref, pairwise_close_ref
 
 __all__ = [
+    "mutualize",
     "mutual_best_pairs",
     "close_matrix",
     "pair_still_close",
@@ -38,13 +45,18 @@ __all__ = [
 ]
 
 
-def _mutualize(best: jnp.ndarray, has: jnp.ndarray) -> jnp.ndarray:
-    """Reciprocity check shared by the dense and packed matchers: keep
-    ``best[i]`` only where i and best[i] each have a candidate and point
-    at each other; -1 elsewhere."""
+def mutualize(best: jnp.ndarray, has: jnp.ndarray) -> jnp.ndarray:
+    """Reciprocity check shared by the dense, packed, and cell-list
+    matchers: keep ``best[i]`` only where i and best[i] each have a
+    candidate and point at each other; -1 elsewhere. ``best`` may carry
+    the -1 no-candidate sentinel (it indexes the last row, which the
+    ``has`` gate then discards)."""
     n = best.shape[0]
     mutual = (best[best] == jnp.arange(n)) & has & has[best]
     return jnp.where(mutual, best, -1)
+
+
+_mutualize = mutualize
 
 
 def mutual_best_pairs(scores: jnp.ndarray) -> jnp.ndarray:

@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.meanfield import FGParams
 from repro.core.zones import ZoneSet, single_zone
-from repro.sim import compute, contacts, observations
+from repro.sim import cells, compute, contacts, observations
 from repro.sim.mobility import get_mobility
 from repro.sim.state import init_sim_state
 
@@ -76,6 +76,28 @@ class SimConfig:
                                          # legacy single centered disc of
                                          # radius rz_radius (bitwise-equal
                                          # to an explicit k=1 ZoneSet)
+    contact_backend: str = "auto"        # "dense" (O(N²) packed sweep) |
+                                         # "cells" (O(N) cell lists) |
+                                         # "auto" (dense below
+                                         # cells.AUTO_CELLS_MIN_N nodes —
+                                         # paper-scale runs stay bitwise)
+    cell_cap: int | None = None          # cells: node slots per grid cell
+                                         # (None = density-derived auto)
+    nbr_cap: int | None = None           # cells: neighbor-list cap per node
+                                         # (None = density-derived auto)
+    speed_range: tuple | None = None     # (lo, hi): per-node speeds drawn
+                                         # U(lo, hi) (rdm mobility only —
+                                         # validated below); None = every
+                                         # node moves at cfg.speed
+                                         # (bitwise the legacy engine)
+
+    def __post_init__(self):
+        if self.speed_range is not None and self.mobility != "rdm":
+            raise ValueError(
+                "speed_range is implemented for the 'rdm' mobility model "
+                f"only (got mobility={self.mobility!r}); the other models "
+                "would silently run at the constant cfg.speed"
+            )
 
 
 def effective_zones(cfg: SimConfig) -> ZoneSet:
@@ -103,6 +125,9 @@ class SimOutputs:
     availability_z: np.ndarray | None = None   # (S, M, K_zones)
     stored_info_z: np.ndarray | None = None    # (S, K_zones)
     n_in_rz_z: np.ndarray | None = None        # (S, K_zones)
+    # cells contact backend only: running max of close pairs dropped per
+    # slot by the bounded neighbor lists (0 = contact detection exact)
+    nbr_overflow: np.ndarray | None = None     # (S,)
 
 
 @dataclasses.dataclass
@@ -126,6 +151,7 @@ class BatchSimOutputs:
     availability_z: np.ndarray | None = None   # (P, R, S, M, K_zones)
     stored_info_z: np.ndarray | None = None    # (P, R, S, K_zones)
     n_in_rz_z: np.ndarray | None = None        # (P, R, S, K_zones)
+    nbr_overflow: np.ndarray | None = None     # (P, R, S) cells backend only
     plan: Any = None             # SweepPlan of the producing sweep
     devices_used: int | None = None
     host_bytes: int | None = None
@@ -154,6 +180,7 @@ class BatchSimOutputs:
             availability_z=_z(self.availability_z),
             stored_info_z=_z(self.stored_info_z),
             n_in_rz_z=_z(self.n_in_rz_z),
+            nbr_overflow=_z(self.nbr_overflow),
         )
 
 
@@ -239,6 +266,12 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
     lam, tau_l, Lam = p_dyn["lam"], p_dyn["tau_l"], p_dyn["Lam"]
     r_tx2 = cfg.r_tx**2
     model = get_mobility(cfg.mobility)
+    # contact-backend dispatch is static (cfg is a jit static arg): the
+    # dense path traces exactly the PR-4 program; the cells path swaps
+    # the O(N²) sweep for the cell-list neighbor stages and carries the
+    # bounded neighbor list as ``prev_close``
+    use_cells = cells.contact_backend(cfg) == "cells"
+    grid = cells.make_grid(cfg) if use_cells else None
 
     zs = effective_zones(cfg)
     kz = zs.k
@@ -291,22 +324,35 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         serving, serv_left = churned["serving"], churned["serv_left"]
 
         # ---- contact dynamics ----
-        # The O(N²) pairwise sweep runs in two stages: the shared part
-        # (positions/RZ only — computed once per *seed* in sweep batches)
-        # happens first so the partner-proximity bit is a word lookup in
-        # its packed contact matrix; the per-run candidate search follows
-        # once this slot's eligibility is known. On TPU the fused Pallas
-        # kernel runs later instead (no early matrix) and the O(N)
-        # distance recompute supplies the proximity bit.
-        closew_shared, d2ctx = contacts.pairwise_close(mob.pos, member, r_tx2)
-        if closew_shared is None:
+        # Dense backend: the O(N²) pairwise sweep in two stages — the
+        # shared part (positions/RZ only — computed once per *seed* in
+        # sweep batches) first, so the partner-proximity bit is a word
+        # lookup in its packed contact matrix; the per-run candidate
+        # search follows once this slot's eligibility is known. On TPU
+        # the fused Pallas kernel runs later instead (no early matrix)
+        # and the O(N) distance recompute supplies the proximity bit.
+        # Cells backend: bounded per-node neighbor lists from the cell
+        # grid (also shared per seed — they too depend only on positions
+        # and zones) replace the matrix; the partner-proximity bit is
+        # the O(N) pair recompute, bitwise the same criterion.
+        if use_cells:
+            nbr, ovf = cells.neighbor_lists(mob.pos, zonew, grid, r_tx2)
+            nbr = compute.shared_barrier(nbr)
             still_close = contacts.pair_still_close(
                 mob.pos, zonew, state.partner, r_tx2
             )
         else:
-            still_close = contacts.partner_close_bit(
-                closew_shared, state.partner
+            closew_shared, d2ctx = contacts.pairwise_close(
+                mob.pos, member, r_tx2
             )
+            if closew_shared is None:
+                still_close = contacts.pair_still_close(
+                    mob.pos, zonew, state.partner, r_tx2
+                )
+            else:
+                still_close = contacts.partner_close_bit(
+                    closew_shared, state.partner
+                )
         elapsed, done, broke, ending, eff_time, pidx = contacts.advance_exchanges(
             partner=state.partner, exch_elapsed=state.exch_elapsed,
             exch_total=state.exch_total, still_close=still_close, dt=dt,
@@ -330,9 +376,16 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         # ---- release ending pairs, form new connections ----
         partner = jnp.where(ending, -1, state.partner)
         elig = (partner < 0) & in_rz
-        closew, match = contacts.match_candidates(
-            d2ctx, state.prev_close, elig
-        )
+        if use_cells:
+            best, has = cells.candidate_best(
+                mob.pos, nbr, state.prev_close, elig
+            )
+            match = contacts.mutualize(best, has)
+            closew = nbr        # the cells-path prev_close carry
+        else:
+            closew, match = contacts.match_candidates(
+                d2ctx, state.prev_close, elig
+            )
         conn = contacts.form_connections(
             partner=partner, match=match, has_model=has_model, inc=inc,
             snap=state.snap, snap_has=state.snap_has,
@@ -373,7 +426,10 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         new_state = state.replace(
             mob=mob, prev_close=closew, inc=inc, has_model=has_model,
             obs_birth=obs_birth, obs_head=obs_head, tq_slot=tq_slot,
-            mq_mask=mq_mask, zone_prev=zonew, **conn, **served,
+            mq_mask=mq_mask, zone_prev=zonew,
+            nbr_overflow=(jnp.maximum(state.nbr_overflow, ovf)
+                          if use_cells else state.nbr_overflow),
+            **conn, **served,
         )
         return (new_state, key), None
 
@@ -391,6 +447,8 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             partner=state.partner, t_now=t_now, tau_l=tau_l,
             with_obs_trace=(trace == "full"),
         )
+        if use_cells:
+            out["nbr_overflow"] = state.nbr_overflow
         return (state, key), out
 
     mob0, key = model.init(key, cfg)
@@ -463,6 +521,8 @@ def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
         availability_z=np.asarray(outs["availability_z"]),
         stored_info_z=np.asarray(outs["stored_z"]),
         n_in_rz_z=np.asarray(outs["n_in_rz_z"]),
+        nbr_overflow=(np.asarray(outs["nbr_overflow"])
+                      if "nbr_overflow" in outs else None),
     )
 
 

@@ -96,13 +96,25 @@ def get_mobility(name: str) -> MobilityModel:
 class RDMState:
     pos: jnp.ndarray     # (N, 2)
     ang: jnp.ndarray     # (N,) heading [rad]
+    spd: jnp.ndarray     # (N,) per-node speed [m/s] — all cfg.speed unless
+                         # cfg.speed_range draws U(lo, hi) speeds at init
 
 
 def _rdm_init(key, cfg):
-    k_pos, k_dir, key = jax.random.split(key, 3)
+    if getattr(cfg, "speed_range", None) is not None:
+        lo, hi = cfg.speed_range
+        k_pos, k_dir, k_spd, key = jax.random.split(key, 4)
+        spd = jax.random.uniform(
+            k_spd, (cfg.n_nodes,), minval=lo, maxval=hi
+        )
+    else:
+        # legacy key schedule (no speed key) — the constant-speed engine
+        # stays bitwise-equal to the pre-speed_range one
+        k_pos, k_dir, key = jax.random.split(key, 3)
+        spd = jnp.full((cfg.n_nodes,), cfg.speed, jnp.float32)
     pos = jax.random.uniform(k_pos, (cfg.n_nodes, 2), maxval=cfg.area_side)
     ang = jax.random.uniform(k_dir, (cfg.n_nodes,), maxval=2 * jnp.pi)
-    return RDMState(pos=pos, ang=ang), key
+    return RDMState(pos=pos, ang=ang, spd=spd), key
 
 
 def _rdm_step(k_renew, k_head, s: RDMState, cfg) -> RDMState:
@@ -110,13 +122,15 @@ def _rdm_step(k_renew, k_head, s: RDMState, cfg) -> RDMState:
     renew = jax.random.uniform(k_renew, (n,)) < cfg.dir_change_rate * cfg.dt
     new_ang = jax.random.uniform(k_head, (n,), maxval=2 * jnp.pi)
     ang = jnp.where(renew, new_ang, s.ang)
-    vel = cfg.speed * jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+    # per-node speed times unit heading — bitwise the historical
+    # ``cfg.speed * stack(...)`` when every spd entry is cfg.speed
+    vel = s.spd[:, None] * jnp.stack([jnp.cos(ang), jnp.sin(ang)], axis=-1)
     pos = s.pos + vel * cfg.dt
     over = pos > cfg.area_side
     under = pos < 0.0
     pos = jnp.where(over, 2 * cfg.area_side - pos, jnp.where(under, -pos, pos))
     vel = jnp.where(over | under, -vel, vel)
-    return RDMState(pos=pos, ang=jnp.arctan2(vel[:, 1], vel[:, 0]))
+    return RDMState(pos=pos, ang=jnp.arctan2(vel[:, 1], vel[:, 0]), spd=s.spd)
 
 
 register_mobility(MobilityModel(name="rdm", init=_rdm_init, step=_rdm_step))

@@ -28,6 +28,28 @@ from repro.sim.compute import (packed_onehot, packed_popcount, pack_mask,
 __all__ = ["generate_observations", "apply_completions", "slot_outputs",
            "estimate_o_of_tau"]
 
+#: Observer-rank implementation switch: at or below this node count the
+#: O(N²) compare-reduce wins on CPU (it vectorizes where XLA's CPU sort
+#: runs a scalar comparator loop); above it the O(N log N)
+#: sort+searchsorted form keeps the whole step sub-quadratic (the cells
+#: contact backend's regime). Both compute the identical rank — the
+#: number of scores *strictly below* one's own, ties included — so the
+#: selected observer set is the same at any N.
+RANK_DENSE_MAX_N = 512
+
+
+def _observer_ranks(who_scores: jnp.ndarray) -> jnp.ndarray:
+    """(M, N) rank of each node's score among its row: #scores < own."""
+    n = who_scores.shape[1]
+    if n <= RANK_DENSE_MAX_N:
+        return jnp.sum(
+            who_scores[:, :, None] > who_scores[:, None, :], axis=-1
+        )
+    srt = jnp.sort(who_scores, axis=-1)
+    return jax.vmap(
+        lambda s, v: jnp.searchsorted(s, v, side="left")
+    )(srt, who_scores).astype(jnp.int32)
+
 
 def generate_observations(
     *, k_obs, k_who, obs_birth, obs_head, inc, in_rz, lam, Lam, dt, t_now
@@ -67,9 +89,7 @@ def generate_observations(
     # themselves, the rank matrix depends only on the per-seed key chain,
     # so sweep batches compute it once per seed, not once per scenario.
     who_scores = jax.random.uniform(k_who, (m_count, n)) + (~in_rz)[None, :] * 1e3
-    rank = shared_barrier(jnp.sum(
-        who_scores[:, :, None] > who_scores[:, None, :], axis=-1
-    ))
+    rank = shared_barrier(_observer_ranks(who_scores))
     lam_n = jnp.clip(jnp.round(Lam).astype(jnp.int32), 1, n)
     is_obs = (rank < lam_n) & in_rz[None, :] & new_obs[:, None]
     want_train = is_obs.T                                          # (N, M)
@@ -165,25 +185,62 @@ def slot_outputs(*, inc, has_model, obs_birth, in_rz, partner, t_now, tau_l,
     return out
 
 
+def o_tau_histograms(*, t, obs_birth, obs_holders, model_holders,
+                     n_tau: int, dtau):
+    """Device-side o(τ) accumulation: ``(num, den)`` age histograms.
+
+    The observation-age histogram underlying the o(τ) estimator, as one
+    vectorized reduction over the (sample, model, ring-slot) axes:
+    every live observation (finite age ≥ 0) of a model with at least one
+    holder contributes its holder *fraction* to ``num`` and 1 to ``den``
+    at age bin ``floor(age / dtau)``; o(τ) is ``num / den``. Inputs may
+    carry arbitrary leading batch axes (the sweep runner passes
+    ``(scenario, seed)``); the histograms are accumulated per run.
+
+    Shapes: ``t (S,)``, ``obs_birth``/``obs_holders`` ``(..., S, M, K)``,
+    ``model_holders`` ``(..., S, M)`` → ``(..., n_tau)`` each.
+
+    The binning is expressed as a one-hot contraction (no scatter — XLA
+    lowers batched scatters to scalar loops on CPU); memory is
+    ``trace_size × n_tau`` booleans inside the fused reduce, so keep
+    ``n_tau`` modest for big sweeps.
+    """
+    age = t[:, None, None] - obs_birth                     # (..., S, M, K)
+    holders = jnp.maximum(model_holders, 1)[..., None]
+    frac = obs_holders / holders
+    bins = jnp.floor(age / dtau).astype(jnp.int32)
+    ok = (
+        jnp.isfinite(age) & (age >= 0)
+        & (model_holders > 0)[..., None]
+        & (bins < n_tau) & (bins >= 0)
+    )
+    onehot = bins[..., None] == jnp.arange(n_tau, dtype=jnp.int32)
+    sel = ok[..., None] & onehot                           # (..., S, M, K, T)
+    axes = tuple(range(sel.ndim - 4, sel.ndim - 1))        # S, M, K
+    num = jnp.sum(jnp.where(sel, frac[..., None], 0.0), axis=axes)
+    den = jnp.sum(sel, axis=axes).astype(jnp.float32)
+    return num, den
+
+
 def estimate_o_of_tau(out, tau_grid: np.ndarray, warmup_frac: float = 0.3):
     """Empirical o(τ): holders-of-observation / holders-of-model at age τ.
 
     ``out`` is a ``SimOutputs`` (or any object with ``t``, ``obs_birth``,
-    ``obs_holders``, ``model_holders`` sample traces)."""
+    ``obs_holders``, ``model_holders`` sample traces). One vectorized
+    histogram pass (:func:`o_tau_histograms`) over the post-warmup
+    samples — the historical per-(sample, model) Python loop at trace
+    scale cost seconds per run and kept the o(τ) estimator host-bound;
+    the sweep runner exposes the same reduction on device as
+    ``reduce="o_tau"``.
+    """
     s0 = int(len(out.t) * warmup_frac)
-    num = np.zeros_like(tau_grid)
-    den = np.zeros_like(tau_grid)
-    dtau = tau_grid[1] - tau_grid[0]
-    for s in range(s0, len(out.t)):
-        age = out.t[s] - out.obs_birth[s]          # (M, K)
-        valid = np.isfinite(age) & (age >= 0)
-        holders = out.model_holders[s]             # (M,)
-        for m in range(age.shape[0]):
-            if holders[m] == 0:
-                continue
-            bins = (age[m][valid[m]] / dtau).astype(int)
-            frac = out.obs_holders[s][m][valid[m]] / holders[m]
-            ok = bins < len(tau_grid)
-            np.add.at(num, bins[ok], frac[ok])
-            np.add.at(den, bins[ok], 1.0)
+    dtau = float(tau_grid[1] - tau_grid[0])
+    num, den = o_tau_histograms(
+        t=jnp.asarray(out.t[s0:], jnp.float32),
+        obs_birth=jnp.asarray(out.obs_birth[s0:]),
+        obs_holders=jnp.asarray(out.obs_holders[s0:], jnp.float32),
+        model_holders=jnp.asarray(out.model_holders[s0:], jnp.float32),
+        n_tau=len(tau_grid), dtau=dtau,
+    )
+    num, den = np.asarray(num), np.asarray(den)
     return np.where(den > 0, num / np.maximum(den, 1), np.nan)

@@ -65,7 +65,10 @@ class SimState:
     snap: jnp.ndarray            # (N, M, ceil(K/32)) packed masks at connection
     snap_has: jnp.ndarray        # (N, M) had model at connection
     order_seed: jnp.ndarray      # (N,) uint32 send-order seed per connection
-    prev_close: jnp.ndarray      # (N, ceil(N/32)) packed previous-slot contacts
+    prev_close: jnp.ndarray      # previous-slot close record — dense contact
+                                 # backend: (N, ceil(N/32)) packed contact
+                                 # matrix; cells backend: (N, nbr_cap) int32
+                                 # ascending neighbor-id list, -1 padded
     # --- model / observation ---
     inc: jnp.ndarray             # (N, M, ceil(K/32)) packed incorporation bits
     has_model: jnp.ndarray       # (N, M)
@@ -85,6 +88,9 @@ class SimState:
     zone_prev: jnp.ndarray       # (N,) uint32 zone-membership word last slot
                                  # (bit z = member of zone z; bit 0 is the
                                  # legacy single-RZ in_rz flag)
+    nbr_overflow: jnp.ndarray    # () int32 running max of close pairs the
+                                 # cells backend dropped per slot (always 0
+                                 # on the dense backend)
 
     def replace(self, **kw) -> "SimState":
         return dataclasses.replace(self, **kw)
@@ -108,6 +114,13 @@ def init_sim_state(mob_state, zone0: jnp.ndarray, *, M: int, cfg) -> SimState:
         from repro.kernels.contacts import zone_words
 
         zone0 = zone_words(zone0)
+    from repro.sim.cells import contact_backend, make_grid
+
+    if contact_backend(cfg) == "cells":
+        # cells backend: the close carry is the bounded neighbor list
+        prev_close = jnp.full((n, make_grid(cfg).nbr_cap), -1, jnp.int32)
+    else:
+        prev_close = jnp.zeros((n, nw), dtype=jnp.uint32)
     return SimState(
         mob=mob_state,
         partner=jnp.full((n,), -1, dtype=jnp.int32),
@@ -116,7 +129,7 @@ def init_sim_state(mob_state, zone0: jnp.ndarray, *, M: int, cfg) -> SimState:
         snap=jnp.zeros((n, M, kw), dtype=jnp.uint32),
         snap_has=jnp.zeros((n, M), dtype=bool),
         order_seed=jnp.zeros((n,), dtype=jnp.uint32),
-        prev_close=jnp.zeros((n, nw), dtype=jnp.uint32),
+        prev_close=prev_close,
         inc=jnp.zeros((n, M, kw), dtype=jnp.uint32),
         has_model=jnp.zeros((n, M), dtype=bool),
         obs_birth=jnp.full((M, k), -jnp.inf),
@@ -131,4 +144,5 @@ def init_sim_state(mob_state, zone0: jnp.ndarray, *, M: int, cfg) -> SimState:
         serv_mask=jnp.zeros((n, kw), dtype=jnp.uint32),
         serv_slot=jnp.zeros((n,), dtype=jnp.int32),
         zone_prev=zone0,
+        nbr_overflow=jnp.zeros((), dtype=jnp.int32),
     )

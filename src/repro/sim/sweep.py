@@ -70,8 +70,11 @@ __all__ = ["SweepPlan", "SweepSummary", "plan_sweep", "run", "REDUCERS"]
 
 #: Valid ``reduce=`` modes: "trace" ships the full per-sample trace
 #: (bitwise the historical ``simulate_batch``); the others reduce on
-#: device over the post-warmup sample axis and ship only statistics.
-REDUCERS = ("trace", "mean", "final", "quantiles")
+#: device over the post-warmup sample axis and ship only statistics —
+#: "o_tau" accumulates the o(τ) holder-fraction age histograms
+#: (``observations.o_tau_histograms``) so the one consumer that used to
+#: need the full per-observation trace on the host no longer does.
+REDUCERS = ("trace", "mean", "final", "quantiles", "o_tau")
 
 #: Quantities present in the light (reduced) trace, reduced per run over
 #: the sample axis. The ``*_z`` entries are the per-zone traces (trailing
@@ -189,33 +192,51 @@ class SweepSummary:
     quantiles: tuple[float, ...] | None = None
 
 
-def _reduce_outs(outs: dict, reduce: str, s0: int, qs) -> dict:
+def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
     """Per-run on-device reduction over the sample axis (axis 2)."""
-    if reduce == "mean":
+    if reduce == "o_tau":
+        from repro.sim.observations import o_tau_histograms
+
+        n_tau, dtau = tau
+        num, den = o_tau_histograms(
+            t=t[s0:],
+            obs_birth=outs["obs_birth"][:, :, s0:],
+            obs_holders=outs["obs_holders"][:, :, s0:].astype(jnp.float32),
+            model_holders=outs["model_holders"][:, :, s0:].astype(
+                jnp.float32),
+            n_tau=n_tau, dtau=dtau,
+        )
+        red = {"o_tau_num": num, "o_tau_den": den}
+    elif reduce == "mean":
         red = {}
         for k in _LIGHT_KEYS:
             v = outs[k][:, :, s0:]
             red[k] = jnp.mean(v, axis=2)
             red[k + "_std"] = jnp.std(v, axis=2)
-        return red
-    if reduce == "final":
-        return {k: outs[k][:, :, -1] for k in _LIGHT_KEYS}
-    if reduce == "quantiles":
+    elif reduce == "final":
+        red = {k: outs[k][:, :, -1] for k in _LIGHT_KEYS}
+    elif reduce == "quantiles":
         q = jnp.asarray(qs, jnp.float32)
         # quantile levels land on the TRAILING axis for every quantity,
         # scalar (scen, seed, Q) and vector (scen, seed, M, Q) alike
-        return {
+        red = {
             k: jnp.moveaxis(
                 jnp.quantile(outs[k][:, :, s0:], q, axis=2), 0, -1
             )
             for k in _LIGHT_KEYS
         }
-    raise ValueError(f"unknown reduce mode {reduce!r}; known: {REDUCERS}")
+    else:
+        raise ValueError(f"unknown reduce mode {reduce!r}; known: {REDUCERS}")
+    if "nbr_overflow" in outs:
+        # cells contact backend: the running overflow max — its final
+        # sample is the whole-run diagnostic — rides every reduction
+        red["nbr_overflow"] = outs["nbr_overflow"][:, :, -1]
+    return red
 
 
 @lru_cache(maxsize=None)
 def _chunk_worker(cfg: SimConfig, M: int, plan: SweepPlan, reduce: str,
-                  s0: int, qs: tuple, p_keys: tuple):
+                  s0: int, qs: tuple, tau: tuple, p_keys: tuple):
     """Compiled per-chunk runner, cached per (config, plan, reduction).
 
     Inputs are sharded over the plan's 2-D mesh via the ``sweep_scenario``
@@ -227,7 +248,10 @@ def _chunk_worker(cfg: SimConfig, M: int, plan: SweepPlan, reduce: str,
     chunk_p, pad_r = plan.chunk_scenarios, plan.pad_seeds
     scen_spec = spec_for(mesh, ("sweep_scenario",), (chunk_p,), SWEEP_RULES)
     seed_spec = spec_for(mesh, ("sweep_seed", None), (pad_r, 2), SWEEP_RULES)
-    trace = "full" if reduce == "trace" else "light"
+    # o_tau consumes the per-observation traces, so it runs the full
+    # engine trace — but reduces it on device like the light modes
+    trace = "full" if reduce in ("trace", "o_tau") else "light"
+    t_const = jnp.asarray(_sample_times(cfg), jnp.float32)
 
     def worker(keys, p_chunk):
         over_seeds = jax.vmap(
@@ -237,7 +261,7 @@ def _chunk_worker(cfg: SimConfig, M: int, plan: SweepPlan, reduce: str,
         outs = jax.vmap(over_seeds, in_axes=(None, 0))(keys, p_chunk)
         if reduce == "trace":
             return outs
-        return _reduce_outs(outs, reduce, s0, qs)
+        return _reduce_outs(outs, reduce, s0, qs, tau, t_const)
 
     return jax.jit(
         worker,
@@ -265,6 +289,7 @@ def run(
     warmup_frac: float | None = None,
     chunk_size: int | None = None,
     quantiles: Sequence[float] = (0.1, 0.5, 0.9),
+    tau_grid=None,
     n_devices: int | None = None,
 ):
     """Execute a (scenarios x seeds) sweep on the planned device mesh.
@@ -278,7 +303,12 @@ def run(
                   historical ``simulate_batch``) or an on-device
                   reduction: ``"mean"`` (post-warmup time-mean + std),
                   ``"final"`` (last sample), ``"quantiles"`` (post-warmup
-                  time-quantiles).
+                  time-quantiles), ``"o_tau"`` (the o(τ) estimator's
+                  holder-fraction age histograms, accumulated on device —
+                  requires ``tau_grid``; stats ship ``o_tau`` plus the
+                  raw ``o_tau_num``/``o_tau_den`` histograms for
+                  cross-seed aggregation, pinned against
+                  ``observations.estimate_o_of_tau`` on the trace path).
       warmup_frac: fraction of samples discarded before reducing
                   (defaults to ``cfg.warmup_frac``; ignored for
                   ``"trace"``/``"final"``).
@@ -287,6 +317,9 @@ def run(
                   next chunk is dispatched before the previous chunk's
                   outputs are pulled to the host.
       quantiles:  quantile levels for ``reduce="quantiles"``.
+      tau_grid:   uniform observation-age grid starting at 0 for
+                  ``reduce="o_tau"`` (its length and spacing define the
+                  histogram bins, exactly like ``estimate_o_of_tau``).
       n_devices:  mesh size override (defaults to all visible devices).
 
     Returns:
@@ -316,11 +349,21 @@ def run(
     s0 = min(int(n_samples * wf), n_samples - 1)
     # normalize the compile-cache key to what the reduction actually
     # reads: trace/final ignore the warmup index, only quantiles reads
-    # the quantile levels — so varying the unused knobs can't trigger a
-    # spurious recompilation
-    key_s0 = s0 if reduce in ("mean", "quantiles") else 0
+    # the quantile levels, only o_tau reads the age grid — so varying
+    # the unused knobs can't trigger a spurious recompilation
+    key_s0 = s0 if reduce in ("mean", "quantiles", "o_tau") else 0
     key_qs = tuple(quantiles) if reduce == "quantiles" else ()
-    worker = _chunk_worker(cfg, M, plan, reduce, key_s0, key_qs,
+    if reduce == "o_tau":
+        if tau_grid is None:
+            raise ValueError('reduce="o_tau" needs a tau_grid')
+        tau_grid = np.asarray(tau_grid, np.float64)
+        dtaus = np.diff(tau_grid)
+        if len(tau_grid) < 2 or not np.allclose(dtaus, dtaus[0]):
+            raise ValueError("tau_grid must be a uniform grid")
+        key_tau = (len(tau_grid), float(tau_grid[1] - tau_grid[0]))
+    else:
+        key_tau = ()
+    worker = _chunk_worker(cfg, M, plan, reduce, key_s0, key_qs, key_tau,
                            tuple(sorted(p_stack)))
 
     cp = plan.chunk_scenarios
@@ -371,8 +414,13 @@ def run(
             availability_z=outs["availability_z"],
             stored_info_z=outs["stored_z"],
             n_in_rz_z=outs["n_in_rz_z"],
+            nbr_overflow=outs.get("nbr_overflow"),
             plan=plan, devices_used=devices_used, host_bytes=host_bytes,
         )
+    if reduce == "o_tau":
+        # the ratio is host-side arithmetic on the shipped histograms
+        num, den = outs["o_tau_num"], outs["o_tau_den"]
+        outs["o_tau"] = np.where(den > 0, num / np.maximum(den, 1), np.nan)
     return SweepSummary(
         reduce=reduce, t=t, warmup_samples=s0, stats=outs, plan=plan,
         devices_used=devices_used, host_bytes=host_bytes,

@@ -216,7 +216,9 @@ def test_pairwise_contacts_straddling_two_overlapping_zones():
 
 
 def test_pairwise_contacts_kernel_no_candidates():
-    """All-ineligible input: packed contacts still exact, no best pair."""
+    """All-ineligible input: packed contacts still exact, no best pair,
+    and — the PR-5 sentinel fix — no-candidate rows report -1, not the
+    historical all-sentinel argmin's index 0."""
     n = 48
     pos = jax.random.uniform(jax.random.PRNGKey(0), (n, 2), maxval=10.0)
     in_rz = jnp.ones((n,), bool)
@@ -228,6 +230,105 @@ def test_pairwise_contacts_kernel_no_candidates():
     ref = pairwise_contacts_ref(pos, in_rz, elig, prevw, 25.0)
     np.testing.assert_array_equal(np.asarray(closew), np.asarray(ref[0]))
     assert not np.any(np.asarray(has))
+    np.testing.assert_array_equal(np.asarray(best_j), -1)
+    np.testing.assert_array_equal(np.asarray(ref[1]), -1)
+
+
+def test_no_candidate_rows_report_minus_one_mixed():
+    """Mixed input: rows with candidates report a real index, rows
+    without report -1 — on the oracle and the kernel alike (regression
+    for the index-0 quirk)."""
+    n = 40
+    rng = np.random.default_rng(3)
+    pos = jnp.asarray(rng.uniform(0, 12.0, (n, 2)), jnp.float32)
+    in_rz = jnp.ones((n,), bool)
+    elig = jnp.asarray(rng.random(n) < 0.5)
+    prevw = jnp.zeros((n, (n + 31) // 32), jnp.uint32)
+    for fn in (
+        lambda: pairwise_contacts_ref(pos, in_rz, elig, prevw, 25.0),
+        lambda: pairwise_contacts(pos, in_rz, elig, prevw, 25.0,
+                                  interpret=True),
+    ):
+        _, best_j, has = fn()
+        best_j, has = np.asarray(best_j), np.asarray(has)
+        assert np.any(has) and not np.all(has)
+        np.testing.assert_array_equal(best_j[~has], -1)
+        assert np.all(best_j[has] >= 0)
+
+
+# --------------------------------------------------------------------------
+# cell-list (3×3 neighborhood) close-word kernel
+# --------------------------------------------------------------------------
+
+
+def _cell_planes(n, ncx, ncy, cap, seed, k_zones=1, spread=1.0):
+    """Random positions binned into cell-major planes (the
+    repro.sim.cells layout) + the grid geometry."""
+    from repro.sim.cells import CellGrid, bin_nodes
+    from repro.kernels.contacts import zone_words
+
+    area = 200.0
+    cell = area / ncx
+    grid = CellGrid(ncx=ncx, ncy=ncy, cell=cell, cap_cell=cap, nbr_cap=8)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    pos = jax.random.uniform(k1, (n, 2), maxval=area * spread)
+    member = jax.random.uniform(k2, (n, k_zones)) < 0.7
+    zonew = zone_words(member)
+    cellbuf, _, _, _ = bin_nodes(pos, grid)
+    safe = jnp.clip(cellbuf, 0, n - 1)
+    empty = cellbuf < 0
+    xc = jnp.where(empty, jnp.float32(1e9), pos[safe, 0])
+    yc = jnp.where(empty, jnp.float32(1e9), pos[safe, 1])
+    zc = jnp.where(empty, jnp.uint32(0), zonew[safe])
+    return xc, yc, zc, cellbuf, grid
+
+
+@pytest.mark.parametrize("n,ncx,cap,k_zones", [
+    (30, 4, 4, 1),       # tiny grid, most neighborhoods hit the border
+    (120, 8, 8, 1),      # cells larger than r_tx
+    (120, 8, 8, 3),      # multi-zone word gating
+    (200, 39, 4, 1),     # the paper geometry's grid (sparse cells)
+    (64, 5, 2, 2),       # deliberately tight cap (empty-slot handling)
+])
+def test_cell_close_words_kernel_matches_oracle_bitwise(n, ncx, cap,
+                                                        k_zones):
+    """The Pallas 3×3-cell-neighborhood kernel (interpret mode) must
+    equal the jnp word-domain oracle bit for bit, across border cells,
+    empty slots, zone gating, and non-dividing capacities."""
+    from repro.kernels.contacts import cell_close_words, cell_close_words_ref
+
+    xc, yc, zc, idc, grid = _cell_planes(n, ncx, ncx, cap, seed=n + cap,
+                                         k_zones=k_zones)
+    r_tx2 = 5.0 ** 2
+    ref = cell_close_words_ref(xc, yc, zc, idc, grid.ncx, grid.ncy, r_tx2)
+    out = cell_close_words(xc, yc, zc, idc, grid.ncx, grid.ncy, r_tx2,
+                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert out.shape == (grid.ncx * grid.ncy, cap,
+                         (9 * cap + 31) // 32)
+
+
+def test_cell_kernel_neighbor_lists_match_jnp_path():
+    """Composed: neighbor lists built from the kernel's close words equal
+    the node-centric jnp gather path exactly (ids, order, padding)."""
+    from repro.kernels.contacts import zone_words
+    from repro.sim import SimConfig
+    from repro.sim.cells import make_grid, neighbor_lists
+
+    n = 150
+    cfg = SimConfig(n_nodes=n, area_side=200.0, r_tx=5.0)
+    grid = make_grid(cfg)
+    key = jax.random.PRNGKey(9)
+    k1, k2 = jax.random.split(key)
+    pos = jax.random.uniform(k1, (n, 2), maxval=200.0)
+    member = jax.random.uniform(k2, (n, 2)) < 0.6
+    zonew = zone_words(member)
+    ref, ovf_ref = neighbor_lists(pos, zonew, grid, 25.0, use_kernel=False)
+    out, ovf_out = neighbor_lists(pos, zonew, grid, 25.0, use_kernel=True,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+    assert int(ovf_ref) == int(ovf_out) == 0
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,0 +1,288 @@
+"""Cell-list contact backend vs the dense O(N²) sweep:
+
+1. **match-for-match equivalence** — as long as no list overflows, the
+   cells path finds the same close sets, the same best candidates (tie
+   breaks included) and hence the same mutual matches as the dense path;
+   property-tested (hypothesis where available, seeded sweeps otherwise)
+   on random small-N configs, nodes sitting *exactly* on cell
+   boundaries, and multi-zone gating;
+2. the **full engine** on ``contact_backend="cells"`` is bitwise the
+   dense engine (partners, deliveries, every trace) at small N — the
+   strongest end-to-end form of (1);
+3. **overflow degrades gracefully** — undersized caps drop neighbors,
+   the overflow counter reports it, and every surviving neighbor is
+   still a true close pair;
+4. backend auto-resolution keeps paper-scale configs on the (bitwise
+   pinned) dense path.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fg_paper import paper_params
+from repro.core.zones import ZoneSet
+from repro.kernels.contacts import (
+    candidate_best_ref, pairwise_close_ref, zone_words,
+)
+from repro.sim import SimConfig, simulate
+from repro.sim.cells import (
+    AUTO_CELLS_MIN_N, candidate_best, contact_backend, make_grid,
+    neighbor_lists,
+)
+from repro.sim.compute import pack_mask, unpack_mask
+
+try:  # pragma: no cover - optional dep
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - optional dep
+    HAVE_HYP = False
+
+
+def _cfg(n=150, **kw):
+    return SimConfig(n_nodes=n, area_side=200.0, r_tx=5.0, **kw)
+
+
+def _dense_rows(pos, member, r_tx2):
+    closew, _ = pairwise_close_ref(pos, member, r_tx2)
+    return np.asarray(unpack_mask(closew, pos.shape[0]))
+
+
+def _nbr_sets(nbr):
+    return [set(int(x) for x in row if x >= 0) for row in np.asarray(nbr)]
+
+
+def _check_lists_match_dense(pos, member, cfg=None):
+    cfg = cfg or _cfg(pos.shape[0])
+    grid = make_grid(cfg)
+    r_tx2 = cfg.r_tx**2
+    zonew = zone_words(member)
+    nbr, ovf = neighbor_lists(pos, zonew, grid, r_tx2, use_kernel=False)
+    assert int(ovf) == 0
+    rows = _dense_rows(pos, member, r_tx2)
+    for i, got in enumerate(_nbr_sets(nbr)):
+        want = set(np.where(rows[i])[0].tolist())
+        assert got == want, (i, got, want)
+    # neighbor ids ascend within each row (the dense tie-break order)
+    arr = np.asarray(nbr)
+    masked = np.where(arr >= 0, arr, np.iinfo(np.int32).max)
+    assert np.all(np.diff(masked, axis=1) >= 0)
+    return nbr
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("n", [3, 40, 150])
+def test_neighbor_lists_match_dense_random(seed, n):
+    key = jax.random.PRNGKey(100 * n + seed)
+    k1, k2 = jax.random.split(key)
+    pos = jax.random.uniform(k1, (n, 2), maxval=200.0)
+    member = jax.random.uniform(k2, (n,)) < 0.8
+    _check_lists_match_dense(pos, member)
+
+
+def test_neighbor_lists_match_dense_on_cell_boundaries():
+    """Nodes placed exactly on cell-grid lines (including the shared
+    corner of four cells) must land in exactly one cell and still find
+    every in-radius pair — the grid assignment may be float-fuzzy at the
+    boundary, the *close set* may not."""
+    # clustering many nodes onto the same lines/corners needs explicit
+    # generous caps (the test targets boundary assignment, not capacity)
+    cfg = _cfg(64, cell_cap=64, nbr_cap=64)
+    grid = make_grid(cfg)
+    c = grid.cell
+    rng = np.random.default_rng(0)
+    pts = []
+    for k in range(16):
+        # on a vertical line, a horizontal line, and on corners — with
+        # partners just across the boundary within the radius
+        pts.append((5 * c, rng.uniform(0, 200)))
+        pts.append((rng.uniform(0, 200), 7 * c))
+        pts.append((3 * c, (9 + k) * c))
+        pts.append((3 * c + rng.uniform(-4, 4),
+                    (9 + k) * c + rng.uniform(-4, 4)))
+    pos = jnp.asarray(np.asarray(pts, np.float32))
+    member = jnp.ones((pos.shape[0],), bool)
+    _check_lists_match_dense(pos, member, cfg)
+
+
+def test_neighbor_lists_match_dense_multizone():
+    """Zone-word gating: pairs must share a zone, exactly as the dense
+    word-domain oracle gates them."""
+    n = 120
+    key = jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    pos = jax.random.uniform(k1, (n, 2), maxval=200.0)
+    member = jax.random.uniform(k2, (n, 3)) < 0.5
+    _check_lists_match_dense(pos, member)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_candidate_best_matches_dense(seed):
+    """The per-run stage: same best new-contact candidate (index,
+    existence and d² tie-break) as the dense hierarchical argmin."""
+    n = 150
+    cfg = _cfg(n)
+    grid = make_grid(cfg)
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # clustered positions to force real candidate competition
+    pos = jax.random.uniform(k1, (n, 2), maxval=60.0)
+    member = jnp.ones((n,), bool)
+    elig = jax.random.uniform(k2, (n,)) < 0.7
+    r_tx2 = cfg.r_tx**2
+
+    closew, d2b3 = pairwise_close_ref(pos, member, r_tx2)
+    prev_b = unpack_mask(closew, n) & (
+        jax.random.uniform(k3, (n, n)) < 0.4
+    )
+    prev_b = prev_b & prev_b.T
+    best_ref, has_ref = candidate_best_ref(
+        d2b3, closew, pack_mask(prev_b), elig
+    )
+
+    # the cells grid at maxval=60 still bins fine (positions in-area)
+    zonew = zone_words(member)
+    nbr, ovf = neighbor_lists(pos, zonew, grid, r_tx2, use_kernel=False)
+    assert int(ovf) == 0
+    prev_key = jnp.where(
+        prev_b, jnp.arange(n, dtype=jnp.int32)[None, :], n
+    )
+    prev_nbr = jnp.where(
+        jnp.sort(prev_key, axis=1)[:, :grid.nbr_cap] < n,
+        jnp.sort(prev_key, axis=1)[:, :grid.nbr_cap], -1,
+    )
+    best_c, has_c = candidate_best(pos, nbr, prev_nbr, elig)
+    np.testing.assert_array_equal(np.asarray(has_ref), np.asarray(has_c))
+    np.testing.assert_array_equal(np.asarray(best_ref), np.asarray(best_c))
+
+
+def test_engine_cells_bitwise_equals_dense():
+    """End-to-end: the full protocol (matching, exchanges, deliveries,
+    merge/train queues, every trace) on the cells backend equals the
+    dense backend bit for bit — the match-for-match guarantee composed
+    over 400 slots."""
+    cfg_d = _cfg(120, n_slots=400, sample_every=8, contact_backend="dense")
+    cfg_c = dataclasses.replace(cfg_d, contact_backend="cells")
+    p = paper_params(lam=0.2, M=2, Lam=2)
+    out_d = simulate(p, cfg_d, seed=3)
+    out_c = simulate(p, cfg_c, seed=3)
+    for k in ("availability", "busy_frac", "stored_info", "obs_birth",
+              "obs_holders", "model_holders", "n_in_rz",
+              "availability_z", "stored_info_z", "n_in_rz_z"):
+        np.testing.assert_array_equal(
+            getattr(out_d, k), getattr(out_c, k), err_msg=k
+        )
+    assert out_d.nbr_overflow is None
+    assert out_c.nbr_overflow is not None
+    assert int(out_c.nbr_overflow.max()) == 0
+
+
+def test_engine_cells_bitwise_equals_dense_multizone():
+    """Same end-to-end pin with two overlapping drifting-free zones —
+    the cells path's zone-word gate must reproduce the dense gate."""
+    zs = ZoneSet(centers=((70.0, 100.0), (130.0, 100.0)),
+                 radii=(50.0, 50.0))
+    cfg_d = _cfg(100, n_slots=240, sample_every=8, zones=zs,
+                 contact_backend="dense")
+    cfg_c = dataclasses.replace(cfg_d, contact_backend="cells")
+    p = paper_params(lam=0.3, M=1)
+    out_d = simulate(p, cfg_d, seed=1)
+    out_c = simulate(p, cfg_c, seed=1)
+    for k in ("availability", "stored_info", "n_in_rz", "availability_z"):
+        np.testing.assert_array_equal(
+            getattr(out_d, k), getattr(out_c, k), err_msg=k
+        )
+
+
+def test_overflow_counted_and_graceful():
+    """Deliberately undersized caps: the counter reports the drops,
+    every surviving neighbor is still a true close pair (subset
+    property) in ascending order, and — crucially for cross-backend
+    reproducibility — the kernel path produces the *same* degraded
+    lists as the jnp path."""
+    n = 200
+    cfg = _cfg(n, cell_cap=2, nbr_cap=2)
+    grid = make_grid(cfg)
+    assert grid.cap_cell == 2 and grid.nbr_cap == 2
+    key = jax.random.PRNGKey(0)
+    # cluster everyone into a few cells to force both overflow kinds
+    pos = jax.random.uniform(key, (n, 2), maxval=30.0)
+    member = jnp.ones((n,), bool)
+    zonew = zone_words(member)
+    r_tx2 = cfg.r_tx**2
+    nbr, ovf = neighbor_lists(pos, zonew, grid, r_tx2, use_kernel=False)
+    assert int(ovf) > 0
+    rows = _dense_rows(pos, member, r_tx2)
+    for i, got in enumerate(_nbr_sets(nbr)):
+        assert got <= set(np.where(rows[i])[0].tolist())
+    nbr_k, ovf_k = neighbor_lists(pos, zonew, grid, r_tx2,
+                                  use_kernel=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(nbr), np.asarray(nbr_k))
+    assert int(ovf) == int(ovf_k)
+
+    # the engine surfaces the running overflow in its trace
+    cfg_run = _cfg(80, n_slots=80, sample_every=8, cell_cap=1, nbr_cap=1,
+                   contact_backend="cells")
+    out = simulate(paper_params(lam=0.2, M=1), cfg_run, seed=0)
+    assert out.nbr_overflow is not None
+    assert np.all(np.diff(out.nbr_overflow) >= 0)  # running max
+
+
+def test_backend_resolution():
+    assert contact_backend(SimConfig(n_nodes=200)) == "dense"
+    assert contact_backend(
+        SimConfig(n_nodes=AUTO_CELLS_MIN_N)) == "cells"
+    assert contact_backend(
+        SimConfig(n_nodes=200, contact_backend="cells")) == "cells"
+    assert contact_backend(
+        SimConfig(n_nodes=4096, contact_backend="dense")) == "dense"
+    # too few cells for the 3x3 neighborhood to prune: stay dense
+    assert contact_backend(
+        SimConfig(n_nodes=4096, area_side=10.0, r_tx=5.0)) == "dense"
+    with pytest.raises(ValueError, match="contact_backend"):
+        contact_backend(SimConfig(contact_backend="octree"))
+
+
+def test_cell_size_covers_radius():
+    """cell >= r_tx with a safety margin, for geometries that divide
+    exactly and ones that don't."""
+    for area, r in ((200.0, 5.0), (200.0, 7.3), (127.0, 5.0)):
+        grid = make_grid(SimConfig(n_nodes=500, area_side=area, r_tx=r))
+        assert grid.cell >= r * (1.0 + 1e-5)
+        assert grid.ncx * grid.cell == pytest.approx(area)
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        st.integers(min_value=2, max_value=48),
+        st.integers(min_value=0, max_value=10_000),
+        st.floats(min_value=0.05, max_value=1.0),
+    )
+    def test_hypothesis_neighbor_lists_match_dense(n, seed, spread):
+        """Random node counts, seeds, and clustering spreads: cell-list
+        close sets equal the dense contact-matrix rows."""
+        key = jax.random.PRNGKey(seed)
+        k1, k2 = jax.random.split(key)
+        pos = jax.random.uniform(k1, (n, 2), maxval=200.0 * spread)
+        member = jax.random.uniform(k2, (n,)) < 0.9
+        cfg = _cfg(n)
+        grid = make_grid(cfg)
+        zonew = zone_words(member)
+        nbr, ovf = neighbor_lists(
+            pos, zonew, grid, cfg.r_tx**2, use_kernel=False
+        )
+        rows = _dense_rows(pos, member, cfg.r_tx**2)
+        dropped = 0
+        for i, got in enumerate(_nbr_sets(nbr)):
+            want = set(np.where(rows[i])[0].tolist())
+            assert got <= want
+            dropped += len(want - got)
+        # zero overflow certifies exactness; overflow > 0 only reports
+        # that capacity was hit (a dropped node need not have had pairs)
+        if int(ovf) == 0:
+            assert dropped == 0

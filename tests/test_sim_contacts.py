@@ -1,14 +1,57 @@
 """Contact-subsystem pins: the M=1 delivery fast path (added with the
 PR-3 perf pass, previously unpinned) must equal the general
 ``compute_deliveries`` path bit for bit, across ending/broken exchanges,
-empty snapshots, and boundary effective times."""
+empty snapshots, and boundary effective times — plus the no-candidate
+sentinel regression (-1, not index 0) for the matchers."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.sim.contacts import _deliveries_general, compute_deliveries
+from repro.sim.contacts import (
+    _deliveries_general, compute_deliveries, mutual_best_pairs, mutualize,
+)
+
+
+def test_mutual_best_pairs_all_ineligible_row_reports_minus_one():
+    """Regression for the no-candidate quirk: a row whose scores are all
+    +inf (nothing eligible) must come out unpaired (-1), and must not be
+    claimable by another row pointing at it."""
+    inf = jnp.inf
+    scores = jnp.asarray([
+        [inf, 4.0, inf],
+        [4.0, inf, inf],
+        [inf, inf, inf],    # the all-ineligible row
+    ])
+    np.testing.assert_array_equal(
+        np.asarray(mutual_best_pairs(scores)), [1, 0, -1]
+    )
+    # node 0 best = the all-ineligible node 2: no reciprocity, no pair
+    scores = jnp.asarray([
+        [inf, inf, 2.0],
+        [inf, inf, inf],
+        [inf, inf, inf],
+    ])
+    np.testing.assert_array_equal(
+        np.asarray(mutual_best_pairs(scores)), [-1, -1, -1]
+    )
+
+
+def test_mutualize_accepts_minus_one_sentinel():
+    """mutualize on the kernels' (best, has) form: -1 no-candidate
+    sentinels never pair, even when a real row points at the last node
+    (which -1 would alias under wraparound indexing)."""
+    n = 4
+    best = jnp.asarray([3, -1, -1, 0])
+    has = jnp.asarray([True, False, False, True])
+    np.testing.assert_array_equal(
+        np.asarray(mutualize(best, has)), [3, -1, -1, 0]
+    )
+    has = jnp.asarray([True, False, False, False])   # 3 lost eligibility
+    np.testing.assert_array_equal(
+        np.asarray(mutualize(best, has)), [-1] * n
+    )
 
 
 def _delivery_inputs(seed: int, n: int = 64, kw: int = 2):

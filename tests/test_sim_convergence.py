@@ -1,0 +1,45 @@
+"""Sim → mean-field convergence (the paper's limit claim, nightly lane).
+
+The mean-field model (Lemmas 1-3) is exact as N → ∞ at fixed density;
+finite-N simulations sit below it by an O(1/N)-ish finite-size gap. The
+cell-list contact backend makes the large-N points affordable, so the
+nightly suite can check the *direction* of the limit: the availability
+error against the mean-field prediction shrinks as N grows. The full
+N-sweep (157 → 20k+) with the error slope lives in
+``benchmarks/fig_convergence.py``; this test runs its small/large
+endpoints.
+"""
+
+import numpy as np
+import pytest
+
+from benchmarks.fig_convergence import scaled_point
+from repro.configs.fg_paper import paper_contact_model
+from repro.core.meanfield import solve_fixed_point
+from repro.sim import sweep
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.mark.parametrize("lam", [0.05])
+def test_availability_error_shrinks_with_n(lam):
+    cm = paper_contact_model()
+    errs = {}
+    for n_total, seeds in ((200, (0, 1, 2, 3)), (3200, (0,))):
+        # the fixed-density geometry scaling is the figure's own
+        # (benchmarks/fig_convergence.scaled_point) — one definition,
+        # so test and figure always measure the same operating points;
+        # 2/3 warmup clears the ~log N model-spreading transient
+        p, cfg = scaled_point(n_total, n_slots=6000, lam=lam)
+        sol = solve_fixed_point(p, cm)
+        summ = sweep.run([p], cfg, seeds, reduce="mean",
+                         warmup_frac=2.0 / 3.0)
+        a_sim = float(summ.stats["availability"][0, :, 0].mean())
+        errs[n_total] = abs(float(sol.a) - a_sim) / max(a_sim, 1e-9)
+        ovf = summ.stats.get("nbr_overflow")
+        if ovf is not None:
+            assert int(np.max(ovf)) == 0   # caps sized correctly
+    # the large-N point must sit markedly closer to the mean-field
+    # prediction than the paper-scale point
+    assert errs[3200] < errs[200], errs
+    assert errs[3200] < 0.10, errs

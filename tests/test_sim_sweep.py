@@ -174,6 +174,86 @@ def test_unknown_reduce_mode_rejected():
         sweep.run(PS, CFG, SEEDS, reduce="median")
 
 
+class TestOTauReduce:
+    """Satellite pin: ``reduce="o_tau"`` accumulates the o(τ)
+    holder-fraction age histograms on device and matches the trace-path
+    estimator (``observations.estimate_o_of_tau``) point for point."""
+
+    TAU = np.arange(0.0, 60.0, 4.0)
+    CFG = SimConfig(n_nodes=50, n_slots=480, sample_every=8)
+
+    def test_matches_trace_estimator(self):
+        from repro.sim import estimate_o_of_tau
+
+        ps, seeds = PS[:2], [0, 2]
+        batch = sweep.run(ps, self.CFG, seeds, reduce="trace")
+        summ = sweep.run(ps, self.CFG, seeds, reduce="o_tau",
+                         tau_grid=self.TAU, warmup_frac=0.3)
+        assert summ.stats["o_tau"].shape == (2, 2, len(self.TAU))
+        for i in range(len(ps)):
+            for j in range(len(seeds)):
+                ref = estimate_o_of_tau(batch.point(i, j), self.TAU,
+                                        warmup_frac=0.3)
+                got = summ.stats["o_tau"][i, j]
+                np.testing.assert_array_equal(np.isnan(ref), np.isnan(got))
+                m = ~np.isnan(ref)
+                assert m.any()
+                np.testing.assert_allclose(got[m], ref[m], rtol=1e-5,
+                                           atol=1e-6)
+        # the histograms ship raw for cross-seed aggregation, and the
+        # reduced path still beats the full obs trace on host bytes
+        assert summ.stats["o_tau_den"].min() >= 0
+        assert batch.host_bytes / summ.host_bytes > 10
+
+    def test_chunked_padded_o_tau_matches(self):
+        summ = sweep.run(PS, self.CFG, SEEDS, reduce="o_tau",
+                         tau_grid=self.TAU, chunk_size=2)
+        ref = sweep.run(PS, self.CFG, SEEDS, reduce="o_tau",
+                        tau_grid=self.TAU)
+        np.testing.assert_allclose(
+            summ.stats["o_tau_num"], ref.stats["o_tau_num"], atol=1e-5
+        )
+        np.testing.assert_array_equal(
+            summ.stats["o_tau_den"], ref.stats["o_tau_den"]
+        )
+
+    def test_requires_uniform_tau_grid(self):
+        with pytest.raises(ValueError, match="tau_grid"):
+            sweep.run(PS[:1], self.CFG, [0], reduce="o_tau")
+        with pytest.raises(ValueError, match="uniform"):
+            sweep.run(PS[:1], self.CFG, [0], reduce="o_tau",
+                      tau_grid=np.asarray([0.0, 1.0, 4.0]))
+
+    def test_vectorized_estimator_matches_legacy_loop(self):
+        """The vectorized ``estimate_o_of_tau`` equals the historical
+        per-(sample, model) Python loop on a real trace."""
+        from repro.sim import estimate_o_of_tau, simulate
+
+        out = simulate(PS[1], self.CFG, seed=1)
+        got = estimate_o_of_tau(out, self.TAU, warmup_frac=0.3)
+
+        s0 = int(len(out.t) * 0.3)
+        num = np.zeros_like(self.TAU)
+        den = np.zeros_like(self.TAU)
+        dtau = self.TAU[1] - self.TAU[0]
+        for s in range(s0, len(out.t)):
+            age = out.t[s] - out.obs_birth[s]
+            valid = np.isfinite(age) & (age >= 0)
+            holders = out.model_holders[s]
+            for m in range(age.shape[0]):
+                if holders[m] == 0:
+                    continue
+                bins = (age[m][valid[m]] / dtau).astype(int)
+                frac = out.obs_holders[s][m][valid[m]] / holders[m]
+                ok = bins < len(self.TAU)
+                np.add.at(num, bins[ok], frac[ok])
+                np.add.at(den, bins[ok], 1.0)
+        ref = np.where(den > 0, num / np.maximum(den, 1), np.nan)
+        np.testing.assert_array_equal(np.isnan(ref), np.isnan(got))
+        m = ~np.isnan(ref)
+        np.testing.assert_allclose(got[m], ref[m], rtol=1e-4, atol=1e-5)
+
+
 class TestPlanner:
     def test_seed_heavy_grid_shards_seed_axis(self):
         # 3 % 2 != 0: the pre-sweep engine fell back to one device here.
