@@ -80,6 +80,8 @@ def run(quick: bool = False) -> list[dict]:
         wall = time.time() - t0
         a_sim = float(summ.stats["availability"][0, :, 0].mean())
         b_sim = float(summ.stats["busy_frac"][0].mean())
+        # sweep.run already surfaces a NeighborOverflowWarning (or raises
+        # under overflow_mode="strict") — the row records the raw count
         ovf = summ.stats.get("nbr_overflow")
         from repro.sim.cells import contact_backend
 
@@ -108,9 +110,10 @@ def main(quick: bool = False) -> None:
     # against a zero error hitting the log
     slope = float(np.polyfit(np.log(ns), np.log(np.maximum(errs, 1e-6)), 1)[0])
     monotone = bool(np.all(np.diff(errs) <= 1e-6))
+    ovf_max = max((r["nbr_overflow"] or 0) for r in rows)
     emit("fig_convergence", rows, t0,
          f"err_slope={slope:.2f} monotone={monotone} "
-         f"err_first={errs[0]} err_last={errs[-1]}")
+         f"err_first={errs[0]} err_last={errs[-1]} ovf_max={ovf_max}")
 
 
 if __name__ == "__main__":

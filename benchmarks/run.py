@@ -24,7 +24,8 @@ os.environ.setdefault(
 
 from benchmarks import (  # noqa: E402
     fig1_availability, fig2_capacity, fig3_stability, fig4_staleness,
-    fig_convergence, fig_multizone, gossip_throughput, roofline_table,
+    fig_convergence, fig_faults, fig_multizone, gossip_throughput,
+    roofline_table,
     sim_engine,
 )
 
@@ -34,6 +35,7 @@ BENCHES = {
     "fig3": fig3_stability.main,
     "fig4": fig4_staleness.main,
     "fig_convergence": fig_convergence.main,
+    "fig_faults": fig_faults.main,
     "fig_multizone": fig_multizone.main,
     "gossip": gossip_throughput.main,
     "roofline": roofline_table.main,

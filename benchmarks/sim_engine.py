@@ -174,13 +174,17 @@ def scaling(ns: list[int], n_slots: int = 48, reps: int = 2) -> list[dict]:
     ``BENCH_sim_engine.json`` come from ``--scaling`` on the reference
     host.
     """
+    import dataclasses
     import math
 
     from repro.configs.fg_paper import DENSITY
+    from repro.sim.engine import check_overflow
+    from repro.sim.faults import FaultConfig
 
     _DENSE_MAX_N = 8192
     p = paper_params(lam=0.05, M=1)
     pd = dynamic_params(p)
+    n_overhead = max(ns)  # zero-rate fault overhead probe at the top row
     rows = []
     for n in ns:
         area = math.sqrt(n / DENSITY)
@@ -203,13 +207,32 @@ def scaling(ns: list[int], n_slots: int = 48, reps: int = 2) -> list[dict]:
                 out = jax.block_until_ready(_run_single(key, pd, cfg, 1))
                 best = min(best, time.time() - t0)
             ovf = out.get("nbr_overflow")
+            max_ovf = None if ovf is None else int(ovf[-1])
+            # degradation telemetry: a saturated neighbor list silently
+            # drops contacts — surface it the same way simulate() does
+            check_overflow(cfg, max_ovf,
+                           context=f"scaling N={n} backend={backend}")
+            overhead_pct = None
+            if n == n_overhead and backend == "cells":
+                # an all-zero-rates FaultConfig must trace the identical
+                # program: the gate is Python-level, so the only cost
+                # allowed is jit-cache noise (< 5%, CI-gated)
+                cfg_f = dataclasses.replace(cfg, faults=FaultConfig())
+                jax.block_until_ready(_run_single(key, pd, cfg_f, 1))
+                best_f = float("inf")
+                for _ in range(reps):
+                    t0 = time.time()
+                    jax.block_until_ready(_run_single(key, pd, cfg_f, 1))
+                    best_f = min(best_f, time.time() - t0)
+                overhead_pct = round(100.0 * (best_f / best - 1.0), 1)
             per_backend[backend] = n_slots / best
             rows.append(dict(
                 n_nodes=n, backend=backend,
                 slots_per_s=round(n_slots / best, 1),
                 ms_per_slot=round(1e3 * best / n_slots, 2),
                 compile_s=round(compile_s, 1),
-                nbr_overflow=(None if ovf is None else int(ovf[-1])),
+                nbr_overflow=max_ovf,
+                zero_fault_overhead_pct=overhead_pct,
                 speedup_x=None,
             ))
         if "dense" in per_backend and "cells" in per_backend:

@@ -80,6 +80,48 @@ for DC in 1 2; do
   echo
 done
 
+echo "=== fault-determinism: same seed + FaultConfig -> identical traces ==="
+# The fault layer adds four PRNG streams (duty, crash, link, abort) to the
+# step; this gate pins that a faulted run is a pure function of (seed,
+# FaultConfig) — bitwise across repeated runs in one process and across
+# the 1- and 2-device sweep shardings.
+for DC in 1 2; do
+  XLA_FLAGS="--xla_force_host_platform_device_count=$DC" FAULT_DET_DC=$DC \
+    python - <<'EOF'
+import os
+
+import numpy as np
+
+from repro.configs.fg_faults import harsh
+from repro.configs.fg_paper import paper_params
+from repro.sim import SimConfig, sweep
+
+dc = os.environ["FAULT_DET_DC"]
+cfg = SimConfig(n_nodes=60, n_slots=160, sample_every=8, faults=harsh())
+ps = [paper_params(lam=l, M=1) for l in (0.1, 0.3)]
+runs = [sweep.run(ps, cfg, seeds=(0, 1), reduce="trace") for _ in range(2)]
+keys = ("availability", "availability_c", "on_frac_c", "fault_events")
+for k in keys:
+    a = np.asarray(getattr(runs[0], k))
+    b = np.asarray(getattr(runs[1], k))
+    assert np.array_equal(a, b), f"non-deterministic faulted trace: {k}"
+np.savez(f"/tmp/fault_det_{dc}.npz",
+         **{k: np.asarray(getattr(runs[0], k)) for k in keys})
+print(f"devices={dc}: repeated faulted sweeps bitwise-identical")
+EOF
+done
+python - <<'EOF'
+import numpy as np
+
+a = np.load("/tmp/fault_det_1.npz")
+b = np.load("/tmp/fault_det_2.npz")
+for k in a.files:
+    assert np.array_equal(a[k], b[k]), \
+        f"faulted trace differs across device counts: {k}"
+print("1- and 2-device faulted sweeps bitwise-identical")
+EOF
+
+echo
 echo "=== smoke: batched simulation engine (quick) ==="
 python -m benchmarks.run --quick --only sim_engine
 
@@ -137,8 +179,10 @@ with open("reports/bench/sim_scaling.json") as f:
     rows = json.load(f)["rows"]
 cells = next(r for r in rows if r["backend"] == "cells")
 speedup = cells["speedup_x"]
+overhead = cells.get("zero_fault_overhead_pct")
 print(f"N=4096 cells-over-dense speedup: {speedup}x (gate: >= 2x), "
-      f"nbr_overflow={cells['nbr_overflow']}")
+      f"nbr_overflow={cells['nbr_overflow']}, "
+      f"zero_fault_overhead_pct={overhead} (gate: < 5%)")
 fail = False
 if speedup is None or speedup < 2.0:
     print("FAIL: cell-list backend no longer beats the dense sweep at "
@@ -147,6 +191,10 @@ if speedup is None or speedup < 2.0:
 if cells["nbr_overflow"] != 0:
     print("FAIL: auto-sized neighbor lists overflowed (contact detection "
           "undercounted)")
+    fail = True
+if overhead is None or overhead >= 5.0:
+    print("FAIL: the all-zero-rates fault path must trace the identical "
+          "program — measured overhead breaks the <5% budget")
     fail = True
 sys.exit(1 if fail else 0)
 EOF

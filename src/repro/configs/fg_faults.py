@@ -1,0 +1,115 @@
+"""Preset fault configurations for the robustness studies.
+
+The fault layer (``repro.sim.faults``) is parameterized by a
+``FaultConfig`` — class fractions, duty-cycle switching rates, link
+failure / abort probabilities, crash-restart churn. These builders name
+the handful of scenarios the benchmarks and tests sweep so a study reads
+``duty_mix(duty=0.7)`` instead of a raw class tuple.
+
+Every builder returns a hashable ``FaultConfig`` suitable for the static
+``SimConfig.faults`` jit argument and for
+``meanfield.solve_fixed_point_classes`` / ``p.faults``.
+"""
+
+from __future__ import annotations
+
+from repro.sim.faults import FaultClass, FaultConfig
+
+__all__ = [
+    "always_on",
+    "duty_mix",
+    "free_rider_mix",
+    "harsh",
+]
+
+# a duty-cycled node's mean on+off cycle [s]; short against the ~157 s
+# RZ sojourn so the duty chain mixes well within a residence
+CYCLE_TIME_DEFAULT = 10.0
+
+
+def always_on() -> FaultConfig:
+    """The trivial config: one always-on class, zero fault rates.
+
+    Exercises the delegation / bitwise-identity paths — the engine and
+    the class solver must behave exactly as with ``faults=None``.
+    """
+    return FaultConfig()
+
+
+def _duty_class(
+    duty: float, cycle_time: float, frac: float, name: str = "duty",
+) -> FaultClass:
+    """A two-state on/off class with stationary on-fraction ``duty``.
+
+    The embedded chain has mean cycle ``1/rate_on + 1/rate_off =
+    cycle_time`` and stationary duty ``rate_on / (rate_on + rate_off)``.
+    """
+    if not 0.0 < duty < 1.0:
+        raise ValueError(f"duty must be in (0, 1), got {duty}")
+    if cycle_time <= 0.0:
+        raise ValueError(f"cycle_time must be positive, got {cycle_time}")
+    # mean on-time = duty * cycle_time, mean off-time = (1-duty) * cycle
+    rate_off = 1.0 / (duty * cycle_time)
+    rate_on = 1.0 / ((1.0 - duty) * cycle_time)
+    return FaultClass(frac=frac, rate_off=rate_off, rate_on=rate_on,
+                      name=name)
+
+
+def duty_mix(
+    *,
+    duty: float = 0.5,
+    frac_duty: float = 0.5,
+    cycle_time: float = CYCLE_TIME_DEFAULT,
+    link_fail_rate: float = 0.0,
+    p_abort: float = 0.0,
+    crash_rate: float = 0.0,
+) -> FaultConfig:
+    """Always-on class + duty-cycled class — the fig_faults workhorse.
+
+    ``frac_duty`` of the population duty-cycles with stationary
+    accessible fraction ``duty``; the rest stays always on. Optional
+    link/abort/crash rates apply population-wide.
+    """
+    if not 0.0 < frac_duty <= 1.0:
+        raise ValueError(f"frac_duty must be in (0, 1], got {frac_duty}")
+    classes: tuple[FaultClass, ...]
+    if frac_duty >= 1.0:
+        classes = (_duty_class(duty, cycle_time, 1.0),)
+    else:
+        classes = (
+            FaultClass(frac=1.0 - frac_duty, name="on"),
+            _duty_class(duty, cycle_time, frac_duty),
+        )
+    return FaultConfig(classes=classes, link_fail_rate=link_fail_rate,
+                       p_abort=p_abort, crash_rate=crash_rate)
+
+
+def free_rider_mix(*, frac_fr: float = 0.25) -> FaultConfig:
+    """Always-on servers + a free-rider class that receives but never serves."""
+    if not 0.0 < frac_fr < 1.0:
+        raise ValueError(f"frac_fr must be in (0, 1), got {frac_fr}")
+    return FaultConfig(classes=(
+        FaultClass(frac=1.0 - frac_fr, name="on"),
+        FaultClass(frac=frac_fr, free_rider=True, name="free_rider"),
+    ))
+
+
+def harsh(
+    *,
+    duty: float = 0.6,
+    frac_duty: float = 0.5,
+    cycle_time: float = CYCLE_TIME_DEFAULT,
+    link_fail_rate: float = 0.05,
+    p_abort: float = 0.1,
+    crash_rate: float = 0.002,
+) -> FaultConfig:
+    """Everything at once: duty cycling, link failures, aborts, crashes.
+
+    The stress preset for determinism / robustness tests — not calibrated
+    to any figure, just guaranteed to exercise every fault path.
+    """
+    return duty_mix(
+        duty=duty, frac_duty=frac_duty, cycle_time=cycle_time,
+        link_fail_rate=link_fail_rate, p_abort=p_abort,
+        crash_rate=crash_rate,
+    )

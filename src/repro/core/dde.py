@@ -35,21 +35,64 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from typing import Any
+
 from repro.core.meanfield import FGParams, MeanFieldSolution
 
 __all__ = [
     "DDESolution",
     "solve_observation_availability",
     "solve_observation_availability_batch",
+    "solve_observation_availability_classes",
     "solve_observation_availability_multizone",
 ]
+
+
+def _check_finite_coeffs(**named) -> None:
+    """Reject NaN/Inf mean-field coefficients before they poison the scan.
+
+    Infinite *delays* are a legitimate unstable operating point and are
+    handled upstream (o == 0); the Euler coefficients themselves must be
+    finite or every later sample silently becomes NaN."""
+    bad = [
+        name for name, v in named.items()
+        if v is not None and not bool(jnp.all(jnp.isfinite(jnp.asarray(v))))
+    ]
+    if bad:
+        raise ValueError(
+            "non-finite DDE coefficient input(s): " + ", ".join(sorted(bad))
+            + " — check the mean-field solution for NaN/Inf"
+        )
+
+
+def _trace_diag(o: jnp.ndarray, dt: float):
+    """(converged, residual) of an integrated trace: finite everywhere,
+    and the magnitude of the final Euler step as a settling measure."""
+    converged = jnp.all(jnp.isfinite(o))
+    if o.shape[-1] >= 2:
+        residual = jnp.max(jnp.abs(o[..., -1] - o[..., -2])) / dt
+    else:
+        residual = jnp.asarray(0.0)
+    return converged, residual
+
+
+def _strict_trace(converged, *, what: str) -> None:
+    if not bool(converged):
+        raise RuntimeError(
+            f"{what}: Euler trace contains non-finite samples — "
+            "the mean-field operating point is likely unstable or the "
+            "step dt= too large"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
 class DDESolution:
     tau: jnp.ndarray        # (nt,) age grid [s], starting at 0
-    o: jnp.ndarray          # (nt,) — or (P, nt) for a batched solution
+    o: jnp.ndarray          # (nt,) — or (P, nt) / (C, K, nt) batched
     dt: float
+    weights: Any = None     # (C,) class weights of a class-structured solve
+    converged: Any = None   # every sample finite (Euler scan did not blow up)
+    residual: Any = None    # max |do/dtau| at the final step [1/s]
 
     def integral(self, tau_l) -> jnp.ndarray:
         """∫_0^{tau_l} o(τ) dτ — the Lemma 4 incorporation integral.
@@ -66,6 +109,19 @@ class DDESolution:
     def point(self, i: int) -> "DDESolution":
         """Scalar slice of a batched solution."""
         return DDESolution(tau=self.tau, o=self.o[i], dt=self.dt)
+
+    def weighted(self) -> "DDESolution":
+        """Class-weighted observation availability of a class solve.
+
+        Collapses the leading class axis of a
+        :func:`solve_observation_availability_classes` result with the
+        accessible-observer weights ``f_c q_c / q_bar`` — the Theorem-1
+        availability seen by a uniformly random *accessible* observer."""
+        if self.weights is None:
+            return self
+        o = jnp.einsum("c,c...->...", jnp.asarray(self.weights), self.o)
+        return DDESolution(tau=self.tau, o=o, dt=self.dt,
+                           converged=self.converged, residual=self.residual)
 
 
 @partial(jax.jit, static_argnames=("n_steps", "n_delay"))
@@ -107,8 +163,13 @@ def solve_observation_availability(
     *,
     dt: float = 0.05,
     tau_max: float | None = None,
+    strict: bool = False,
 ) -> DDESolution:
-    """Solve Eq. (5)-(6) on τ ∈ [0, tau_max] (default: the lifetime τ_l)."""
+    """Solve Eq. (5)-(6) on τ ∈ [0, tau_max] (default: the lifetime τ_l).
+
+    ``strict=True`` raises if the Euler trace picks up non-finite
+    samples; the returned solution always carries ``converged`` /
+    ``residual`` diagnostics."""
     tau_max = float(tau_max if tau_max is not None else p.tau_l)
     n_total = max(int(round(tau_max / dt)) + 1, 2)
     tau = jnp.arange(n_total) * dt
@@ -117,7 +178,11 @@ def solve_observation_availability(
     d_M = float(sol.d_M)
     if not (jnp.isfinite(sol.d_I) and jnp.isfinite(sol.d_M)):
         # Unstable operating point: observations are never incorporated.
-        return DDESolution(tau=tau, o=jnp.zeros_like(tau), dt=dt)
+        return DDESolution(tau=tau, o=jnp.zeros_like(tau), dt=dt,
+                           converged=jnp.asarray(True),
+                           residual=jnp.asarray(0.0))
+    _check_finite_coeffs(a=sol.a, b=sol.b, S=sol.S, T_S=sol.T_S,
+                         Lam=p.Lam, N=p.N, alpha=p.alpha, w=p.w)
 
     o0 = p.Lam / jnp.ceil(jnp.maximum(sol.a * p.N, 1.0))
     n_pre = min(int(round(d_I / dt)), n_total)            # o = 0 region
@@ -131,7 +196,11 @@ def solve_observation_availability(
         leak = p.alpha * p.w / p.N
         parts.append(_integrate(coeff, sol.a, leak, o0, n_steps, n_delay, dt))
     o = jnp.concatenate(parts)[:n_total]
-    return DDESolution(tau=tau, o=o, dt=dt)
+    converged, residual = _trace_diag(o, dt)
+    if strict:
+        _strict_trace(converged, what="solve_observation_availability")
+    return DDESolution(tau=tau, o=o, dt=dt, converged=converged,
+                       residual=residual)
 
 
 @partial(jax.jit, static_argnames=("n_total", "buf_len"))
@@ -205,6 +274,7 @@ def solve_observation_availability_batch(
     *,
     dt: float = 0.05,
     tau_max: float | None = None,
+    strict: bool = False,
 ) -> DDESolution:
     """Solve Eq. (5)-(6) for a whole scenario grid in one scanned program.
 
@@ -253,6 +323,7 @@ def solve_observation_availability_batch(
     coeff = jnp.asarray(sols.b) * jnp.asarray(sols.S) * w * w \
         / jnp.maximum(jnp.asarray(sols.T_S), 1e-12)
     leak = jnp.asarray([p.alpha * p.w / p.N for p in ps])
+    _check_finite_coeffs(coeff=coeff, a=a, leak=leak, o0=o0_all)
 
     o = _integrate_batch(
         coeff, a, leak, o0_all.astype(jnp.float32),
@@ -260,7 +331,12 @@ def solve_observation_availability_batch(
         jnp.asarray(n_delay, jnp.int32),
         n_total, buf_len, dt,
     )
-    return DDESolution(tau=tau, o=o, dt=dt)
+    converged, residual = _trace_diag(o, dt)
+    if strict:
+        _strict_trace(converged,
+                      what="solve_observation_availability_batch")
+    return DDESolution(tau=tau, o=o, dt=dt, converged=converged,
+                       residual=residual)
 
 
 def solve_observation_availability_multizone(
@@ -269,6 +345,7 @@ def solve_observation_availability_multizone(
     *,
     dt: float = 0.05,
     tau_max: float | None = None,
+    strict: bool = False,
 ) -> DDESolution:
     """Zone-coupled Theorem-1 DDE for a multi-zone operating point.
 
@@ -318,6 +395,7 @@ def solve_observation_availability_multizone(
     coeff = jnp.asarray(mz.b) * jnp.asarray(mz.S) * p.w * p.w \
         / jnp.maximum(jnp.asarray(mz.T_S), 1e-12)
     leak = jnp.asarray(mz.alpha_z) * p.w / N_z
+    _check_finite_coeffs(coeff=coeff, a=a, leak=leak, o0=o0)
 
     R = np.asarray(mz.R, dtype=np.float64)
     R_off = R - np.diag(np.diag(R))
@@ -333,4 +411,118 @@ def solve_observation_availability_multizone(
         n_total, buf_len, dt,
         couple=jnp.asarray(couple, jnp.float32),
     )
-    return DDESolution(tau=tau, o=o, dt=dt)
+    converged, residual = _trace_diag(o, dt)
+    if strict:
+        _strict_trace(converged,
+                      what="solve_observation_availability_multizone")
+    return DDESolution(tau=tau, o=o, dt=dt, converged=converged,
+                       residual=residual)
+
+
+def solve_observation_availability_classes(
+    p: FGParams,
+    csol,
+    faults=None,
+    *,
+    dt: float = 0.05,
+    tau_max: float | None = None,
+    strict: bool = False,
+) -> DDESolution:
+    """Class-weighted Theorem-1 observation availability.
+
+    ``csol`` is a ``repro.core.meanfield.ClassSolution``. Each
+    (class ``c``, zone ``z``) lane integrates Eq. (5) with the
+    fault-corrected coefficients of the class fixed point:
+
+    * exchange gain ``q_c b_z S_z w^2 / T_S_z`` — a class-``c`` holder
+      merges only while accessible, so its gain is derated by the duty
+      ``q_c`` (``S_z``/``T_S_z`` already carry the link-failure and
+      abort corrections);
+    * partner availability ``a_serve_z`` — the served-side probability
+      couples every class through the same accessible-server pool;
+    * leak ``(alpha_z / N_z + crash_rate) w`` — crash-restart churn
+      drops incorporated observations exactly like a zone exit;
+    * Eq. (6) plateau ``Lam_z / ceil(a_serve_z N_z q_bar)`` over the
+      *accessible* holder population, with the zone's class-effective
+      delays ``d_I_z`` / ``d_M_z`` from the class fixed point.
+
+    At a trivial (disabled) ``FaultConfig`` the hook **delegates** to
+    :func:`solve_observation_availability` (or the multizone solver when
+    ``csol`` wraps a ``MultizoneSolution``), so the one-always-on-class
+    answer is bitwise the existing solvers' — broadcast to a leading
+    class axis with weight 1. The returned ``o`` has shape
+    ``(C, K, nt)``; ``weighted()`` collapses the class axis with the
+    accessible-observer weights ``f_c q_c / q_bar``.
+    """
+    fc = faults if faults is not None else getattr(p, "faults", None)
+
+    if csol.base is not None:
+        base = csol.base
+        if hasattr(base, "R"):            # MultizoneSolution
+            sol = solve_observation_availability_multizone(
+                p, base, dt=dt, tau_max=tau_max, strict=strict,
+            )
+            o = sol.o[None, :, :]
+        else:
+            sol = solve_observation_availability(
+                p, base, dt=dt, tau_max=tau_max, strict=strict,
+            )
+            o = sol.o[None, None, :]
+        return DDESolution(
+            tau=sol.tau, o=o, dt=dt, weights=jnp.ones((1,)),
+            converged=sol.converged, residual=sol.residual,
+        )
+
+    crash = float(fc.crash_rate) if fc is not None and fc.enabled else 0.0
+    C, K = csol.a.shape
+    tau_max = float(tau_max if tau_max is not None else p.tau_l)
+    n_total = max(int(round(tau_max / dt)) + 1, 2)
+    tau = jnp.arange(n_total) * dt
+
+    # zone-level class-effective delays, broadcast per class
+    d_I = np.broadcast_to(np.asarray(csol.d_I, np.float64), (C, K)).ravel()
+    d_M = np.broadcast_to(np.asarray(csol.d_M, np.float64), (C, K)).ravel()
+    finite = np.isfinite(d_I) & np.isfinite(d_M)
+    d_I0 = np.where(finite, d_I, 0.0)
+    d_M0 = np.where(finite, d_M, 0.0)
+    n_pre = np.minimum(np.round(d_I0 / dt).astype(np.int64), n_total)
+    n_plateau = np.minimum(
+        np.round(d_M0 / dt).astype(np.int64) + 1, n_total - n_pre
+    )
+    n_delay = np.maximum(np.round(d_M0 / dt).astype(np.int64), 1)
+    n_pre = np.where(finite, n_pre, n_total)
+    n_plateau = np.where(finite, n_plateau, 0)
+    start = n_pre + n_plateau
+    n_delay = np.where(start < n_total, n_delay, 1)
+    buf_len = int(n_delay.max())
+
+    q = jnp.asarray(csol.q)                               # (C,)
+    a_serve = jnp.asarray(csol.a_serve)                   # (K,)
+    N_z = jnp.asarray(csol.N_z)
+    q_bar = jnp.asarray(csol.q_bar)
+    coeff_z = jnp.asarray(csol.b) * jnp.asarray(csol.S) * p.w * p.w \
+        / jnp.maximum(jnp.asarray(csol.T_S), 1e-12)       # (K,)
+    coeff = (q[:, None] * coeff_z[None, :]).ravel()       # (C*K,)
+    a_lane = jnp.broadcast_to(a_serve[None, :], (C, K)).ravel()
+    leak_z = (jnp.asarray(csol.alpha_z) / N_z + crash) * p.w
+    leak = jnp.broadcast_to(leak_z[None, :], (C, K)).ravel()
+    o0_z = jnp.asarray(csol.Lam_z) / jnp.ceil(
+        jnp.maximum(a_serve * N_z * q_bar, 1.0)
+    )
+    o0 = jnp.broadcast_to(o0_z[None, :], (C, K)).reshape(-1)
+    o0 = jnp.where(jnp.asarray(finite), o0, 0.0)
+    _check_finite_coeffs(coeff=coeff, a=a_lane, leak=leak, o0=o0)
+
+    o = _integrate_batch(
+        coeff, a_lane, leak, o0.astype(jnp.float32),
+        jnp.asarray(start, jnp.int32), jnp.asarray(n_pre, jnp.int32),
+        jnp.asarray(n_delay, jnp.int32),
+        n_total, buf_len, dt,
+    ).reshape(C, K, n_total)
+    converged, residual = _trace_diag(o, dt)
+    if strict:
+        _strict_trace(converged,
+                      what="solve_observation_availability_classes")
+    weights = jnp.asarray(csol.fracs) * q / jnp.maximum(q_bar, 1e-12)
+    return DDESolution(tau=tau, o=o, dt=dt, weights=weights,
+                       converged=converged, residual=residual)

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -39,10 +40,12 @@ __all__ = [
     "FGParams",
     "MeanFieldSolution",
     "MultizoneSolution",
+    "ClassSolution",
     "transfer_stats",
     "solve_fixed_point",
     "solve_fixed_point_batch",
     "solve_fixed_point_multizone",
+    "solve_fixed_point_classes",
     "merge_arrival_rate",
     "queueing_delays",
     "stability_lhs",
@@ -74,6 +77,10 @@ class FGParams:
                                    # ``solve_fixed_point_multizone`` and
                                    # the zone-coupled DDE read it when no
                                    # explicit ZoneSet is passed.
+    faults: Any = None             # optional repro.sim.faults.FaultConfig
+                                   # (duck-typed — core never imports sim);
+                                   # read by solve_fixed_point_classes
+                                   # when no explicit config is passed
 
     @property
     def w(self) -> float:
@@ -106,6 +113,11 @@ class MeanFieldSolution:
     d_I: jnp.ndarray      # mean incorporation delay [s]
     stability: jnp.ndarray  # LHS of Eq. (3); stable iff <= 1
     rho: jnp.ndarray      # compute utilization r*T_M + (Mwλ Λ/N)*T_T
+    # convergence diagnostics (None on legacy construction paths): the
+    # post-loop residual |body(a) - a| of the damped iteration and the
+    # residual <= tol verdict — iteration-cap exits are no longer silent
+    converged: Any = None
+    residual: Any = None
 
     @property
     def stable(self) -> jnp.ndarray:
@@ -114,13 +126,14 @@ class MeanFieldSolution:
     def point(self, i: int) -> "MeanFieldSolution":
         """Scalar slice of a batched solution (``solve_fixed_point_batch``)."""
         return MeanFieldSolution(**{
-            f.name: jnp.asarray(getattr(self, f.name))[i]
+            f.name: (None if getattr(self, f.name) is None
+                     else jnp.asarray(getattr(self, f.name))[i])
             for f in dataclasses.fields(self)
         })
 
 
 def _transfer_stats_core(
-    a, *, M, w, t0, T_L, t_grid, pdf, weights
+    a, *, M, w, t0, T_L, t_grid, pdf, weights, fail_rate=None
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Array-based Lemma 1 integrand shared by :func:`transfer_stats` and
     the fixed-point iteration — one implementation, so the S(a) / T_S(a)
@@ -130,23 +143,63 @@ def _transfer_stats_core(
     exchange; a contact of duration t_c succeeds for a given instance with
     probability min(1, floor((t_c - t0)/T_L) / gamma) and the exchange
     occupies the pair for min(t_c, gamma*T_L + t0).
+
+    ``fail_rate`` (the fault layer's per-link-end failure rate [1/s],
+    ``None`` = the exact paper formulas above, bitwise) folds mid-transfer
+    link failure into both quantities: the link dies at ``mu = 2*fail_rate``
+    (either end), so an instance at sequential position ``j`` transfers iff
+    the link survives ``t0 + (j+1) T_L``, giving the corrected success
+
+        S-integrand = exp(-mu t0) (1 - exp(-mu T_L m_eff)) / (mu T_L gamma),
+        m_eff = min(n_transferable, gamma),
+
+    and the pair occupation becomes ``E[min(occ, Exp(mu))]
+    = (1 - exp(-mu * occ)) / mu``. Both reduce to the exact formulas as
+    ``mu -> 0``.
     """
     gamma = jnp.maximum(2.0 * M * w * w * a, _EPS)
     n_transferable = jnp.floor(jnp.maximum(t_grid - t0, 0.0) / T_L)
-    s_integrand = jnp.minimum(1.0, n_transferable / gamma)
+    occupied = jnp.minimum(t_grid, gamma * T_L + t0)
+    if fail_rate is None:
+        s_integrand = jnp.minimum(1.0, n_transferable / gamma)
+        t_integrand = occupied
+    else:
+        mu = 2.0 * fail_rate
+        m_eff = jnp.minimum(n_transferable, gamma)
+        s_integrand = (
+            jnp.exp(-mu * t0)
+            * (-jnp.expm1(-mu * T_L * m_eff)) / (mu * T_L * gamma)
+        )
+        t_integrand = -jnp.expm1(-mu * occupied) / mu
     S = jnp.sum(jnp.where(t_grid > t0, s_integrand, 0.0) * pdf * weights)
-    T_S = jnp.sum(jnp.minimum(t_grid, gamma * T_L + t0) * pdf * weights)
+    T_S = jnp.sum(t_integrand * pdf * weights)
     return S, T_S
 
 
 def transfer_stats(
-    a: jnp.ndarray, p: FGParams, contact: ContactModel
+    a: jnp.ndarray, p: FGParams, contact: ContactModel, *, fail_rate=None
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """``S(a)`` and ``T_S(a)`` from Lemma 1 (see :func:`_transfer_stats_core`)."""
     return _transfer_stats_core(
         a, M=p.M, w=p.w, t0=p.t0, T_L=p.T_L,
         t_grid=contact.t_grid, pdf=contact.pdf, weights=contact.weights,
+        fail_rate=fail_rate,
     )
+
+
+def _check_finite_inputs(p: FGParams, contact: ContactModel | None = None):
+    """NaN/Inf poisoning guard on solver inputs: a poisoned parameter
+    silently converges the damped iteration to NaN, so reject it up
+    front with the field name instead."""
+    bad = [
+        f.name for f in dataclasses.fields(p)
+        if isinstance(getattr(p, f.name), (int, float))
+        and not np.isfinite(getattr(p, f.name))
+    ]
+    if contact is not None and not np.all(np.isfinite(np.asarray(contact.g))):
+        bad.append("contact.g")
+    if bad:
+        raise ValueError(f"non-finite mean-field solver inputs: {bad}")
 
 
 def _busy_core(T_S, *, g, alpha, N):
@@ -174,7 +227,11 @@ def _fixed_point_iterate(
     g: jnp.ndarray,
     iters: int,
 ) -> tuple[jnp.ndarray, ...]:
-    """Damped fixed-point iteration on Eq. (1). Pure-jnp inner loop."""
+    """Damped fixed-point iteration on Eq. (1). Pure-jnp inner loop.
+
+    Returns ``(a, b, S, T_S, residual)`` — the residual is the magnitude
+    of one further damped step, ``|body(a) - a|``, so an iteration-cap
+    exit that has not contracted is detectable by the caller."""
     N, alpha, lam, Lam, M, w, T_T, T_M, t0, T_L = (
         p_dyn["N"], p_dyn["alpha"], p_dyn["lam"], p_dyn["Lam"], p_dyn["M"],
         p_dyn["w"], p_dyn["T_T"], p_dyn["T_M"], p_dyn["t0"], p_dyn["T_L"],
@@ -199,36 +256,63 @@ def _fixed_point_iterate(
         return 0.5 * a + 0.5 * a_new  # damping for robustness
 
     a = jax.lax.fori_loop(0, iters, body, a0)
+    residual = jnp.abs(body(0, a) - a)
     S, T_S = stats(a)
     b = jnp.maximum(_busy_core(T_S, g=g, alpha=alpha, N=N), _EPS)
-    return a, b, S, T_S
+    return a, b, S, T_S, residual
+
+
+def _converged(residual, tol):
+    return residual <= tol
+
+
+def _strict_check(converged, residual, *, what: str, iters: int, tol: float):
+    if not bool(np.all(np.asarray(converged))):
+        res = np.asarray(residual)
+        raise RuntimeError(
+            f"{what} did not converge: max residual {float(np.max(res)):.3e}"
+            f" > tol {tol:.1e} after {iters} damped iterations "
+            f"({int(np.sum(~np.asarray(converged)))} of {res.size} "
+            "point(s)); raise iters= or loosen tol="
+        )
 
 
 def solve_fixed_point(
-    p: FGParams, contact: ContactModel, *, iters: int = 200
+    p: FGParams, contact: ContactModel, *, iters: int = 200,
+    tol: float = 1e-6, strict: bool = False,
 ) -> MeanFieldSolution:
     """Solve the Lemma 1 fixed point and derive Lemma 2-3 quantities.
 
     Independently of the initial condition every trajectory converges to the
     unique solution (Lemma 1), so damped iteration from a=0.5 suffices; 200
     damped iterations contract far below float32 resolution in practice
-    (verified in tests against brute-force bisection).
+    (verified in tests against brute-force bisection). The returned
+    solution carries ``converged`` (post-loop residual <= ``tol``) and
+    ``residual``; ``strict=True`` raises with diagnostics instead of
+    returning an unconverged point. Non-finite inputs are rejected up
+    front.
     """
+    _check_finite_inputs(p, contact)
     p_dyn = dict(
         N=jnp.asarray(p.N), alpha=jnp.asarray(p.alpha), lam=jnp.asarray(p.lam),
         Lam=jnp.asarray(p.Lam), M=jnp.asarray(float(p.M)), w=jnp.asarray(p.w),
         T_T=jnp.asarray(p.T_T), T_M=jnp.asarray(p.T_M), t0=jnp.asarray(p.t0),
         T_L=jnp.asarray(p.T_L),
     )
-    a, b, S, T_S = _fixed_point_iterate(
+    a, b, S, T_S, residual = _fixed_point_iterate(
         jnp.asarray(0.5), p_dyn, contact.t_grid, contact.pdf, contact.weights,
         contact.g, iters,
     )
+    converged = _converged(residual, tol)
+    if strict:
+        _strict_check(converged, residual, what="solve_fixed_point",
+                      iters=iters, tol=tol)
     r = merge_arrival_rate(a, b, S, p, contact)
     d_M, d_I = queueing_delays(r, p)
     lhs, rho = stability_lhs(r, d_M, d_I, p)
     return MeanFieldSolution(
-        a=a, b=b, S=S, T_S=T_S, r=r, d_M=d_M, d_I=d_I, stability=lhs, rho=rho
+        a=a, b=b, S=S, T_S=T_S, r=r, d_M=d_M, d_I=d_I, stability=lhs, rho=rho,
+        converged=converged, residual=residual,
     )
 
 
@@ -336,6 +420,8 @@ class MultizoneSolution:
     alpha_z: jnp.ndarray    # (k,) total zone exit rate [1/s]
     Lam_z: jnp.ndarray      # (k,) mean simultaneous observers per zone
     R: jnp.ndarray          # (k, k) migration-rate matrix [nodes/s]
+    converged: Any = None   # residual <= tol (whole coupled system)
+    residual: Any = None    # max over zones of |body(a) - a|
 
     @property
     def stable(self) -> jnp.ndarray:
@@ -350,6 +436,31 @@ class MultizoneSolution:
         )
 
 
+def _zone_system(p: FGParams, zones: ZoneSet, *, density, speed, t,
+                 area_side):
+    """Shared multizone geometry: ``(N_z, alpha_z, Lam_z, R_off, R)`` as
+    float64 numpy — the per-zone populations, exit rates, observer shares
+    and state-transferring migration couplings that both the multizone and
+    the class-structured solvers build their balance from."""
+    R = np.asarray(migration_rate_matrix(
+        zones, density=density, speed=speed, t=t, area_side=area_side,
+    ))
+    radii = np.asarray(zones.radii, dtype=np.float64)
+    N_z = density * np.pi * radii**2
+    alpha_z = np.diag(R).copy()
+    R_off = R - np.diag(alpha_z)
+
+    # union population by pairwise inclusion-exclusion (lens areas), at
+    # the same time-t geometry as the migration arcs
+    centers = (
+        zones.centers_at(t, area_side)
+        if zones.moving and area_side is not None
+        else np.asarray(zones.centers, dtype=np.float64)
+    )
+    Lam_z = p.Lam * N_z / max(density * union_area(centers, radii), _EPS)
+    return N_z, alpha_z, Lam_z, R_off, R
+
+
 def solve_fixed_point_multizone(
     p: FGParams,
     contact: ContactModel,
@@ -360,6 +471,8 @@ def solve_fixed_point_multizone(
     t: float = 0.0,
     area_side: float | None = None,
     iters: int = 200,
+    tol: float = 1e-4,
+    strict: bool = False,
 ) -> MultizoneSolution:
     """Coupled per-zone Lemma 1-3 fixed point for a ``ZoneSet``.
 
@@ -413,23 +526,11 @@ def solve_fixed_point_multizone(
         raise ValueError(
             "no ZoneSet: pass zones= or set FGParams.zones"
         )
-    R = np.asarray(migration_rate_matrix(
-        zones, density=density, speed=speed, t=t, area_side=area_side,
-    ))
+    _check_finite_inputs(p, contact)
     k = zones.k
-    radii = np.asarray(zones.radii, dtype=np.float64)
-    N_z = density * np.pi * radii**2
-    alpha_z = np.diag(R).copy()
-    R_off = R - np.diag(alpha_z)
-
-    # union population by pairwise inclusion-exclusion (lens areas), at
-    # the same time-t geometry as the migration arcs
-    centers = (
-        zones.centers_at(t, area_side)
-        if zones.moving and area_side is not None
-        else np.asarray(zones.centers, dtype=np.float64)
+    N_z, alpha_z, Lam_z, R_off, R = _zone_system(
+        p, zones, density=density, speed=speed, t=t, area_side=area_side,
     )
-    Lam_z = p.Lam * N_z / max(density * union_area(centers, radii), _EPS)
 
     N_zj = jnp.asarray(N_z, jnp.float32)
     alpha_j = jnp.asarray(alpha_z, jnp.float32)
@@ -459,6 +560,12 @@ def solve_fixed_point_multizone(
         return 0.5 * a + 0.5 * jnp.clip(a_new, _EPS, 1.0)
 
     a = jax.lax.fori_loop(0, iters, body, jnp.full((k,), 0.5))
+    residual = jnp.max(jnp.abs(body(0, a) - a))
+    converged = _converged(residual, tol)
+    if strict:
+        _strict_check(converged, residual,
+                      what="solve_fixed_point_multizone", iters=iters,
+                      tol=tol)
     S, T_S = stats(a)
     b = jnp.maximum(_busy_core(T_S, g=g, alpha=alpha_j, N=N_zj), _EPS)
 
@@ -469,11 +576,219 @@ def solve_fixed_point_multizone(
     return MultizoneSolution(
         a=a, b=b, S=S, T_S=T_S, r=r, d_M=d_M, d_I=d_I, stability=lhs,
         rho=rho, N_z=N_zj, alpha_z=alpha_j, Lam_z=Lam_j, R=jnp.asarray(R),
+        converged=converged, residual=residual,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassSolution:
+    """Class-structured (class × zone) mean-field operating point.
+
+    The fault layer's analytic twin: ``a[c, z]`` is the steady-state model
+    availability among class-``c`` members of zone ``z`` (the quantity the
+    simulator emits as ``availability_c``). Single-RZ systems are the
+    ``K = 1`` column; ``a_serve`` is the class-duty-weighted availability
+    of *accessible, serving* nodes — the partner availability the gossip
+    gain couples every class through."""
+
+    a: jnp.ndarray          # (C, K) per-class per-zone availability
+    a_serve: jnp.ndarray    # (K,) duty-weighted serving availability
+    q: jnp.ndarray          # (C,) stationary accessible (duty) fraction
+    q_bar: jnp.ndarray      # () population mean accessible fraction
+    fracs: jnp.ndarray      # (C,) class population fractions
+    b: jnp.ndarray          # (K,) busy probability
+    S: jnp.ndarray          # (K,) corrected transfer success probability
+    T_S: jnp.ndarray        # (K,) corrected mean exchange time [s]
+    N_z: jnp.ndarray        # (K,) mean nodes per zone
+    alpha_z: jnp.ndarray    # (K,) zone exit rate [nodes/s]
+    Lam_z: jnp.ndarray      # (K,) mean simultaneous observers per zone
+    r: Any = None           # (K,) effective merge arrival rate [1/s]
+    d_M: Any = None         # (K,) mean merge delay [s]
+    d_I: Any = None         # (K,) mean incorporation delay [s]
+    converged: Any = None
+    residual: Any = None
+    base: Any = None        # the delegated MeanFieldSolution /
+                            # MultizoneSolution at a trivial FaultConfig
+
+    @property
+    def a_mean(self) -> jnp.ndarray:
+        """(K,) population-weighted availability sum_c f_c a_{c,z}."""
+        return jnp.sum(self.fracs[:, None] * self.a, axis=0)
+
+
+def _class_vectors(fc):
+    """(fracs, duty, serves) float64 vectors of a duck-typed FaultConfig."""
+    fracs = np.asarray([c.frac for c in fc.classes], np.float64)
+    q = np.asarray([c.duty for c in fc.classes], np.float64)
+    serves = np.asarray(
+        [0.0 if c.free_rider else 1.0 for c in fc.classes], np.float64
+    )
+    return fracs, q, serves
+
+
+def solve_fixed_point_classes(
+    p: FGParams,
+    contact: ContactModel,
+    faults=None,
+    zones: ZoneSet | None = None,
+    *,
+    density: float | None = None,
+    speed: float | None = None,
+    t: float = 0.0,
+    area_side: float | None = None,
+    iters: int = 200,
+    tol: float = 1e-4,
+    strict: bool = False,
+) -> ClassSolution:
+    """Class-structured (class × zone) coupled Lemma 1-3 fixed point.
+
+    Extends the paper's holder balance to the fault layer
+    (``repro.sim.faults.FaultConfig``, duck-typed — ``faults`` defaults to
+    ``p.faults``): per class ``c`` and zone ``z``
+
+        G_cz * a_serve_z * (1 - a_cz) + lt_cz * (1 - a_cz)
+            + inj_cz - alpha_cz * a_cz = 0
+
+    with the fault-corrected ingredients
+
+    * ``q_c`` the class's stationary accessible fraction (on/off duty
+      chain) and ``q_bar = sum_c f_c q_c`` the population mean: the
+      effective gossiping population is ``N_z * q_bar``;
+    * ``a_serve_z = sum_c f_c q_c (1 - fr_c) a_cz / q_bar`` — a partner
+      serves only if accessible and not a free-rider;
+    * ``G_cz = q_c * b_z * (N_z q_bar) * S_z * w / T_S_z`` — the class-c
+      gossip gain requires the receiver on too; ``S_z``/``T_S_z`` carry
+      the mid-transfer link-failure correction
+      (:func:`_transfer_stats_core` with ``fail_rate``) and the contact
+      rate is derated by the setup-abort probability
+      (``g_eff = g * (1 - p_abort)``);
+    * ``lt_cz = lam * Lam_z * q_c / q_bar`` — observers are drawn among
+      accessible members;
+    * ``alpha_cz = alpha_z + crash_rate * N_z`` — crash-restart churn is
+      extra state loss at the zone-exit port;
+    * ``inj_cz = sum_z' R_off[z, z'] a_cz'`` — class-preserving migration
+      injection, exactly the multizone coupling.
+
+    At a trivial (disabled) config the solver **delegates** to
+    :func:`solve_fixed_point` / :func:`solve_fixed_point_multizone`, so the
+    one-always-on-class answer is bitwise the existing solvers' (the
+    delegated solution rides along as ``.base``). Single-RZ systems
+    (``zones=None`` and no ``p.zones``) use the paper's ``(N, alpha, Lam)``
+    directly as the one-zone geometry; a ``ZoneSet`` needs ``density`` and
+    ``speed`` like the multizone solver. Validated against the simulator's
+    per-class availability telemetry in ``benchmarks/fig_faults.py``.
+    """
+    fc = faults if faults is not None else getattr(p, "faults", None)
+    if zones is None:
+        zones = p.zones
+
+    if fc is None or not fc.enabled:
+        ones = jnp.ones((1,))
+        if zones is not None:
+            base = solve_fixed_point_multizone(
+                p, contact, zones, density=density, speed=speed, t=t,
+                area_side=area_side, iters=iters, tol=tol, strict=strict,
+            )
+            return ClassSolution(
+                a=base.a[None, :], a_serve=base.a, q=ones,
+                q_bar=jnp.asarray(1.0), fracs=ones, b=base.b, S=base.S,
+                T_S=base.T_S, N_z=base.N_z, alpha_z=base.alpha_z,
+                Lam_z=base.Lam_z, r=base.r, d_M=base.d_M, d_I=base.d_I,
+                converged=base.converged,
+                residual=base.residual, base=base,
+            )
+        base = solve_fixed_point(p, contact, iters=iters, tol=tol,
+                                 strict=strict)
+        as1 = jnp.asarray(base.a)[None]
+        return ClassSolution(
+            a=as1[None, :], a_serve=as1, q=ones, q_bar=jnp.asarray(1.0),
+            fracs=ones, b=jnp.asarray(base.b)[None],
+            S=jnp.asarray(base.S)[None], T_S=jnp.asarray(base.T_S)[None],
+            N_z=jnp.asarray([p.N]), alpha_z=jnp.asarray([p.alpha]),
+            Lam_z=jnp.asarray([p.Lam]), r=jnp.asarray(base.r)[None],
+            d_M=jnp.asarray(base.d_M)[None],
+            d_I=jnp.asarray(base.d_I)[None], converged=base.converged,
+            residual=base.residual, base=base,
+        )
+
+    _check_finite_inputs(p, contact)
+    if zones is not None:
+        N_z, alpha_z, Lam_z, R_off, _ = _zone_system(
+            p, zones, density=density, speed=speed, t=t,
+            area_side=area_side,
+        )
+    else:
+        N_z = np.asarray([p.N], np.float64)
+        alpha_z = np.asarray([p.alpha], np.float64)
+        Lam_z = np.asarray([p.Lam], np.float64)
+        R_off = np.zeros((1, 1))
+
+    fracs, q, serves = _class_vectors(fc)
+    q_bar = max(float(np.sum(fracs * q)), _EPS)
+    fail_rate = fc.link_fail_rate if fc.link_fail_rate > 0.0 else None
+    g_eff = contact.g * (1.0 - fc.p_abort)
+
+    C, K = len(fracs), len(N_z)
+    f_j = jnp.asarray(fracs, jnp.float32)
+    q_j = jnp.asarray(q, jnp.float32)
+    sv_j = jnp.asarray(serves, jnp.float32)
+    N_j = jnp.asarray(N_z, jnp.float32)
+    alpha_j = jnp.asarray(alpha_z, jnp.float32)
+    Lam_j = jnp.asarray(Lam_z, jnp.float32)
+    R_off_j = jnp.asarray(R_off, jnp.float32)
+    M, w, lam = float(p.M), p.w, p.lam
+    N_eff = N_j * q_bar
+    alpha_c = alpha_j[None, :] + fc.crash_rate * N_j[None, :]
+
+    def stats(a_serve):
+        S, T_S = jax.vmap(
+            lambda a_z: _transfer_stats_core(
+                a_z, M=M, w=w, t0=p.t0, T_L=p.T_L,
+                t_grid=contact.t_grid, pdf=contact.pdf,
+                weights=contact.weights, fail_rate=fail_rate,
+            )
+        )(a_serve)
+        return jnp.maximum(S, _EPS), jnp.maximum(T_S, _EPS)
+
+    def serve_avail(a):
+        return jnp.einsum("c,ck->k", f_j * q_j * sv_j, a) / q_bar
+
+    def body(_, a):
+        a_serve = jnp.maximum(serve_avail(a), _EPS)       # (K,)
+        S, T_S = stats(a_serve)
+        b = jnp.maximum(
+            _busy_core(T_S, g=g_eff, alpha=alpha_j, N=N_eff), _EPS
+        )
+        G = q_j[:, None] * (b * N_eff * S * w / T_S)[None, :]   # (C, K)
+        lt = lam * Lam_j[None, :] * q_j[:, None] / q_bar
+        inj = jnp.einsum("zy,cy->cz", R_off_j, a)
+        gain = G * a_serve[None, :] + lt
+        a_new = (gain + inj) / (gain + inj + alpha_c)
+        return 0.5 * a + 0.5 * jnp.clip(a_new, _EPS, 1.0)
+
+    a = jax.lax.fori_loop(0, iters, body, jnp.full((C, K), 0.5))
+    residual = jnp.max(jnp.abs(body(0, a) - a))
+    converged = _converged(residual, tol)
+    if strict:
+        _strict_check(converged, residual,
+                      what="solve_fixed_point_classes", iters=iters,
+                      tol=tol)
+    a_serve = jnp.maximum(serve_avail(a), _EPS)
+    S, T_S = stats(a_serve)
+    b = jnp.maximum(_busy_core(T_S, g=g_eff, alpha=alpha_j, N=N_eff), _EPS)
+    r = _merge_rate(a_serve, b, S, M=M, w=w, g=g_eff)
+    d_M, d_I = _delays(r, M=M, w=w, lam=lam, Lam=Lam_j, N=N_eff,
+                       T_T=p.T_T, T_M=p.T_M)
+    return ClassSolution(
+        a=a, a_serve=a_serve, q=q_j, q_bar=jnp.asarray(q_bar), fracs=f_j,
+        b=b, S=S, T_S=T_S, N_z=N_j, alpha_z=alpha_j, Lam_z=Lam_j,
+        r=r, d_M=d_M, d_I=d_I, converged=converged, residual=residual,
     )
 
 
 def solve_fixed_point_batch(
-    ps: list[FGParams], contact: ContactModel, *, iters: int = 200
+    ps: list[FGParams], contact: ContactModel, *, iters: int = 200,
+    tol: float = 1e-6, strict: bool = False,
 ) -> MeanFieldSolution:
     """Solve Lemma 1-3 for a whole scenario grid in one vmapped program.
 
@@ -486,6 +801,9 @@ def solve_fixed_point_batch(
     This is what turns the paper-figure sweeps (``benchmarks/fig2``-``fig4``)
     from a serial per-point loop into one compiled batch.
     """
+    for p in ps:
+        _check_finite_inputs(p)
+    _check_finite_inputs(ps[0], contact)
     p_dyn = {
         k: jnp.asarray(v)
         for k, v in dict(
@@ -497,12 +815,16 @@ def solve_fixed_point_batch(
         ).items()
     }
     a0 = jnp.full((len(ps),), 0.5)
-    a, b, S, T_S = jax.vmap(
+    a, b, S, T_S, residual = jax.vmap(
         lambda a0_i, pd: _fixed_point_iterate(
             a0_i, pd, contact.t_grid, contact.pdf, contact.weights,
             contact.g, iters,
         )
     )(a0, p_dyn)
+    converged = _converged(residual, tol)
+    if strict:
+        _strict_check(converged, residual, what="solve_fixed_point_batch",
+                      iters=iters, tol=tol)
     kw = dict(
         M=p_dyn["M"], w=p_dyn["w"], lam=p_dyn["lam"], Lam=p_dyn["Lam"],
         N=p_dyn["N"], T_T=p_dyn["T_T"], T_M=p_dyn["T_M"],
@@ -511,5 +833,6 @@ def solve_fixed_point_batch(
     d_M, d_I = _delays(r, **kw)
     lhs, rho = _stability(r, alpha=p_dyn["alpha"], **kw)
     return MeanFieldSolution(
-        a=a, b=b, S=S, T_S=T_S, r=r, d_M=d_M, d_I=d_I, stability=lhs, rho=rho
+        a=a, b=b, S=S, T_S=T_S, r=r, d_M=d_M, d_I=d_I, stability=lhs, rho=rho,
+        converged=converged, residual=residual,
     )

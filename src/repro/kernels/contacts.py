@@ -53,6 +53,7 @@ __all__ = [
     "pairwise_contacts_ref",
     "pairwise_close_ref",
     "candidate_best_ref",
+    "apply_access",
     "zone_words",
     "cell_close_words",
     "cell_close_words_ref",
@@ -90,7 +91,28 @@ def zone_words(in_rz: jnp.ndarray) -> jnp.ndarray:
     return pack_mask(member)[..., 0]
 
 
-def pairwise_close_ref(pos, in_rz, r_tx2):
+def apply_access(in_rz, access):
+    """Fold a per-node accessibility mask into the zone membership.
+
+    ``access`` (an ``(N,)`` bool, or ``None`` for the always-on program)
+    rides *alongside* the zone-word mask on every contact path: an
+    inaccessible node is stripped of its zone membership **for contact
+    purposes only** — it passes no zone-sharing gate on the dense ref, the
+    fused Pallas kernel, or either cell-list path, so the four backends
+    stay consistent by construction (pinned in ``tests/test_sim_faults``).
+    Accepts all three membership encodings (``(N,)`` bool, ``(N, K)``
+    bool, ``(N,)`` uint32 zone word); ``access=None`` returns the input
+    unchanged (the fault-free program is untouched)."""
+    if access is None:
+        return in_rz
+    if in_rz.dtype == jnp.uint32:
+        return jnp.where(access, in_rz, jnp.uint32(0))
+    if in_rz.ndim == 1:
+        return in_rz & access
+    return in_rz & access[:, None]
+
+
+def pairwise_close_ref(pos, in_rz, r_tx2, access=None):
     """Shared stage of the pairwise sweep: packed contact matrix + d².
 
     Everything here depends only on positions and zone membership — in a
@@ -115,7 +137,7 @@ def pairwise_close_ref(pos, in_rz, r_tx2):
     """
     from repro.sim.compute import pack_mask, packed_onehot, shared_barrier
 
-    member = _as_member(in_rz)
+    member = _as_member(apply_access(in_rz, access))
     n = pos.shape[0]
     nw = (n + 31) // 32
     dx = pos[:, None, 0] - pos[None, :, 0]
@@ -203,7 +225,7 @@ def candidate_best_ref(d2b3, closew, prevw, elig):
     return jnp.where(has, wstar * 32 + lane, -1), has
 
 
-def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2):
+def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2, access=None):
     """Pure-``jnp`` oracle (and the CPU/GPU execution path).
 
     Composition of the two stages: the shared pairwise sweep
@@ -221,11 +243,13 @@ def pairwise_contacts_ref(pos, in_rz, elig, prevw, r_tx2):
       elig:   (N,) bool pairing eligibility (idle, in RZ).
       prevw:  (N, ceil(N/32)) packed previous-slot contact matrix.
       r_tx2:  squared transmission radius.
+      access: optional (N,) bool accessibility mask alongside the zone
+              mask (:func:`apply_access`); ``None`` = every node on.
 
     Returns ``(closew, best_j, has)`` as described in the module
     docstring.
     """
-    closew, d2b3 = pairwise_close_ref(pos, in_rz, r_tx2)
+    closew, d2b3 = pairwise_close_ref(pos, in_rz, r_tx2, access=access)
     best_j, has = candidate_best_ref(d2b3, closew, prevw, elig)
     return closew, best_j, has
 
@@ -272,8 +296,8 @@ def _kernel(xi_ref, yi_ref, x_ref, y_ref, zwi_ref, zw_ref, eligi_ref,
 @functools.partial(
     jax.jit, static_argnames=("r_tx2", "blk_i", "interpret")
 )
-def pairwise_contacts(pos, in_rz, elig, prevw, r_tx2, *, blk_i: int = 128,
-                      interpret: bool = False):
+def pairwise_contacts(pos, in_rz, elig, prevw, r_tx2, access=None, *,
+                      blk_i: int = 128, interpret: bool = False):
     """Fused Pallas pairwise-contact pass (see module docstring).
 
     ``in_rz`` is either the legacy ``(N,)`` bool membership, a ``(N, K)``
@@ -292,6 +316,10 @@ def pairwise_contacts(pos, in_rz, elig, prevw, r_tx2, *, blk_i: int = 128,
     pad = n_pad - n
 
     zw = in_rz if in_rz.dtype == jnp.uint32 else zone_words(in_rz)
+    # the accessibility mask rides alongside the zone words: an off node's
+    # word is zeroed before the kernel, so the in-kernel intersection gate
+    # needs no change and kernel/oracle stay bitwise comparable
+    zw = apply_access(zw, access)
     x = jnp.pad(pos[:, 0], (0, pad), constant_values=_FAR)[None, :]
     y = jnp.pad(pos[:, 1], (0, pad), constant_values=_FAR)[None, :]
     rz = jnp.pad(zw, (0, pad))[None, :]

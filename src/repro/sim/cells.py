@@ -66,12 +66,23 @@ import jax.numpy as jnp
 
 __all__ = [
     "CellGrid",
+    "NeighborOverflowWarning",
     "contact_backend",
     "make_grid",
     "bin_nodes",
     "neighbor_lists",
     "candidate_best",
 ]
+
+
+class NeighborOverflowWarning(UserWarning):
+    """Cell-list contact detection dropped close pairs this run.
+
+    Raised as a *warning* under ``SimConfig.overflow_mode="warn"`` (the
+    default) and as a ``RuntimeError`` under ``"strict"``; the message
+    carries the running per-slot max of dropped pairs so callers can
+    size ``cap_cell``/``nbr_cap`` up.
+    """
 
 #: ``contact_backend="auto"`` switches to cells at this node count (the
 #: dense path stays bitwise-pinned for every paper-scale config below it).
@@ -222,7 +233,7 @@ def _compact_sorted(cand: jnp.ndarray, closebit: jnp.ndarray, nbr_cap: int):
     return nbr, dropped
 
 
-def neighbor_lists(pos, zonew, grid: CellGrid, r_tx2, *,
+def neighbor_lists(pos, zonew, grid: CellGrid, r_tx2, access=None, *,
                    use_kernel: bool | None = None, interpret: bool = False):
     """Per-node close-neighbor lists via the cell grid: ``(nbr, overflow)``.
 
@@ -242,9 +253,17 @@ def neighbor_lists(pos, zonew, grid: CellGrid, r_tx2, *,
     is for tests); both paths produce identical lists — under
     cell-buffer overflow too, because dropped nodes sit out contact
     detection entirely on either path (see :func:`bin_nodes`).
-    """
-    from repro.kernels.contacts import cell_neighborhood_offsets
 
+    ``access`` (optional ``(N,)`` bool accessibility mask from the fault
+    layer) is folded into ``zonew`` at entry, so both the jnp path and
+    the cell kernel (which reads ``zonew`` through ``zc``) gate off
+    nodes identically; ``None`` leaves the program untouched.
+    """
+    from repro.kernels.contacts import apply_access, cell_neighborhood_offsets
+
+    # fold accessibility into the zone word: off nodes share no zone for
+    # contact purposes (None leaves the program untouched)
+    zonew = apply_access(zonew, access)
     n = pos.shape[0]
     cellbuf, pcid, binned, bin_overflow = bin_nodes(pos, grid)
     offs = jnp.asarray(cell_neighborhood_offsets(grid.ncy), jnp.int32)

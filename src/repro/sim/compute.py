@@ -239,6 +239,7 @@ def pick_next_jobs(
     tq_slot: jnp.ndarray,       # (N, QT)
     T_M,
     T_T,
+    can_serve=None,             # (N,) bool: node may start a job this slot
 ):
     """Assign idle servers their next job: merge queue first (non-preemptive
     priority), then training. Returns the updated server fields and queues.
@@ -246,7 +247,12 @@ def pick_next_jobs(
     The merge payload stays bit-packed end to end: the queue word rows move
     into ``serv_mask`` verbatim (no unpack on the hot path). Head-of-queue
     extraction is a dense one-hot sum, not a gather — XLA lowers (batched)
-    gathers to scalar loops on CPU, which dominated the step profile."""
+    gathers to scalar loops on CPU, which dominated the step profile.
+
+    ``can_serve`` (fault layer: node is on/accessible) gates *starting* a
+    job only — queued work waits; ongoing service is frozen separately via
+    the per-node ``dt`` of :func:`advance_timers`. ``None`` (default)
+    leaves the program untouched."""
     qm = mq_model.shape[1]
     qt = tq_model.shape[1]
 
@@ -266,6 +272,8 @@ def pick_next_jobs(
     m_avail = jnp.any(mq_model >= 0, axis=-1)
     m_first = first_true(mq_model >= 0)
     take_m = (serving < 0) & m_avail
+    if can_serve is not None:
+        take_m = take_m & can_serve
     sel_m = (jnp.arange(qm)[None, :] == m_first[:, None]) & take_m[:, None]
     serv_model = jnp.where(take_m, row_sel(mq_model, sel_m), serv_model)
     serv_mask = jnp.where(take_m[:, None], row_sel(mq_mask, sel_m), serv_mask)
@@ -276,6 +284,8 @@ def pick_next_jobs(
     t_avail = jnp.any(tq_model >= 0, axis=-1)
     t_first = first_true(tq_model >= 0)
     take_t = (serving < 0) & t_avail
+    if can_serve is not None:
+        take_t = take_t & can_serve
     sel_t = (jnp.arange(qt)[None, :] == t_first[:, None]) & take_t[:, None]
     serv_model = jnp.where(take_t, row_sel(tq_model, sel_t), serv_model)
     serv_slot = jnp.where(take_t, row_sel(tq_slot, sel_t), serv_slot)

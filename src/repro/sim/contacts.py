@@ -29,7 +29,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.contacts import candidate_best_ref, pairwise_close_ref
+from repro.kernels.contacts import (apply_access, candidate_best_ref,
+                                    pairwise_close_ref)
 
 __all__ = [
     "mutualize",
@@ -90,7 +91,7 @@ def close_matrix(pos: jnp.ndarray, in_rz: jnp.ndarray, r_tx) -> jnp.ndarray:
     return close & ~jnp.eye(n, dtype=bool), d2
 
 
-def pair_still_close(pos, zonew, partner, r_tx2):
+def pair_still_close(pos, zonew, partner, r_tx2, access=None):
     """O(N) row of the contact matrix at ``(i, partner[i])``.
 
     ``zonew`` is the ``(N,)`` uint32 zone-membership word
@@ -98,7 +99,11 @@ def pair_still_close(pos, zonew, partner, r_tx2):
     within radius *and* still sharing a zone. Bitwise the same value as
     ``close[i, partner[i]]`` of the dense matrix (same subtraction
     order), without materializing it; only meaningful where
-    ``partner >= 0``."""
+    ``partner >= 0``. ``access`` is the optional per-node accessibility
+    mask of the fault layer (``repro.kernels.contacts.apply_access``) —
+    a duty-cycled node that switched off breaks its pair exactly like
+    leaving radio range."""
+    zonew = apply_access(zonew, access)
     n = pos.shape[0]
     pidx = jnp.clip(partner, 0, n - 1)
     dx = pos[:, 0] - pos[pidx, 0]
@@ -108,7 +113,7 @@ def pair_still_close(pos, zonew, partner, r_tx2):
         & (jnp.arange(n) != pidx)
 
 
-def pairwise_close(pos, member, r_tx2):
+def pairwise_close(pos, member, r_tx2, access=None):
     """Shared stage of the per-slot pairwise sweep: ``(closew, d2ctx)``.
 
     ``member`` is the ``(N,)`` bool single-RZ membership or the
@@ -122,8 +127,8 @@ def pairwise_close(pos, member, r_tx2):
     inputs and :func:`match_candidates` invokes the fused kernel.
     """
     if jax.default_backend() == "tpu":
-        return None, (pos, member, r_tx2)
-    closew, d2b3 = pairwise_close_ref(pos, member, r_tx2)
+        return None, (pos, apply_access(member, access), r_tx2)
+    closew, d2b3 = pairwise_close_ref(pos, member, r_tx2, access=access)
     return closew, (closew, d2b3)
 
 

@@ -19,6 +19,7 @@ legacy Python-over-``M`` enqueue loops are scatter ops in
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Sequence
 
@@ -28,7 +29,7 @@ import numpy as np
 
 from repro.core.meanfield import FGParams
 from repro.core.zones import ZoneSet, single_zone
-from repro.sim import cells, compute, contacts, observations
+from repro.sim import cells, compute, contacts, faults, observations
 from repro.sim.mobility import get_mobility
 from repro.sim.state import init_sim_state
 
@@ -39,6 +40,7 @@ __all__ = [
     "ZoneSet",
     "effective_zones",
     "zone_churn",
+    "check_overflow",
     "simulate",
     "simulate_batch",
     "dynamic_params",
@@ -90,6 +92,13 @@ class SimConfig:
                                          # validated below); None = every
                                          # node moves at cfg.speed
                                          # (bitwise the legacy engine)
+    faults: Any = None                   # repro.sim.faults.FaultConfig;
+                                         # None or a disabled config traces
+                                         # exactly the fault-free program
+    overflow_mode: str = "warn"          # cells backend nbr_overflow > 0:
+                                         # "warn" emits a structured
+                                         # NeighborOverflowWarning post-run,
+                                         # "strict" raises instead
 
     def __post_init__(self):
         if self.speed_range is not None and self.mobility != "rdm":
@@ -97,6 +106,11 @@ class SimConfig:
                 "speed_range is implemented for the 'rdm' mobility model "
                 f"only (got mobility={self.mobility!r}); the other models "
                 "would silently run at the constant cfg.speed"
+            )
+        if self.overflow_mode not in ("warn", "strict"):
+            raise ValueError(
+                f"unknown overflow_mode {self.overflow_mode!r}; known: "
+                "'warn', 'strict'"
             )
 
 
@@ -128,6 +142,13 @@ class SimOutputs:
     # cells contact backend only: running max of close pairs dropped per
     # slot by the bounded neighbor lists (0 = contact detection exact)
     nbr_overflow: np.ndarray | None = None     # (S,)
+    # fault-injection telemetry (enabled FaultConfig only; C = n_classes)
+    availability_c: np.ndarray | None = None   # (S, M, C) per-class in-RZ
+                                               # model availability
+    on_frac_c: np.ndarray | None = None        # (S, C) accessible fraction
+    n_in_rz_c: np.ndarray | None = None        # (S, C)
+    fault_events: np.ndarray | None = None     # (S, 3) cumulative
+                                               # abort/link-fail/crash
 
 
 @dataclasses.dataclass
@@ -152,9 +173,14 @@ class BatchSimOutputs:
     stored_info_z: np.ndarray | None = None    # (P, R, S, K_zones)
     n_in_rz_z: np.ndarray | None = None        # (P, R, S, K_zones)
     nbr_overflow: np.ndarray | None = None     # (P, R, S) cells backend only
+    availability_c: np.ndarray | None = None   # (P, R, S, M, C)
+    on_frac_c: np.ndarray | None = None        # (P, R, S, C)
+    n_in_rz_c: np.ndarray | None = None        # (P, R, S, C)
+    fault_events: np.ndarray | None = None     # (P, R, S, 3)
     plan: Any = None             # SweepPlan of the producing sweep
     devices_used: int | None = None
     host_bytes: int | None = None
+    failed_chunks: tuple = ()    # sweep chunks whose dispatch failed twice
 
     @property
     def n_scenarios(self) -> int:
@@ -181,6 +207,10 @@ class BatchSimOutputs:
             stored_info_z=_z(self.stored_info_z),
             n_in_rz_z=_z(self.n_in_rz_z),
             nbr_overflow=_z(self.nbr_overflow),
+            availability_c=_z(self.availability_c),
+            on_frac_c=_z(self.on_frac_c),
+            n_in_rz_c=_z(self.n_in_rz_c),
+            fault_events=_z(self.fault_events),
         )
 
 
@@ -199,15 +229,13 @@ def zone_churn(zone_prev, zonew, *, inc, has_model, tq_model, mq_model,
 
     Returns ``(left, dict-of-updated-fields)``; tested (property tests
     over random membership trajectories) in ``tests/test_sim_zones.py``.
+    The actual drop is :func:`repro.sim.faults.drop_state` — the single
+    state-drop path zone churn shares with crash-restart churn.
     """
     left = (zone_prev != 0) & (zonew == 0)
-    return left, dict(
-        inc=jnp.where(left[:, None, None], jnp.uint32(0), inc),
-        has_model=jnp.where(left[:, None], False, has_model),
-        tq_model=jnp.where(left[:, None], -1, tq_model),
-        mq_model=jnp.where(left[:, None], -1, mq_model),
-        serving=jnp.where(left, -1, serving),
-        serv_left=jnp.where(left, 0.0, serv_left),
+    return left, faults.drop_state(
+        left, inc=inc, has_model=has_model, tq_model=tq_model,
+        mq_model=mq_model, serving=serving, serv_left=serv_left,
     )
 
 
@@ -279,6 +307,33 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
     zradii = jnp.asarray(zs.radii, jnp.float32)          # (K,)
     zdrift = jnp.asarray(zs.drift, jnp.float32) if zs.moving else None
 
+    # ---- fault-injection constants (static gate: a None or disabled
+    # FaultConfig keeps every branch below dead and the traced program —
+    # including the PRNG split sequence — bitwise the fault-free one) ----
+    fc = cfg.faults if (cfg.faults is not None and cfg.faults.enabled) else None
+    faults_on = fc is not None
+    if faults_on:
+        n = cfg.n_nodes
+        ids = faults.node_classes(fc, n)                 # (N,) static
+        cls1h = jnp.asarray(faults.class_onehot(fc, n))  # (N, C)
+        n_per_class = jnp.asarray(
+            faults.class_onehot(fc, n).sum(axis=0), jnp.float32
+        )
+        # per-slot transition/event probabilities (compile-time constants)
+        p_off = jnp.asarray(
+            np.asarray([1.0 - np.exp(-c.rate_off * dt) for c in fc.classes],
+                       np.float32)[ids]
+        )
+        p_on = jnp.asarray(
+            np.asarray([1.0 - np.exp(-c.rate_on * dt) for c in fc.classes],
+                       np.float32)[ids]
+        )
+        p_crash = float(1.0 - np.exp(-fc.crash_rate * dt))
+        p_link = float(1.0 - np.exp(-fc.link_fail_rate * dt))
+        is_fr = jnp.asarray(
+            np.asarray([c.free_rider for c in fc.classes], bool)[ids]
+        )
+
     def zone_member(pos, t_now):
         """(N, K) bool per-zone membership at time ``t_now``.
 
@@ -306,6 +361,18 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         t_now = slot_idx.astype(jnp.float32) * dt
         key, k_mob1, k_mob2, k_obs, k_who = jax.random.split(key, 5)
 
+        # ---- fault layer: duty-cycle chain first, its keys drawn from an
+        # *additional* split so the base split sequence above — and with it
+        # every fault-free draw — stays bitwise untouched ----
+        if faults_on:
+            key, k_duty, k_crash, k_link, k_abort = jax.random.split(key, 5)
+            availw, on = faults.duty_step(
+                k_duty, state.availw, p_off, p_on, cfg.n_nodes
+            )
+            access = on
+        else:
+            access = None
+
         # ---- mobility & zone membership ----
         mob = model.step(k_mob1, k_mob2, state.mob, cfg)
         member = zone_member(mob.pos, t_now)             # (N, K)
@@ -323,6 +390,18 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         tq_model, mq_model = churned["tq_model"], churned["mq_model"]
         serving, serv_left = churned["serving"], churned["serv_left"]
 
+        # ---- crash-restart churn: drop packed protocol state through the
+        # same path zone churn uses; the node itself stays (and stays on) --
+        if faults_on:
+            crashed = jax.random.uniform(k_crash, (cfg.n_nodes,)) < p_crash
+            dropped = faults.drop_state(
+                crashed, inc=inc, has_model=has_model, tq_model=tq_model,
+                mq_model=mq_model, serving=serving, serv_left=serv_left,
+            )
+            inc, has_model = dropped["inc"], dropped["has_model"]
+            tq_model, mq_model = dropped["tq_model"], dropped["mq_model"]
+            serving, serv_left = dropped["serving"], dropped["serv_left"]
+
         # ---- contact dynamics ----
         # Dense backend: the O(N²) pairwise sweep in two stages — the
         # shared part (positions/RZ only — computed once per *seed* in
@@ -336,23 +415,33 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         # and zones) replace the matrix; the partner-proximity bit is
         # the O(N) pair recompute, bitwise the same criterion.
         if use_cells:
-            nbr, ovf = cells.neighbor_lists(mob.pos, zonew, grid, r_tx2)
+            # access is seed-only state (its key chain never touches the
+            # scenario-dependent p_dyn), so the neighbor stage stays a
+            # shared per-seed stage under the barrier
+            nbr, ovf = cells.neighbor_lists(
+                mob.pos, zonew, grid, r_tx2, access
+            )
             nbr = compute.shared_barrier(nbr)
             still_close = contacts.pair_still_close(
-                mob.pos, zonew, state.partner, r_tx2
+                mob.pos, zonew, state.partner, r_tx2, access
             )
         else:
             closew_shared, d2ctx = contacts.pairwise_close(
-                mob.pos, member, r_tx2
+                mob.pos, member, r_tx2, access
             )
             if closew_shared is None:
                 still_close = contacts.pair_still_close(
-                    mob.pos, zonew, state.partner, r_tx2
+                    mob.pos, zonew, state.partner, r_tx2, access
                 )
             else:
                 still_close = contacts.partner_close_bit(
                     closew_shared, state.partner
                 )
+        # mid-transfer link failure breaks the exchange exactly like
+        # moving out of range (completed transfers are still delivered)
+        if faults_on:
+            lfail = faults.link_fail(k_link, p_link, state.partner)
+            still_close = still_close & ~lfail
         elapsed, done, broke, ending, eff_time, pidx = contacts.advance_exchanges(
             partner=state.partner, exch_elapsed=state.exch_elapsed,
             exch_total=state.exch_total, still_close=still_close, dt=dt,
@@ -362,6 +451,9 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             snap=state.snap, pidx=pidx, eff_time=eff_time, ending=ending,
             t0=t0, T_L=T_L,
         )
+        if faults_on:
+            # free-riders receive but never serve
+            delivered = faults.gate_deliveries(delivered, pidx, is_fr)
 
         # enqueue merge jobs for delivered instances that add information
         # (merge only when the received training set is not a subset of the
@@ -376,6 +468,10 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         # ---- release ending pairs, form new connections ----
         partner = jnp.where(ending, -1, state.partner)
         elig = (partner < 0) & in_rz
+        if faults_on:
+            # redundant with the access-folded close sets, but keeps the
+            # eligibility invariant explicit on every matching path
+            elig = elig & on
         if use_cells:
             best, has = cells.candidate_best(
                 mob.pos, nbr, state.prev_close, elig
@@ -386,6 +482,9 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             closew, match = contacts.match_candidates(
                 d2ctx, state.prev_close, elig
             )
+        if faults_on:
+            # per-contact connection-setup abort (symmetric coin)
+            match, aborted = faults.abort_matches(k_abort, fc.p_abort, match)
         conn = contacts.form_connections(
             partner=partner, match=match, has_model=has_model, inc=inc,
             snap=state.snap, snap_has=state.snap_has,
@@ -397,7 +496,8 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         obs_birth, obs_head, inc, want_train, slot_payload = (
             observations.generate_observations(
                 k_obs=k_obs, k_who=k_who, obs_birth=state.obs_birth,
-                obs_head=state.obs_head, inc=inc, in_rz=in_rz,
+                obs_head=state.obs_head, inc=inc,
+                in_rz=(in_rz & on) if faults_on else in_rz,
                 lam=lam, Lam=Lam, dt=dt, t_now=t_now,
             )
         )
@@ -406,8 +506,11 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         )
 
         # ---- compute server: finish jobs, then pick next (merge priority) --
+        # an off node's compute is dormant: its service timer freezes
+        # (per-node dt = 0) and it starts no new job (can_serve below)
         serv_left, fin_merge, fin_train = compute.advance_timers(
-            serving, serv_left, dt
+            serving, serv_left,
+            jnp.where(on, dt, 0.0) if faults_on else dt,
         )
         inc, has_model = observations.apply_completions(
             fin_merge=fin_merge, fin_train=fin_train,
@@ -421,15 +524,25 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             serv_model=state.serv_model, serv_mask=state.serv_mask,
             serv_slot=state.serv_slot, mq_model=mq_model, mq_mask=mq_mask,
             tq_model=tq_model, tq_slot=tq_slot, T_M=T_M, T_T=T_T,
+            can_serve=on if faults_on else None,
         )
 
+        fault_kw = {}
+        if faults_on:
+            events = jnp.stack([
+                jnp.sum(aborted),
+                jnp.sum((state.partner >= 0) & lfail),
+                jnp.sum(crashed),
+            ]).astype(jnp.int32)
+            fault_kw = dict(availw=availw,
+                            fault_events=state.fault_events + events)
         new_state = state.replace(
             mob=mob, prev_close=closew, inc=inc, has_model=has_model,
             obs_birth=obs_birth, obs_head=obs_head, tq_slot=tq_slot,
             mq_mask=mq_mask, zone_prev=zonew,
             nbr_overflow=(jnp.maximum(state.nbr_overflow, ovf)
                           if use_cells else state.nbr_overflow),
-            **conn, **served,
+            **conn, **served, **fault_kw,
         )
         return (new_state, key), None
 
@@ -449,6 +562,15 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         )
         if use_cells:
             out["nbr_overflow"] = state.nbr_overflow
+        if faults_on:
+            out.update(faults.fault_outputs(
+                on=compute.unpack_mask(
+                    state.availw[None, :], cfg.n_nodes
+                )[0],
+                in_rz=state.zone_prev != 0, has_model=state.has_model,
+                cls1h=cls1h, n_per_class=n_per_class,
+                fault_events=state.fault_events,
+            ))
         return (state, key), out
 
     mob0, key = model.init(key, cfg)
@@ -498,6 +620,30 @@ def scan_carry_bytes(cfg: SimConfig, M: int) -> int:
     )
 
 
+def check_overflow(cfg: SimConfig, max_ovf, *, context: str = "run") -> int:
+    """Post-run graceful-degradation check of the cells-backend
+    ``nbr_overflow`` diagnostic.
+
+    ``max_ovf`` is any array (or None) of per-sample running overflow
+    maxima. A positive value means contact detection silently dropped
+    close pairs; under ``cfg.overflow_mode == "warn"`` this emits a
+    structured :class:`repro.sim.cells.NeighborOverflowWarning`, under
+    ``"strict"`` it raises. Returns the max as an int (0 when clean)."""
+    if max_ovf is None:
+        return 0
+    mo = int(np.max(np.asarray(max_ovf))) if np.size(max_ovf) else 0
+    if mo > 0:
+        msg = (
+            f"cell-list contact detection dropped close pairs ({context}: "
+            f"running per-slot max {mo}); results undercount contacts — "
+            "raise SimConfig.cell_cap / nbr_cap"
+        )
+        if cfg.overflow_mode == "strict":
+            raise RuntimeError(msg)
+        warnings.warn(msg, cells.NeighborOverflowWarning, stacklevel=2)
+    return mo
+
+
 def _sample_times(cfg: SimConfig) -> np.ndarray:
     # the engine emits one sample per sample_every slots, at slot indices
     # s-1, 2s-1, ... (the legacy [s-1::s] subsampling)
@@ -509,6 +655,12 @@ def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
     """Run the simulator for the FG system ``p`` (uses M, Λ, T_T, T_M, ...)."""
     M = _check_params([p])
     outs = _run_single(jax.random.PRNGKey(seed), dynamic_params(p), cfg, M)
+    if "nbr_overflow" in outs:
+        check_overflow(cfg, outs["nbr_overflow"], context="simulate")
+
+    def _opt(k):
+        return np.asarray(outs[k]) if k in outs else None
+
     return SimOutputs(
         t=_sample_times(cfg),
         availability=np.asarray(outs["availability"]),
@@ -521,8 +673,11 @@ def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
         availability_z=np.asarray(outs["availability_z"]),
         stored_info_z=np.asarray(outs["stored_z"]),
         n_in_rz_z=np.asarray(outs["n_in_rz_z"]),
-        nbr_overflow=(np.asarray(outs["nbr_overflow"])
-                      if "nbr_overflow" in outs else None),
+        nbr_overflow=_opt("nbr_overflow"),
+        availability_c=_opt("availability_c"),
+        on_frac_c=_opt("on_frac_c"),
+        n_in_rz_c=_opt("n_in_rz_c"),
+        fault_events=_opt("fault_events"),
     )
 
 

@@ -91,6 +91,13 @@ class SimState:
     nbr_overflow: jnp.ndarray    # () int32 running max of close pairs the
                                  # cells backend dropped per slot (always 0
                                  # on the dense backend)
+    # --- fault-injection carry (None unless cfg.faults is enabled, so the
+    # fault-free scan carry — and program — is unchanged; see
+    # repro.sim.faults) ---
+    availw: Any = None           # (ceil(N/32),) uint32 packed per-node
+                                 # on/off accessibility word
+    fault_events: Any = None     # (3,) int32 cumulative abort / link-fail
+                                 # / crash node-event counters
 
     def replace(self, **kw) -> "SimState":
         return dataclasses.replace(self, **kw)
@@ -145,4 +152,20 @@ def init_sim_state(mob_state, zone0: jnp.ndarray, *, M: int, cfg) -> SimState:
         serv_slot=jnp.zeros((n,), dtype=jnp.int32),
         zone_prev=zone0,
         nbr_overflow=jnp.zeros((), dtype=jnp.int32),
+        **_fault_fields(cfg, n),
+    )
+
+
+def _fault_fields(cfg, n: int) -> dict:
+    """Initial fault carry: empty (``None`` leaves — absent from the
+    pytree) unless ``cfg.faults`` is an *enabled*
+    ``repro.sim.faults.FaultConfig``."""
+    fc = getattr(cfg, "faults", None)
+    if fc is None or not fc.enabled:
+        return {}
+    from repro.sim import faults
+
+    return dict(
+        availw=faults.init_avail(n),
+        fault_events=jnp.zeros((faults.N_EVENTS,), dtype=jnp.int32),
     )

@@ -50,6 +50,8 @@ unsharded nested-vmap reference, chunked or not, sharded or not.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import os
 import warnings
 from functools import lru_cache
 from typing import Sequence
@@ -83,6 +85,12 @@ REDUCERS = ("trace", "mean", "final", "quantiles", "o_tau")
 #: zone axis.
 _LIGHT_KEYS = ("availability", "busy_frac", "stored", "model_holders",
                "n_in_rz", "availability_z", "stored_z", "n_in_rz_z")
+
+#: Fault-layer degradation telemetry (present only when ``cfg.faults`` is
+#: an enabled FaultConfig; trailing class axis C). Reduced like the light
+#: keys; the cumulative ``fault_events`` counter rides every reduction as
+#: its final sample, like ``nbr_overflow``.
+_FAULT_KEYS = ("availability_c", "on_frac_c", "n_in_rz_c")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,10 +198,13 @@ class SweepSummary:
     devices_used: int
     host_bytes: int
     quantiles: tuple[float, ...] | None = None
+    failed_chunks: tuple[int, ...] = ()   # chunk indices whose dispatch
+                                          # failed twice (NaN/zero-filled)
 
 
 def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
     """Per-run on-device reduction over the sample axis (axis 2)."""
+    keys = _LIGHT_KEYS + tuple(k for k in _FAULT_KEYS if k in outs)
     if reduce == "o_tau":
         from repro.sim.observations import o_tau_histograms
 
@@ -207,14 +218,17 @@ def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
             n_tau=n_tau, dtau=dtau,
         )
         red = {"o_tau_num": num, "o_tau_den": den}
+        # the fault telemetry rides the o_tau reduction as final samples
+        for k in keys[len(_LIGHT_KEYS):]:
+            red[k] = outs[k][:, :, -1]
     elif reduce == "mean":
         red = {}
-        for k in _LIGHT_KEYS:
+        for k in keys:
             v = outs[k][:, :, s0:]
             red[k] = jnp.mean(v, axis=2)
             red[k + "_std"] = jnp.std(v, axis=2)
     elif reduce == "final":
-        red = {k: outs[k][:, :, -1] for k in _LIGHT_KEYS}
+        red = {k: outs[k][:, :, -1] for k in keys}
     elif reduce == "quantiles":
         q = jnp.asarray(qs, jnp.float32)
         # quantile levels land on the TRAILING axis for every quantity,
@@ -223,7 +237,7 @@ def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
             k: jnp.moveaxis(
                 jnp.quantile(outs[k][:, :, s0:], q, axis=2), 0, -1
             )
-            for k in _LIGHT_KEYS
+            for k in keys
         }
     else:
         raise ValueError(f"unknown reduce mode {reduce!r}; known: {REDUCERS}")
@@ -231,6 +245,9 @@ def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
         # cells contact backend: the running overflow max — its final
         # sample is the whole-run diagnostic — rides every reduction
         red["nbr_overflow"] = outs["nbr_overflow"][:, :, -1]
+    if "fault_events" in outs:
+        # cumulative abort/link-fail/crash counters: final sample = run
+        red["fault_events"] = outs["fault_events"][:, :, -1]
     return red
 
 
@@ -280,6 +297,73 @@ def _pad_rows(arr: jnp.ndarray, to: int) -> jnp.ndarray:
     return jnp.concatenate([arr, jnp.repeat(arr[-1:], pad, axis=0)])
 
 
+def _sweep_fingerprint(cfg, M, plan, reduce, s0, qs, tau, seeds,
+                       p_stack) -> str:
+    """Content hash of everything that determines a sweep's results.
+
+    A checkpoint chunk is only reusable when the whole (config, grid,
+    plan, reduction, seeds, parameter stack) quintuple matches — the hash
+    covers the static reprs plus the exact parameter bytes."""
+    h = hashlib.sha256()
+    h.update(repr(
+        (cfg, M, plan, reduce, s0, qs, tau, tuple(int(s) for s in seeds))
+    ).encode())
+    for k in sorted(p_stack):
+        h.update(k.encode())
+        h.update(np.asarray(p_stack[k]).tobytes())
+    return h.hexdigest()
+
+
+def _fp_array(fp: str) -> np.ndarray:
+    return np.frombuffer(bytes.fromhex(fp), dtype=np.uint8)
+
+
+def _load_chunks(directory: str, fp: str, n_chunks: int) -> dict[int, dict]:
+    """Completed chunk reductions from ``directory`` whose fingerprint
+    matches ``fp`` (mismatched or unreadable files are skipped with a
+    warning, so a stale dir degrades to recomputation, never bad data)."""
+    from repro.checkpoint.ckpt import restore_checkpoint
+
+    done: dict[int, dict] = {}
+    if not os.path.isdir(directory):
+        return done
+    for name in sorted(os.listdir(directory)):
+        if not (name.startswith("step_") and name.endswith(".npz")):
+            continue
+        path = os.path.join(directory, name)
+        try:
+            like = {k: 0 for k in np.load(path).files}
+            tree, step = restore_checkpoint(path, like)
+        except Exception as e:
+            warnings.warn(f"skipping unreadable sweep checkpoint {path}: {e}")
+            continue
+        saved_fp = tree.pop("fingerprint", None)
+        if (saved_fp is None
+                or not np.array_equal(saved_fp, _fp_array(fp))
+                or not 0 <= step < n_chunks):
+            warnings.warn(
+                f"skipping sweep checkpoint {path}: fingerprint/plan "
+                "mismatch (different sweep)"
+            )
+            continue
+        done[step] = tree
+    return done
+
+
+def _failed_chunk_like(worker, keys, p_chunk) -> dict:
+    """Host-side stand-in for a chunk whose dispatch failed twice:
+    NaN-filled floats / zero-filled ints at the worker's exact output
+    shapes (via ``eval_shape`` — nothing runs)."""
+    shapes = jax.eval_shape(worker, keys, p_chunk)
+
+    def fill(s):
+        if np.issubdtype(s.dtype, np.floating):
+            return np.full(s.shape, np.nan, s.dtype)
+        return np.zeros(s.shape, s.dtype)
+
+    return {k: fill(s) for k, s in shapes.items()}
+
+
 def run(
     ps: Sequence[FGParams] | FGParams,
     cfg: SimConfig,
@@ -291,6 +375,8 @@ def run(
     quantiles: Sequence[float] = (0.1, 0.5, 0.9),
     tau_grid=None,
     n_devices: int | None = None,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
 ):
     """Execute a (scenarios x seeds) sweep on the planned device mesh.
 
@@ -321,6 +407,20 @@ def run(
                   ``reduce="o_tau"`` (its length and spacing define the
                   histogram bins, exactly like ``estimate_o_of_tau``).
       n_devices:  mesh size override (defaults to all visible devices).
+      checkpoint_dir: when set, every completed chunk's host-side result
+                  is saved there (``repro.checkpoint.ckpt``) together
+                  with a fingerprint of the (config, grid, plan,
+                  reduction, seeds) quintuple, and chunk dispatch gains a
+                  retry-once-then-record-failure path (a chunk that fails
+                  twice is NaN/zero-filled and listed in
+                  ``failed_chunks``). Checkpointed execution materializes
+                  each chunk synchronously (no double buffering) so a
+                  saved chunk is always durable.
+      resume:     with ``checkpoint_dir``, skip chunks whose saved
+                  fingerprint matches this sweep — a killed-and-resumed
+                  sweep reproduces the uninterrupted run's results
+                  bitwise. Mismatched checkpoints are ignored (warned),
+                  never reused.
 
     Returns:
       ``BatchSimOutputs`` for ``reduce="trace"`` — with the extra
@@ -367,10 +467,10 @@ def run(
                            tuple(sorted(p_stack)))
 
     cp = plan.chunk_scenarios
-    host_chunks: list[dict] = []
-    pending = None
-    devices_used = 0
-    for c in range(plan.n_chunks):
+
+    def dispatch(c):
+        # the chunk slice is rebuilt per attempt: donation may have
+        # invalidated a previous attempt's buffers
         p_chunk = {k: v[c * cp:(c + 1) * cp] for k, v in p_stack.items()}
         with warnings.catch_warnings():
             # CPU cannot always alias donated input pages into outputs;
@@ -378,16 +478,68 @@ def run(
             warnings.filterwarnings(
                 "ignore", message="Some donated buffers were not usable"
             )
-            out = worker(keys, p_chunk)
+            return worker(keys, p_chunk)
+
+    devices_used = 0
+    failed: list[int] = []
+
+    def note_devices(out):
+        nonlocal devices_used
         devices_used = max(
             devices_used,
             len(jax.tree_util.tree_leaves(out)[0].sharding.device_set),
         )
-        if pending is not None:
-            # double buffer: materialize chunk c-1 while chunk c runs
-            host_chunks.append(jax.tree_util.tree_map(np.asarray, pending))
-        pending = out
-    host_chunks.append(jax.tree_util.tree_map(np.asarray, pending))
+
+    if checkpoint_dir is None:
+        host_chunks: list[dict] = []
+        pending = None
+        for c in range(plan.n_chunks):
+            out = dispatch(c)
+            note_devices(out)
+            if pending is not None:
+                # double buffer: materialize chunk c-1 while chunk c runs
+                host_chunks.append(
+                    jax.tree_util.tree_map(np.asarray, pending)
+                )
+            pending = out
+        host_chunks.append(jax.tree_util.tree_map(np.asarray, pending))
+    else:
+        from repro.checkpoint.ckpt import save_checkpoint
+
+        fp = _sweep_fingerprint(cfg, M, plan, reduce, key_s0, key_qs,
+                                key_tau, seeds, p_stack)
+        done = (_load_chunks(checkpoint_dir, fp, plan.n_chunks)
+                if resume else {})
+        by_idx: dict[int, dict] = {}
+        for c in range(plan.n_chunks):
+            if c in done:
+                by_idx[c] = done[c]
+                continue
+            hc = None
+            for attempt in (0, 1):
+                # retry once; only Exception is retried — a kill signal
+                # (KeyboardInterrupt/SystemExit) propagates, which is the
+                # preemption this path checkpoints against
+                try:
+                    out = dispatch(c)
+                    hc = jax.tree_util.tree_map(np.asarray, out)
+                    note_devices(out)
+                    break
+                except Exception as e:
+                    warnings.warn(
+                        f"sweep chunk {c} dispatch failed "
+                        f"(attempt {attempt + 1}/2): {e!r}"
+                    )
+            if hc is None:
+                failed.append(c)
+                p_chunk = {k: v[c * cp:(c + 1) * cp]
+                           for k, v in p_stack.items()}
+                by_idx[c] = _failed_chunk_like(worker, keys, p_chunk)
+                continue
+            save_checkpoint(checkpoint_dir, c,
+                            dict(hc, fingerprint=_fp_array(fp)))
+            by_idx[c] = hc
+        host_chunks = [by_idx[c] for c in range(plan.n_chunks)]
 
     P, R = plan.n_scenarios, plan.n_seeds
     # what actually crossed the device/host boundary: the materialized
@@ -400,6 +552,16 @@ def run(
         for k in host_chunks[0]
     }
     t = _sample_times(cfg)
+
+    if failed:
+        warnings.warn(
+            f"{len(failed)} sweep chunk(s) failed after retry and were "
+            f"NaN/zero-filled: {failed}"
+        )
+    if "nbr_overflow" in outs:
+        from repro.sim.engine import check_overflow
+
+        check_overflow(cfg, outs["nbr_overflow"], context="sweep")
 
     if reduce == "trace":
         return BatchSimOutputs(
@@ -415,7 +577,12 @@ def run(
             stored_info_z=outs["stored_z"],
             n_in_rz_z=outs["n_in_rz_z"],
             nbr_overflow=outs.get("nbr_overflow"),
+            availability_c=outs.get("availability_c"),
+            on_frac_c=outs.get("on_frac_c"),
+            n_in_rz_c=outs.get("n_in_rz_c"),
+            fault_events=outs.get("fault_events"),
             plan=plan, devices_used=devices_used, host_bytes=host_bytes,
+            failed_chunks=tuple(failed),
         )
     if reduce == "o_tau":
         # the ratio is host-side arithmetic on the shipped histograms
@@ -425,4 +592,5 @@ def run(
         reduce=reduce, t=t, warmup_samples=s0, stats=outs, plan=plan,
         devices_used=devices_used, host_bytes=host_bytes,
         quantiles=tuple(quantiles) if reduce == "quantiles" else None,
+        failed_chunks=tuple(failed),
     )

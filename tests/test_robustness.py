@@ -1,0 +1,178 @@
+"""Degradation behavior of the analytics and the cell-list engine.
+
+Three guarantees landed with the fault-injection PR:
+
+1. every mean-field / DDE solver carries ``converged``/``residual``
+   diagnostics, rejects non-finite inputs *up front* (``ValueError``
+   naming the offending field — a NaN must never silently poison a
+   fixed point), and raises ``RuntimeError`` with diagnostics under
+   ``strict=True`` instead of returning an unconverged point;
+2. cell-list neighbor overflow degrades *visibly*: a structured
+   :class:`NeighborOverflowWarning` under the default
+   ``overflow_mode="warn"``, a ``RuntimeError`` under ``"strict"``, and
+   the dropped-pair count rides the outputs as ``nbr_overflow``;
+3. bad modes are rejected at config construction, not mid-run.
+"""
+
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fg_paper import paper_contact_model, paper_params
+from repro.core import dde
+from repro.core.meanfield import (solve_fixed_point,
+                                  solve_fixed_point_classes,
+                                  solve_fixed_point_multizone)
+from repro.core.zones import ZoneSet
+from repro.sim import SimConfig, simulate
+from repro.sim.cells import NeighborOverflowWarning
+from repro.sim.engine import check_overflow
+
+CM = paper_contact_model()
+P = paper_params(lam=0.2, M=1)
+ZS = ZoneSet(centers=((60.0, 100.0), (140.0, 100.0)), radii=(45.0, 45.0))
+
+
+# --------------------------------------------------------------------------
+# 1. solver convergence guards + input poisoning checks
+# --------------------------------------------------------------------------
+
+
+def test_solvers_report_convergence_diagnostics():
+    sol = solve_fixed_point(P, CM)
+    assert bool(sol.converged)
+    assert float(sol.residual) <= 1e-6
+    mz = solve_fixed_point_multizone(P, CM, ZS, density=5e-3, speed=1.0)
+    assert bool(mz.converged)
+    assert np.isfinite(float(mz.residual))
+    cs = solve_fixed_point_classes(P, CM)
+    assert bool(cs.converged)
+
+
+def test_strict_raises_on_unconverged_with_diagnostics():
+    # one damped iteration cannot reach a 1e-12 residual — strict must
+    # surface that instead of handing back a half-converged point
+    with pytest.raises(RuntimeError, match="residual"):
+        solve_fixed_point(P, CM, iters=1, tol=1e-12, strict=True)
+    # non-strict: same inputs, flagged instead of raised
+    sol = solve_fixed_point(P, CM, iters=1, tol=1e-12)
+    assert not bool(sol.converged)
+    assert float(sol.residual) > 1e-12
+
+
+def test_strict_passes_on_converged():
+    sol = solve_fixed_point(P, CM, strict=True)
+    assert bool(sol.converged)
+    mz = solve_fixed_point_multizone(P, CM, ZS, density=5e-3, speed=1.0,
+                                     strict=True)
+    assert bool(mz.converged)
+
+
+@pytest.mark.parametrize("field", ["lam", "Lam", "W", "T_T"])
+def test_nan_inputs_rejected_by_name(field):
+    bad = dataclasses.replace(P, **{field: float("nan")})
+    with pytest.raises(ValueError, match=field):
+        solve_fixed_point(bad, CM)
+    with pytest.raises(ValueError, match=field):
+        solve_fixed_point_multizone(bad, CM, ZS, density=5e-3, speed=1.0)
+    with pytest.raises(ValueError, match=field):
+        solve_fixed_point_classes(bad, CM)
+
+
+def test_inf_inputs_rejected_too():
+    bad = dataclasses.replace(P, T_M=float("inf"))
+    with pytest.raises(ValueError, match="T_M"):
+        solve_fixed_point(bad, CM)
+
+
+def test_dde_carries_diagnostics_and_checks_coeffs():
+    sol = solve_fixed_point(P, CM)
+    d = dde.solve_observation_availability(P, sol, strict=True)
+    assert bool(d.converged)
+    assert np.isfinite(float(d.residual))
+    # a poisoned mean-field solution must be rejected by name, not
+    # integrated into a NaN trace
+    bad = dataclasses.replace(sol, S=jnp.asarray(float("nan")))
+    with pytest.raises(ValueError, match="S"):
+        dde.solve_observation_availability(P, bad)
+
+
+def test_dde_strict_trace_guard():
+    with pytest.raises(RuntimeError, match="non-finite"):
+        dde._strict_trace(jnp.asarray(False), what="unit")
+    dde._strict_trace(jnp.asarray(True), what="unit")  # no raise
+
+
+def test_dde_unstable_point_is_flagged_converged_zero():
+    """An unstable operating point (infinite queueing delay) is a
+    legitimate analytic outcome — o ≡ 0, converged, residual 0 — and
+    must not trip the strict guard."""
+    sol = solve_fixed_point(P, CM)
+    unstable = dataclasses.replace(sol, d_I=jnp.asarray(float("inf")))
+    d = dde.solve_observation_availability(P, unstable, strict=True)
+    assert bool(d.converged)
+    assert np.all(np.asarray(d.o) == 0.0)
+
+
+# --------------------------------------------------------------------------
+# 2. cell-list overflow degradation
+# --------------------------------------------------------------------------
+
+
+def test_check_overflow_warn_vs_strict():
+    cfg = SimConfig(overflow_mode="warn")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        n = check_overflow(cfg, 7, context="unit")
+    assert n == 7
+    assert any(isinstance(w.message, NeighborOverflowWarning) and
+               "7" in str(w.message) for w in rec)
+    with pytest.raises(RuntimeError, match="unit"):
+        check_overflow(dataclasses.replace(cfg, overflow_mode="strict"), 7,
+                       context="unit")
+    # zero overflow: silent on both modes
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert check_overflow(cfg, 0) == 0
+        assert check_overflow(
+            dataclasses.replace(cfg, overflow_mode="strict"), 0) == 0
+    assert not rec
+
+
+def test_simulate_surfaces_overflow():
+    """An undersized neighbor cap must degrade loudly, not silently."""
+    cfg = SimConfig(n_nodes=256, n_slots=24, sample_every=8,
+                    contact_backend="cells", nbr_cap=1)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = simulate(P, cfg, seed=0)
+    assert int(np.max(out.nbr_overflow)) > 0
+    assert any(isinstance(w.message, NeighborOverflowWarning)
+               for w in rec)
+    with pytest.raises(RuntimeError, match="dropped close pairs"):
+        simulate(P, dataclasses.replace(cfg, overflow_mode="strict"),
+                 seed=0)
+
+
+def test_adequate_caps_no_overflow_no_warning():
+    cfg = SimConfig(n_nodes=256, n_slots=24, sample_every=8,
+                    contact_backend="cells")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = simulate(P, cfg, seed=0)
+    assert int(np.max(out.nbr_overflow)) == 0
+    assert not any(isinstance(w.message, NeighborOverflowWarning)
+                   for w in rec)
+
+
+# --------------------------------------------------------------------------
+# 3. config validation
+# --------------------------------------------------------------------------
+
+
+def test_bad_overflow_mode_rejected_at_construction():
+    with pytest.raises(ValueError, match="overflow_mode"):
+        SimConfig(overflow_mode="bogus")

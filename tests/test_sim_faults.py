@@ -1,0 +1,326 @@
+"""Fault-injection layer guarantees (``repro.sim.faults``):
+
+1. an all-zero-rates ``FaultConfig`` is **bitwise** ``faults=None`` on
+   every path — dense and cells contact backends, legacy k=1 and
+   multi-zone ``ZoneSet`` (the engine gates the whole layer out at
+   trace time, so the pinned PR-1..5 equivalences survive);
+2. a faulted run is a pure function of (seed, FaultConfig): repeated
+   runs are bitwise-identical, and the dense and cells backends agree
+   bitwise under active faults (the accessibility word is folded into
+   the zone words at the entry of every contact function);
+3. fault-state invariants, property-tested via hypothesis where
+   available and on seeded masks otherwise: a crashed node carries no
+   packed protocol state, a free-rider never appears as a deliverer,
+   the duty chain's accessibility word unpacks consistently and hits
+   its stationary on-fraction;
+4. the class-structured mean-field twin delegates **bitwise** to the
+   existing solvers at a trivial config (scalar and multizone), and the
+   class DDE hook delegates likewise.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fg_faults import always_on, duty_mix, free_rider_mix, harsh
+from repro.configs.fg_paper import paper_contact_model, paper_params
+from repro.core import dde
+from repro.core.meanfield import (solve_fixed_point,
+                                  solve_fixed_point_classes,
+                                  solve_fixed_point_multizone)
+from repro.core.zones import ZoneSet
+from repro.kernels.contacts import apply_access, pairwise_close_ref
+from repro.sim import SimConfig, simulate
+from repro.sim import compute, faults
+from repro.sim.faults import FaultClass, FaultConfig
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:  # pragma: no cover - optional dep
+    HAVE_HYP = False
+
+CFG = SimConfig(n_nodes=48, n_slots=160, sample_every=8)
+P = paper_params(lam=0.2, M=1)
+
+TRACE_FIELDS = ("availability", "busy_frac", "stored_info", "obs_birth",
+                "obs_holders", "model_holders", "n_in_rz")
+
+
+def _traces_equal(a, b, fields=TRACE_FIELDS):
+    for f in fields:
+        va, vb = getattr(a, f), getattr(b, f)
+        assert np.array_equal(np.asarray(va), np.asarray(vb)), f
+
+
+# --------------------------------------------------------------------------
+# 1. zero-rate bitwise identity
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["dense", "cells"])
+def test_zero_rate_config_bitwise_identical(backend):
+    """faults=FaultConfig() (all rates zero) must compile the identical
+    program as faults=None: every trace field is bit for bit equal."""
+    cfg = dataclasses.replace(CFG, contact_backend=backend)
+    base = simulate(P, cfg, seed=3)
+    zz = simulate(P, dataclasses.replace(cfg, faults=always_on()), seed=3)
+    _traces_equal(base, zz)
+    # the fault telemetry stays off too — nothing is silently emitted
+    assert zz.availability_c is None and zz.fault_events is None
+
+
+def test_zero_rate_bitwise_multizone():
+    zs = ZoneSet(centers=((60.0, 100.0), (140.0, 100.0)),
+                 radii=(45.0, 45.0))
+    cfg = dataclasses.replace(CFG, zones=zs)
+    base = simulate(P, cfg, seed=1)
+    zz = simulate(P, dataclasses.replace(cfg, faults=FaultConfig()), seed=1)
+    _traces_equal(base, zz)
+    assert np.array_equal(base.availability_z, zz.availability_z)
+
+
+# --------------------------------------------------------------------------
+# 2. determinism + backend agreement under active faults
+# --------------------------------------------------------------------------
+
+
+def test_faulted_run_deterministic():
+    cfg = dataclasses.replace(CFG, faults=harsh())
+    a = simulate(P, cfg, seed=7)
+    b = simulate(P, cfg, seed=7)
+    _traces_equal(a, b)
+    assert np.array_equal(a.availability_c, b.availability_c)
+    assert np.array_equal(a.fault_events, b.fault_events)
+    # a different seed draws different fault events
+    c = simulate(P, cfg, seed=8)
+    assert not np.array_equal(a.fault_events, c.fault_events)
+
+
+def test_dense_and_cells_agree_under_faults():
+    """The accessibility mask is folded into the zone words at the entry
+    of every contact backend — dense and cells must stay bitwise."""
+    fc = harsh()
+    dense = simulate(P, dataclasses.replace(
+        CFG, contact_backend="dense", faults=fc), seed=5)
+    cells = simulate(P, dataclasses.replace(
+        CFG, contact_backend="cells", faults=fc), seed=5)
+    _traces_equal(dense, cells)
+    assert np.array_equal(dense.availability_c, cells.availability_c)
+    assert np.array_equal(dense.fault_events, cells.fault_events)
+
+
+def test_fault_telemetry_shapes_and_sanity():
+    fc = duty_mix(duty=0.6, frac_duty=0.5)
+    out = simulate(P, dataclasses.replace(CFG, faults=fc), seed=0)
+    n_samples = out.availability.shape[0]
+    assert out.availability_c.shape == (n_samples, 1, 2)
+    assert out.on_frac_c.shape == (n_samples, 2)
+    assert out.fault_events.shape == (n_samples, 3)
+    # the always-on class never turns off; the duty class hovers near
+    # its stationary on-fraction
+    assert np.all(out.on_frac_c[:, 0] == 1.0)
+    assert abs(float(out.on_frac_c[n_samples // 2:, 1].mean()) - 0.6) < 0.15
+    # counters are cumulative
+    ev = out.fault_events
+    assert np.all(np.diff(ev, axis=0) >= 0)
+
+
+# --------------------------------------------------------------------------
+# 3. fault-state invariants
+# --------------------------------------------------------------------------
+
+
+def _drop_args(n, rng):
+    kw = 2  # packed obs words per model
+    return dict(
+        inc=jnp.asarray(rng.integers(0, 2**32, (n, 1, kw), dtype=np.uint32)),
+        has_model=jnp.asarray(rng.random((n, 1)) < 0.8),
+        tq_model=jnp.asarray(rng.integers(-1, 3, (n, 4)), jnp.int32),
+        mq_model=jnp.asarray(rng.integers(-1, 3, (n, 4)), jnp.int32),
+        serving=jnp.asarray(rng.integers(-1, 3, (n,)), jnp.int32),
+        serv_left=jnp.asarray(rng.random(n), jnp.float32),
+    )
+
+
+def _assert_dropped_state_empty(drop, dropped):
+    drop = np.asarray(drop)
+    assert np.all(np.asarray(dropped["inc"])[drop] == 0)
+    assert not np.any(np.asarray(dropped["has_model"])[drop])
+    assert np.all(np.asarray(dropped["tq_model"])[drop] == -1)
+    assert np.all(np.asarray(dropped["mq_model"])[drop] == -1)
+    assert np.all(np.asarray(dropped["serving"])[drop] == -1)
+    assert np.all(np.asarray(dropped["serv_left"])[drop] == 0.0)
+
+
+def test_drop_state_clears_crashed_nodes_only():
+    """A crashed node carries no packed protocol state afterwards; a
+    surviving node's state is untouched bit for bit."""
+    rng = np.random.default_rng(0)
+    args = _drop_args(32, rng)
+    drop = jnp.asarray(rng.random(32) < 0.4)
+    dropped = faults.drop_state(drop, **args)
+    _assert_dropped_state_empty(drop, dropped)
+    keep = ~np.asarray(drop)
+    for k in args:
+        assert np.array_equal(np.asarray(dropped[k])[keep],
+                              np.asarray(args[k])[keep]), k
+
+
+if HAVE_HYP:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(0.0, 1.0))
+    def test_drop_state_invariant_property(seed, p_drop):
+        rng = np.random.default_rng(seed)
+        args = _drop_args(16, rng)
+        drop = jnp.asarray(rng.random(16) < p_drop)
+        _assert_dropped_state_empty(drop, faults.drop_state(drop, **args))
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_free_rider_never_delivers_property(seed):
+        rng = np.random.default_rng(seed)
+        n, m = 24, 2
+        delivered = jnp.asarray(rng.random((n, m)) < 0.5)
+        pidx = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+        is_fr = jnp.asarray(rng.random(n) < 0.5)
+        gated = faults.gate_deliveries(delivered, pidx, is_fr)
+        fr_partner = np.asarray(is_fr)[np.asarray(pidx)]
+        assert not np.any(np.asarray(gated)[fr_partner])
+        assert np.array_equal(np.asarray(gated)[~fr_partner],
+                              np.asarray(delivered)[~fr_partner])
+
+
+def test_free_rider_never_delivers_seeded():
+    rng = np.random.default_rng(11)
+    n, m = 40, 3
+    delivered = jnp.asarray(rng.random((n, m)) < 0.6)
+    pidx = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    is_fr = jnp.asarray(rng.random(n) < 0.3)
+    gated = faults.gate_deliveries(delivered, pidx, is_fr)
+    fr_partner = np.asarray(is_fr)[np.asarray(pidx)]
+    assert not np.any(np.asarray(gated)[fr_partner])
+
+
+def test_free_rider_class_never_serves_in_engine():
+    """End to end: with every server a free-rider except one class of
+    always-on nodes, the free-rider class still *receives* models."""
+    fc = free_rider_mix(frac_fr=0.5)
+    out = simulate(P, dataclasses.replace(CFG, faults=fc), seed=2)
+    # class 1 (free-riders) accumulates availability only through class-0
+    # servers; it must be > 0 (they receive) — serving is covered by the
+    # gate_deliveries property above
+    assert float(out.availability_c[-1, 0, 1]) > 0.0
+
+
+def test_duty_step_packing_consistent_and_stationary():
+    """The packed availability word unpacks to the same boolean mask the
+    step returns, and the chain settles at rate_on/(rate_on+rate_off)."""
+    n = 96
+    fc = duty_mix(duty=0.7, frac_duty=1.0)
+    dt = 0.25
+    c = fc.classes[0]
+    p_off = jnp.full((n,), 1.0 - np.exp(-c.rate_off * dt), jnp.float32)
+    p_on = jnp.full((n,), 1.0 - np.exp(-c.rate_on * dt), jnp.float32)
+    availw = faults.init_avail(n)
+    key = jax.random.PRNGKey(0)
+    on_frac = []
+    for _ in range(400):
+        key, k = jax.random.split(key)
+        availw, on = faults.duty_step(k, availw, p_off, p_on, n)
+        assert np.array_equal(
+            np.asarray(compute.unpack_mask(availw[None, :], n)[0]),
+            np.asarray(on))
+        on_frac.append(float(on.mean()))
+    assert abs(np.mean(on_frac[100:]) - 0.7) < 0.05
+
+
+def test_apply_access_masks_all_input_kinds():
+    rng = np.random.default_rng(4)
+    n = 20
+    access = jnp.asarray(rng.random(n) < 0.5)
+    member = jnp.asarray(rng.random(n) < 0.8)
+    zw = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint32))
+    member2 = jnp.asarray(rng.random((n, 2)) < 0.8)
+    assert member is apply_access(member, None)
+    assert np.array_equal(np.asarray(apply_access(member, access)),
+                          np.asarray(member) & np.asarray(access))
+    out = np.asarray(apply_access(zw, access))
+    assert np.all(out[~np.asarray(access)] == 0)
+    assert np.array_equal(out[np.asarray(access)],
+                          np.asarray(zw)[np.asarray(access)])
+    out2 = np.asarray(apply_access(member2, access))
+    assert np.array_equal(
+        out2, np.asarray(member2) & np.asarray(access)[:, None])
+
+
+def test_pairwise_close_ref_access_equals_premasked_membership():
+    """Gating via access= must equal handing the oracle a pre-masked
+    membership vector — the fold happens at function entry."""
+    rng = np.random.default_rng(9)
+    n = 30
+    pos = jnp.asarray(rng.random((n, 2)) * 40.0, jnp.float32)
+    member = jnp.asarray(rng.random(n) < 0.9)
+    access = jnp.asarray(rng.random(n) < 0.6)
+    aw, ad2 = pairwise_close_ref(pos, member, 25.0, access=access)
+    bw, bd2 = pairwise_close_ref(pos, member & access, 25.0)
+    assert np.array_equal(np.asarray(aw), np.asarray(bw))
+    assert np.array_equal(np.asarray(ad2), np.asarray(bd2))
+
+
+# --------------------------------------------------------------------------
+# 4. analytic-twin delegation
+# --------------------------------------------------------------------------
+
+CM = paper_contact_model()
+
+
+def test_class_solver_trivial_delegation_bitwise():
+    base = solve_fixed_point(P, CM)
+    for fc in (None, always_on()):
+        cs = solve_fixed_point_classes(P, CM, faults=fc)
+        assert np.asarray(cs.a).shape == (1, 1)
+        assert np.asarray(cs.a)[0, 0] == np.asarray(base.a)
+        assert np.asarray(cs.d_I)[0] == np.asarray(base.d_I)
+
+
+def test_class_solver_trivial_delegation_multizone_bitwise():
+    zs = ZoneSet(centers=((60.0, 100.0), (140.0, 100.0)),
+                 radii=(45.0, 45.0))
+    base = solve_fixed_point_multizone(P, CM, zs, density=5e-3, speed=1.0)
+    cs = solve_fixed_point_classes(P, CM, zones=zs, density=5e-3, speed=1.0)
+    assert np.array_equal(np.asarray(cs.a)[0], np.asarray(base.a))
+    assert np.array_equal(np.asarray(cs.S), np.asarray(base.S))
+
+
+def test_class_solver_generic_orders_classes():
+    """Duty-cycled nodes see the network less — their steady-state
+    availability must come out below the always-on class's."""
+    fc = duty_mix(duty=0.4, frac_duty=0.5)
+    cs = solve_fixed_point_classes(P, CM, faults=fc, strict=True)
+    a = np.asarray(cs.a)[:, 0]
+    assert a[1] < a[0]
+    assert np.all((a > 0.0) & (a <= 1.0))
+
+
+def test_class_dde_trivial_delegation_bitwise():
+    base = solve_fixed_point(P, CM)
+    d0 = dde.solve_observation_availability(P, base)
+    cs = solve_fixed_point_classes(P, CM)
+    dc = dde.solve_observation_availability_classes(P, cs)
+    assert np.array_equal(np.asarray(dc.o[0, 0]), np.asarray(d0.o))
+    w = dc.weighted()
+    assert np.array_equal(np.asarray(w.o[0]), np.asarray(d0.o))
+
+
+def test_fault_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(classes=(FaultClass(frac=0.5),))   # fracs must sum to 1
+    with pytest.raises(ValueError):
+        FaultConfig(p_abort=1.5)
+    with pytest.raises(ValueError):
+        duty_mix(duty=0.0)

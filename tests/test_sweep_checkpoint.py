@@ -1,0 +1,179 @@
+"""Preemption-safe sweeps: ``sweep.run(checkpoint_dir=, resume=)``.
+
+The contract under test: checkpointing is *observationally free* — a
+checkpointed sweep produces bitwise the plain sweep's reductions — and a
+killed-and-resumed sweep reproduces the uninterrupted run bitwise from
+the surviving chunk files. Failure handling rides the same path: a chunk
+dispatch that raises is retried once; a chunk that fails twice is
+NaN/zero-filled and recorded in ``failed_chunks`` instead of sinking the
+whole sweep. Checkpoints from a *different* sweep (config, grid, seeds,
+reduction) are fingerprint-rejected with a warning, never reused.
+"""
+
+import glob
+import os
+import warnings
+
+import numpy as np
+
+from repro.configs.fg_faults import duty_mix
+from repro.configs.fg_paper import paper_params
+from repro.sim import SimConfig, sweep
+
+CFG = SimConfig(n_nodes=40, n_slots=160, sample_every=8)
+PS = [paper_params(lam=l, M=1) for l in (0.1, 0.2, 0.3)]
+SEEDS = (0, 1)
+KW = dict(seeds=SEEDS, reduce="mean", chunk_size=1)
+
+
+def _stats_equal(a: dict, b: dict):
+    assert set(a) == set(b)
+    for k in a:
+        assert np.array_equal(a[k], b[k], equal_nan=True), k
+
+
+def test_checkpointed_sweep_bitwise_equals_plain(tmp_path):
+    plain = sweep.run(PS, CFG, **KW)
+    ck = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    _stats_equal(plain.stats, ck.stats)
+    assert ck.failed_chunks == ()
+    # one durable chunk checkpoint (.npz + .json pair) per chunk
+    files = glob.glob(os.path.join(str(tmp_path), "*.npz"))
+    assert len(files) == ck.plan.n_chunks
+
+
+def test_kill_and_resume_bitwise(tmp_path):
+    full = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    # simulate a preemption that lost the last chunk
+    files = sorted(glob.glob(os.path.join(str(tmp_path), "*.npz")))
+    assert len(files) >= 2
+    os.remove(files[-1])
+    os.remove(files[-1].replace(".npz", ".json"))
+    resumed = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path),
+                        resume=True)
+    _stats_equal(full.stats, resumed.stats)
+    assert resumed.failed_chunks == ()
+
+
+def test_resume_skips_completed_chunks(tmp_path):
+    sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    n_files = len(glob.glob(os.path.join(str(tmp_path), "*")))
+
+    # all chunks on disk: the resumed sweep must not dispatch anything —
+    # force that by making any dispatch blow up
+    def boom(*a, **k):
+        def worker(keys, p_chunk):
+            raise AssertionError("resume dispatched a completed chunk")
+
+        return worker
+
+    full = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path),
+                     resume=True)
+    orig = sweep._chunk_worker
+    try:
+        sweep._chunk_worker = boom
+        again = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path),
+                          resume=True)
+    finally:
+        sweep._chunk_worker = orig
+    _stats_equal(full.stats, again.stats)
+    assert len(glob.glob(os.path.join(str(tmp_path), "*"))) == n_files
+
+
+def test_retry_once_recovers_transient_failure(tmp_path, monkeypatch):
+    plain = sweep.run(PS, CFG, **KW)
+
+    flaky = {"left": 1}
+    orig = sweep._chunk_worker
+
+    def patched(*args, **kwargs):
+        worker = orig(*args, **kwargs)
+
+        def wrapper(keys, p_chunk):
+            if flaky["left"]:
+                flaky["left"] -= 1
+                raise RuntimeError("injected transient dispatch failure")
+            return worker(keys, p_chunk)
+
+        return wrapper
+
+    monkeypatch.setattr(sweep, "_chunk_worker", patched)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    assert any("attempt 1/2" in str(w.message) for w in rec)
+    assert out.failed_chunks == ()
+    _stats_equal(plain.stats, out.stats)
+
+
+def test_persistent_failure_recorded_and_filled(tmp_path, monkeypatch):
+    plain = sweep.run(PS, CFG, **KW)
+
+    orig = sweep._chunk_worker
+
+    def patched(*args, **kwargs):
+        worker = orig(*args, **kwargs)
+
+        def wrapper(keys, p_chunk):
+            c = wrapper.n
+            wrapper.n += 1
+            if c < 2:  # chunk 0: both attempts fail
+                raise RuntimeError("injected persistent dispatch failure")
+            return worker(keys, p_chunk)
+
+        wrapper.n = 0
+        return wrapper
+
+    monkeypatch.setattr(sweep, "_chunk_worker", patched)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    assert out.failed_chunks == (0,)
+    assert any("NaN/zero-filled" in str(w.message) for w in rec)
+    # the failed chunk's scenario rows are NaN; every other row is
+    # bitwise the plain sweep
+    a = out.stats["availability"]
+    assert np.all(np.isnan(a[0]))
+    assert np.array_equal(a[1:], plain.stats["availability"][1:])
+
+
+def test_fingerprint_mismatch_rejected(tmp_path):
+    sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    # same directory, different sweep (extra seed) — the saved chunks
+    # must be warned about and recomputed, not reused
+    fresh = sweep.run(PS, CFG, seeds=(0, 1, 2), reduce="mean",
+                      chunk_size=1)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        resumed = sweep.run(PS, CFG, seeds=(0, 1, 2), reduce="mean",
+                            chunk_size=1, checkpoint_dir=str(tmp_path),
+                            resume=True)
+    assert any("fingerprint" in str(w.message) for w in rec)
+    _stats_equal(fresh.stats, resumed.stats)
+
+
+def test_checkpointed_faulted_sweep_bitwise(tmp_path):
+    """Checkpointing composes with the fault layer: the per-class
+    telemetry reductions survive a kill/resume bitwise too."""
+    cfg = SimConfig(n_nodes=40, n_slots=160, sample_every=8,
+                    faults=duty_mix(duty=0.5, link_fail_rate=0.02))
+    plain = sweep.run(PS, cfg, **KW)
+    full = sweep.run(PS, cfg, **KW, checkpoint_dir=str(tmp_path))
+    _stats_equal(plain.stats, full.stats)
+    files = sorted(glob.glob(os.path.join(str(tmp_path), "*.npz")))
+    os.remove(files[0])
+    os.remove(files[0].replace(".npz", ".json"))
+    resumed = sweep.run(PS, cfg, **KW, checkpoint_dir=str(tmp_path),
+                        resume=True)
+    for k in ("availability_c", "on_frac_c", "fault_events"):
+        assert k in resumed.stats
+    _stats_equal(full.stats, resumed.stats)
+
+
+def test_checkpoint_trace_mode(tmp_path):
+    """The trace reducer (BatchSimOutputs) checkpoints too."""
+    plain = sweep.run(PS, CFG, seeds=SEEDS, reduce="trace", chunk_size=1)
+    ck = sweep.run(PS, CFG, seeds=SEEDS, reduce="trace", chunk_size=1,
+                   checkpoint_dir=str(tmp_path))
+    for k in ("availability", "busy_frac", "n_in_rz", "model_holders"):
+        assert np.array_equal(getattr(plain, k), getattr(ck, k)), k
