@@ -18,8 +18,16 @@
 # regressions (tests silently dropping out of a lane) are visible in
 # the log diff.
 #
-# Usage:  bash scripts/ci.sh [--bench-smoke] [--nightly] [extra pytest args...]
+# Usage:  bash scripts/ci.sh [--bench-smoke] [--chaos-smoke] [--nightly]
+#                            [extra pytest args...]
 #
+#   --chaos-smoke   gate the fault-tolerant dispatcher's core invariant:
+#                   run a small sweep through the multi-process work
+#                   queue under an injected chaos schedule (one worker
+#                   SIGKILL + one heartbeat-stopped hang) and fail unless
+#                   the reductions are bitwise identical to the fault-free
+#                   in-process sweep with zero quarantined chunks — under
+#                   both 1 and 2 forced host devices.
 #   --nightly       run the full suite including `slow`-marked tests
 #                   (the tier split: tier-1 excludes them). The slow lane
 #                   includes the sim→mean-field convergence sweep
@@ -50,11 +58,13 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BENCH_SMOKE=0
+CHAOS_SMOKE=0
 NIGHTLY=0
 ARGS=()
 for a in "$@"; do
   case "$a" in
     --bench-smoke) BENCH_SMOKE=1 ;;
+    --chaos-smoke) CHAOS_SMOKE=1 ;;
     --nightly)     NIGHTLY=1 ;;
     *)             ARGS+=("$a") ;;
   esac
@@ -120,6 +130,62 @@ for k in a.files:
         f"faulted trace differs across device counts: {k}"
 print("1- and 2-device faulted sweeps bitwise-identical")
 EOF
+
+if [ "$CHAOS_SMOKE" = "1" ]; then
+  echo
+  echo "=== chaos-smoke: dispatched sweep under kill + hang ==="
+  # The dispatcher's core invariant, gated under both device topologies:
+  # any chaos schedule yields either reductions bitwise identical to the
+  # fault-free in-process sweep, or a correctly-masked subset. Here the
+  # schedule (one SIGKILL mid-task, one heartbeat-stopped hang) must
+  # fully recover: bitwise equality AND zero quarantined chunks.
+  for DC in 1 2; do
+    XLA_FLAGS="--xla_force_host_platform_device_count=$DC" CHAOS_DC=$DC \
+      python - <<'EOF'
+import os
+import tempfile
+import warnings
+
+import numpy as np
+
+from repro.configs.fg_paper import paper_params
+from repro.sim import SimConfig, sweep, dispatch
+
+dc = os.environ["CHAOS_DC"]
+cfg = SimConfig(n_nodes=40, n_slots=160, sample_every=8)
+ps = [paper_params(lam=l, M=1) for l in (0.1, 0.2, 0.3)]
+kw = dict(seeds=(0, 1), reduce="mean", chunk_size=1)
+
+ref = sweep.run(ps, cfg, **kw)
+chaos = [dispatch.chaos_directive(0, 0, "kill"),
+         dispatch.chaos_directive(1, 0, "hang", seconds=60.0)]
+policy = dispatch.RetryPolicy(max_attempts=3, lease_ttl_s=3.0,
+                              heartbeat_s=0.3)
+with warnings.catch_warnings(), tempfile.TemporaryDirectory() as qd:
+    warnings.simplefilter("ignore")
+    # chaos= only exists on the dispatcher entry point (sweep.run's
+    # workers= path forwards here, minus fault injection)
+    out = dispatch.run_dispatched(ps, cfg, kw["seeds"],
+                                  reduce=kw["reduce"],
+                                  chunk_size=kw["chunk_size"],
+                                  queue_dir=qd,
+                                  chaos=chaos, retry_policy=policy,
+                                  workers=2)
+for k in ref.stats:
+    assert np.array_equal(np.asarray(ref.stats[k]),
+                          np.asarray(out.stats[k]), equal_nan=True), \
+        f"chaos run diverged from fault-free reductions: {k}"
+assert out.coverage.all(), "chaos run left uncovered scenarios"
+assert out.quarantined == (), f"chunks quarantined: {out.quarantined}"
+tel = out.telemetry
+assert tel["expired_leases"] >= 2, "chaos did not exercise lease expiry"
+print(f"devices={dc}: chaos (kill+hang) recovered bitwise, "
+      f"0 quarantined, {tel['expired_leases']} leases expired, "
+      f"{tel['respawns']} workers respawned")
+EOF
+  done
+  echo "OK"
+fi
 
 echo
 echo "=== smoke: batched simulation engine (quick) ==="

@@ -4,10 +4,29 @@ Flattens a pytree of (possibly sharded) arrays to a single ``.npz`` plus a
 JSON manifest holding the treedef, per-leaf dtypes, and the PartitionSpec of
 every leaf, so a restore can re-place each leaf on a (possibly different)
 mesh. Keys are the '/'-joined pytree paths — stable across runs.
+
+The format also carries what the fault-tolerant sweep dispatcher
+(``repro.sim.dispatch``) needs to trust a file written by a worker that may
+have been killed mid-write:
+
+* **attempt / provenance records** — ``save_checkpoint(meta=...)`` stores an
+  arbitrary JSON-serializable dict in the manifest (``load_manifest`` reads
+  it back); the sweep runner records the chunk's ``attempt`` number and the
+  writing worker there.
+* **content integrity** — ``integrity=True`` stores a per-leaf sha256 of the
+  raw array bytes; ``restore_checkpoint(verify=True)`` recomputes and
+  compares them, raising :class:`CheckpointCorruptError` on any mismatch,
+  so a torn or garbage write is *detected*, never silently consumed.
+* **atomic writes** — ``atomic=True`` writes both files to temporary names
+  and ``os.replace``-renames them into place (manifest first, ``.npz``
+  last, so the presence of the ``.npz`` implies a complete manifest). A
+  writer killed mid-save leaves at most a ``*.tmp-*`` turd, never a
+  half-written checkpoint under the final name.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 
@@ -15,7 +34,17 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["save_checkpoint", "restore_checkpoint"]
+__all__ = [
+    "save_checkpoint", "restore_checkpoint", "load_manifest",
+    "CheckpointCorruptError",
+]
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint file failed an integrity check (truncated npz, content
+    hash mismatch, missing manifest/leaf). Callers that can recompute the
+    data (the sweep resume path, the dispatch coordinator) catch this and
+    recompute; nothing ever restores from a file that raised it."""
 
 
 def _path_str(path) -> str:
@@ -56,11 +85,25 @@ def _spec_from_json(entries) -> P:
     return P(*parts)
 
 
-def save_checkpoint(directory: str, step: int, tree, specs=None) -> str:
-    """Write ``{directory}/step_{step}.npz`` (+ ``.json``). Returns the path."""
+def _content_hash(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()).hexdigest()
+
+
+def save_checkpoint(directory: str, step: int, tree, specs=None, *,
+                    meta: dict | None = None, integrity: bool = False,
+                    atomic: bool = False) -> str:
+    """Write ``{directory}/step_{step}.npz`` (+ ``.json``). Returns the path.
+
+    ``meta`` is stored verbatim in the manifest (JSON-serializable);
+    ``integrity=True`` adds per-leaf sha256 content hashes;
+    ``atomic=True`` stages both files under temporary names and renames
+    them into place (manifest first, data last).
+    """
     os.makedirs(directory, exist_ok=True)
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays, manifest = {}, {"step": step, "leaves": {}}
+    if meta is not None:
+        manifest["meta"] = meta
     spec_flat = None
     if specs is not None:
         spec_flat = [s for _, s in jax.tree_util.tree_flatten_with_path(specs)[0]]
@@ -73,34 +116,91 @@ def save_checkpoint(directory: str, step: int, tree, specs=None) -> str:
             # (bf16/fp8 values are exactly representable -> bit-exact restore)
             arr = arr.astype(np.float32)
         arrays[key] = arr
-        manifest["leaves"][key] = {
+        entry = {
             "dtype": true_dtype,
             "spec": _spec_to_json(spec_flat[i]) if spec_flat is not None else None,
         }
+        if integrity:
+            entry["sha256"] = _content_hash(arr)
+            entry["shape"] = list(arr.shape)
+        manifest["leaves"][key] = entry
     base = os.path.join(directory, f"step_{step:08d}")
-    np.savez(base + ".npz", **arrays)
-    with open(base + ".json", "w") as f:
+    if not atomic:
+        np.savez(base + ".npz", **arrays)
+        with open(base + ".json", "w") as f:
+            json.dump(manifest, f, indent=1)
+        return base + ".npz"
+    # atomic: stage under pid-unique temp names, manifest lands first so
+    # that once the .npz is visible the manifest is guaranteed complete
+    tmp = f".tmp-{os.getpid()}"
+    with open(base + ".npz" + tmp, "wb") as f:
+        # via the handle: np.savez would append ".npz" to a bare tmp name
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    with open(base + ".json" + tmp, "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(base + ".json" + tmp, base + ".json")
+    os.replace(base + ".npz" + tmp, base + ".npz")
     return base + ".npz"
 
 
-def restore_checkpoint(path: str, like, mesh: Mesh | None = None):
+def load_manifest(path: str) -> dict:
+    """The manifest dict of a checkpoint ``.npz`` path (``step``,
+    ``leaves``, and ``meta`` — ``{}`` for pre-meta files). Raises
+    :class:`CheckpointCorruptError` if the manifest is missing/unreadable.
+    """
+    mpath = path.replace(".npz", ".json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(
+            f"unreadable checkpoint manifest {mpath}: {e}") from e
+    manifest.setdefault("meta", {})
+    return manifest
+
+
+def restore_checkpoint(path: str, like, mesh: Mesh | None = None, *,
+                       verify: bool = False):
     """Restore a checkpoint into the structure of ``like``.
 
     If ``mesh`` is given and the manifest has specs, each leaf is placed with
     its saved PartitionSpec on that mesh (resharding on restore).
+    ``verify=True`` recomputes each leaf's content hash against the
+    manifest's ``sha256`` record (where present — files written with
+    ``integrity=False`` have none to check) and raises
+    :class:`CheckpointCorruptError` on mismatch or on any unreadable array.
     """
-    data = np.load(path)
-    with open(path.replace(".npz", ".json")) as f:
-        manifest = json.load(f)
+    manifest = load_manifest(path)
+    try:
+        data = np.load(path)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"unreadable checkpoint {path}: {e}") from e
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for lpath, leaf in flat:
         key = _path_str(lpath)
         if key not in data:
             raise KeyError(f"checkpoint missing leaf {key!r}")
-        arr = data[key]
-        entry = manifest["leaves"][key]
+        try:
+            arr = data[key]
+        except Exception as e:
+            # zipfile CRC failure / truncated member — a torn write
+            raise CheckpointCorruptError(
+                f"corrupt checkpoint leaf {key!r} in {path}: {e}") from e
+        entry = manifest["leaves"].get(key)
+        if entry is None:
+            raise CheckpointCorruptError(
+                f"checkpoint manifest {path} has no entry for leaf {key!r}")
+        if verify and entry.get("sha256") is not None:
+            if _content_hash(arr) != entry["sha256"]:
+                raise CheckpointCorruptError(
+                    f"content hash mismatch for leaf {key!r} in {path} "
+                    "(torn or corrupted write)")
         if str(arr.dtype) != entry["dtype"]:
             import jax.numpy as jnp
             arr = np.asarray(jnp.asarray(arr).astype(entry["dtype"]))

@@ -20,6 +20,8 @@ __all__ = [
     "duty_mix",
     "free_rider_mix",
     "harsh",
+    "zipf_mix",
+    "zipf_weights",
 ]
 
 # a duty-cycled node's mean on+off cycle [s]; short against the ~157 s
@@ -80,6 +82,50 @@ def duty_mix(
             FaultClass(frac=1.0 - frac_duty, name="on"),
             _duty_class(duty, cycle_time, frac_duty),
         )
+    return FaultConfig(classes=classes, link_fail_rate=link_fail_rate,
+                       p_abort=p_abort, crash_rate=crash_rate)
+
+
+def zipf_weights(n_classes: int, s: float = 0.9) -> tuple[float, ...]:
+    """Zipf(s) participation weights, normalized to ``max == 1``.
+
+    ``w_k = 1 / (k + 1)^s`` — the rank-frequency law measured for IOTA
+    node reputation (s = 0.9) and used by the DLT congestion-control
+    literature for per-node participation shares. ``s = 0`` degenerates
+    to uniform weights.
+    """
+    if n_classes < 1:
+        raise ValueError(f"n_classes must be >= 1, got {n_classes}")
+    if s < 0.0:
+        raise ValueError(f"zipf exponent s must be >= 0, got {s}")
+    return tuple(1.0 / (k + 1) ** s for k in range(n_classes))
+
+
+def zipf_mix(
+    *,
+    n_classes: int = 5,
+    s: float = 0.9,
+    cycle_time: float = CYCLE_TIME_DEFAULT,
+    link_fail_rate: float = 0.0,
+    p_abort: float = 0.0,
+    crash_rate: float = 0.0,
+) -> FaultConfig:
+    """Zipf-distributed participation: heavy heads, a long lazy tail.
+
+    The population splits into ``n_classes`` equal-size classes; class
+    ``k``'s stationary accessible fraction (duty) is the Zipf(s) weight
+    ``1/(k+1)^s`` — class 0 is always on, later classes participate ever
+    less. Threads through :func:`repro.core.meanfield.
+    solve_fixed_point_classes` via the per-class duty ``q_c``, so the
+    mean-field twin predicts Zipf-graded per-class availability.
+    """
+    w = zipf_weights(n_classes, s)
+    frac = 1.0 / n_classes
+    classes = tuple(
+        FaultClass(frac=frac, name=f"zipf{k}") if duty >= 1.0
+        else _duty_class(duty, cycle_time, frac, name=f"zipf{k}")
+        for k, duty in enumerate(w)
+    )
     return FaultConfig(classes=classes, link_fail_rate=link_fail_rate,
                        p_abort=p_abort, crash_rate=crash_rate)
 

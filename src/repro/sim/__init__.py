@@ -69,10 +69,13 @@ from repro.sim.mobility import (
 )
 from repro.sim.observations import estimate_o_of_tau
 from repro.sim.sweep import SweepPlan, SweepSummary, plan_sweep
-from repro.sim import cells, sweep
+from repro.sim import cells, dispatch, sweep
+from repro.sim.dispatch import RetryPolicy
 
 __all__ = [
     "cells",
+    "dispatch",
+    "RetryPolicy",
     "BatchSimOutputs",
     "SimConfig",
     "SimOutputs",

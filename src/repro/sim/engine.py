@@ -156,10 +156,10 @@ class BatchSimOutputs:
     """Batched traces with leading (scenario, seed) axes.
 
     ``point(i, j)`` extracts the ``SimOutputs`` view of scenario ``i``,
-    seed ``j`` for code written against the single-run API. The last
-    three fields describe how the sweep runner executed the batch
-    (``repro.sim.sweep``); they stay ``None`` for instances built
-    elsewhere."""
+    seed ``j`` for code written against the single-run API. The trailing
+    fields (``plan`` onward) describe how the sweep runner executed the
+    batch (``repro.sim.sweep`` / ``repro.sim.dispatch``); they stay
+    ``None``/empty for instances built elsewhere."""
 
     t: np.ndarray                # (S,)
     availability: np.ndarray     # (P, R, S, M)
@@ -180,7 +180,10 @@ class BatchSimOutputs:
     plan: Any = None             # SweepPlan of the producing sweep
     devices_used: int | None = None
     host_bytes: int | None = None
-    failed_chunks: tuple = ()    # sweep chunks whose dispatch failed twice
+    failed_chunks: tuple = ()    # sweep chunks that exhausted their retries
+    coverage: Any = None         # (n_scenarios,) bool: False = filled rows
+    quarantined: tuple = ()      # poison chunks (dispatched sweeps)
+    telemetry: Any = None        # dispatch attempt/latency/requeue records
 
     @property
     def n_scenarios(self) -> int:

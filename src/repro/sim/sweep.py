@@ -188,6 +188,18 @@ class SweepSummary:
     quantities: ``(scen, seed, M, Q)``). ``host_bytes`` counts the bytes
     actually materialized from device — padded chunk outputs included —
     the number the transfer-reduction benchmark column tracks.
+
+    Partial completion is *labeled*, never silent: ``coverage`` is an
+    (n_scenarios,) bool mask — ``True`` where the scenario's chunk actually
+    computed, ``False`` where its rows are NaN/zero fill (chunks are slices
+    of the scenario axis, so the chunk → row mapping is exact). The
+    uncovered chunk indices are in ``failed_chunks`` (exhausted their
+    :class:`~repro.sim.dispatch.RetryPolicy` attempts) and, for dispatched
+    sweeps, ``quarantined`` carries the poison chunks whose quarantine
+    records (worker tracebacks, attempt history) live in
+    ``telemetry["quarantine"]``. ``telemetry`` also holds per-chunk
+    attempt/latency/requeue counters (see
+    :func:`repro.sim.dispatch.run_dispatched`).
     """
 
     reduce: str
@@ -198,8 +210,11 @@ class SweepSummary:
     devices_used: int
     host_bytes: int
     quantiles: tuple[float, ...] | None = None
-    failed_chunks: tuple[int, ...] = ()   # chunk indices whose dispatch
-                                          # failed twice (NaN/zero-filled)
+    failed_chunks: tuple[int, ...] = ()   # chunk indices that exhausted
+                                          # their retries (NaN/zero-filled)
+    coverage: np.ndarray | None = None    # (n_scenarios,) bool completion
+    quarantined: tuple[int, ...] = ()     # poison chunks (dispatch path)
+    telemetry: dict | None = None         # attempts/latency/requeue records
 
 
 def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
@@ -251,20 +266,11 @@ def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
     return red
 
 
-@lru_cache(maxsize=None)
-def _chunk_worker(cfg: SimConfig, M: int, plan: SweepPlan, reduce: str,
-                  s0: int, qs: tuple, tau: tuple, p_keys: tuple):
-    """Compiled per-chunk runner, cached per (config, plan, reduction).
-
-    Inputs are sharded over the plan's 2-D mesh via the ``sweep_scenario``
-    / ``sweep_seed`` logical axes and the per-chunk parameter buffers are
-    donated — each chunk's arrays are dead after its dispatch, so XLA may
-    reuse their memory for the scan carry and outputs of the same step.
-    """
-    mesh = compat_make_mesh(plan.mesh_shape, ("sweep_scenario", "sweep_seed"))
-    chunk_p, pad_r = plan.chunk_scenarios, plan.pad_seeds
-    scen_spec = spec_for(mesh, ("sweep_scenario",), (chunk_p,), SWEEP_RULES)
-    seed_spec = spec_for(mesh, ("sweep_seed", None), (pad_r, 2), SWEEP_RULES)
+def _worker_fn(cfg: SimConfig, M: int, reduce: str, s0: int, qs: tuple,
+               tau: tuple):
+    """The pure (uncompiled) per-chunk program — also what
+    ``_SweepSetup.expected_shapes`` abstract-evals, so the result schema
+    is a property of the sweep definition, not of a compiled executable."""
     # o_tau consumes the per-observation traces, so it runs the full
     # engine trace — but reduces it on device like the light modes
     trace = "full" if reduce in ("trace", "o_tau") else "light"
@@ -280,8 +286,26 @@ def _chunk_worker(cfg: SimConfig, M: int, plan: SweepPlan, reduce: str,
             return outs
         return _reduce_outs(outs, reduce, s0, qs, tau, t_const)
 
+    return worker
+
+
+@lru_cache(maxsize=None)
+def _chunk_worker(cfg: SimConfig, M: int, plan: SweepPlan, reduce: str,
+                  s0: int, qs: tuple, tau: tuple, p_keys: tuple):
+    """Compiled per-chunk runner, cached per (config, plan, reduction).
+
+    Inputs are sharded over the plan's 2-D mesh via the ``sweep_scenario``
+    / ``sweep_seed`` logical axes and the per-chunk parameter buffers are
+    donated — each chunk's arrays are dead after its dispatch, so XLA may
+    reuse their memory for the scan carry and outputs of the same step.
+    """
+    mesh = compat_make_mesh(plan.mesh_shape, ("sweep_scenario", "sweep_seed"))
+    chunk_p, pad_r = plan.chunk_scenarios, plan.pad_seeds
+    scen_spec = spec_for(mesh, ("sweep_scenario",), (chunk_p,), SWEEP_RULES)
+    seed_spec = spec_for(mesh, ("sweep_seed", None), (pad_r, 2), SWEEP_RULES)
+
     return jax.jit(
-        worker,
+        _worker_fn(cfg, M, reduce, s0, qs, tau),
         in_shardings=(
             jax.sharding.NamedSharding(mesh, seed_spec),
             {k: jax.sharding.NamedSharding(mesh, scen_spec) for k in p_keys},
@@ -318,10 +342,40 @@ def _fp_array(fp: str) -> np.ndarray:
     return np.frombuffer(bytes.fromhex(fp), dtype=np.uint8)
 
 
-def _load_chunks(directory: str, fp: str, n_chunks: int) -> dict[int, dict]:
+def _tree_mismatch(tree: dict, expected: dict | None) -> str | None:
+    """Why ``tree`` cannot be this sweep's chunk result (None = it can):
+    missing/extra quantities or shape/dtype drift against the worker's
+    ``eval_shape`` output — the checks that turn a stale or torn chunk
+    file into a recompute instead of a crash (or worse, silent bad data).
+    """
+    if expected is None:
+        return None
+    missing = sorted(set(expected) - set(tree))
+    extra = sorted(set(tree) - set(expected))
+    if missing or extra:
+        return f"key mismatch (missing {missing}, unexpected {extra})"
+    for k, s in expected.items():
+        arr = np.asarray(tree[k])
+        if tuple(arr.shape) != tuple(s.shape):
+            return (f"shape mismatch for {k!r}: file has {arr.shape}, "
+                    f"sweep expects {tuple(s.shape)}")
+        if arr.dtype != s.dtype:
+            return (f"dtype mismatch for {k!r}: file has {arr.dtype}, "
+                    f"sweep expects {np.dtype(s.dtype)}")
+    return None
+
+
+def _load_chunks(directory: str, fp: str, n_chunks: int,
+                 expected: dict | None = None) -> dict[int, dict]:
     """Completed chunk reductions from ``directory`` whose fingerprint
-    matches ``fp`` (mismatched or unreadable files are skipped with a
-    warning, so a stale dir degrades to recomputation, never bad data)."""
+    matches ``fp``. Defensive by construction: mismatched, truncated,
+    corrupt, or shape-drifted files are *skipped with a warning naming the
+    chunk and the reason* and their chunk recomputes — a torn write from a
+    preempted run (or a worker killed mid-save) can never crash a resume
+    nor leak bad arrays into the reductions. ``expected`` (quantity name →
+    ``ShapeDtypeStruct`` from the worker's ``eval_shape``) arms the
+    shape/dtype validation; content hashes in the manifest (files written
+    with ``integrity=True``) are verified where present."""
     from repro.checkpoint.ckpt import restore_checkpoint
 
     done: dict[int, dict] = {}
@@ -331,11 +385,15 @@ def _load_chunks(directory: str, fp: str, n_chunks: int) -> dict[int, dict]:
         if not (name.startswith("step_") and name.endswith(".npz")):
             continue
         path = os.path.join(directory, name)
+        chunk_id = name[len("step_"):-len(".npz")].lstrip("0") or "0"
         try:
             like = {k: 0 for k in np.load(path).files}
-            tree, step = restore_checkpoint(path, like)
+            tree, step = restore_checkpoint(path, like, verify=True)
         except Exception as e:
-            warnings.warn(f"skipping unreadable sweep checkpoint {path}: {e}")
+            warnings.warn(
+                f"skipping sweep checkpoint chunk {chunk_id} ({path}): "
+                f"unreadable or corrupt ({e}); recomputing"
+            )
             continue
         saved_fp = tree.pop("fingerprint", None)
         if (saved_fp is None
@@ -346,87 +404,74 @@ def _load_chunks(directory: str, fp: str, n_chunks: int) -> dict[int, dict]:
                 "mismatch (different sweep)"
             )
             continue
+        reason = _tree_mismatch(tree, expected)
+        if reason is not None:
+            warnings.warn(
+                f"skipping sweep checkpoint chunk {chunk_id} ({path}): "
+                f"{reason}; recomputing"
+            )
+            continue
         done[step] = tree
     return done
 
 
-def _failed_chunk_like(worker, keys, p_chunk) -> dict:
-    """Host-side stand-in for a chunk whose dispatch failed twice:
-    NaN-filled floats / zero-filled ints at the worker's exact output
-    shapes (via ``eval_shape`` — nothing runs)."""
-    shapes = jax.eval_shape(worker, keys, p_chunk)
+def _fill_chunk(expected: dict) -> dict:
+    """Host-side stand-in for a chunk that never completed: NaN-filled
+    floats / zero-filled ints at the worker's exact output shapes
+    (``expected`` from ``eval_shape`` — nothing runs). Always paired with
+    a ``False`` stretch in the coverage mask, so the fill is labeled."""
 
     def fill(s):
         if np.issubdtype(s.dtype, np.floating):
             return np.full(s.shape, np.nan, s.dtype)
         return np.zeros(s.shape, s.dtype)
 
-    return {k: fill(s) for k, s in shapes.items()}
+    return {k: fill(s) for k, s in expected.items()}
 
 
-def run(
-    ps: Sequence[FGParams] | FGParams,
-    cfg: SimConfig,
-    seeds: Sequence[int] = (0,),
-    *,
-    reduce: str = "trace",
-    warmup_frac: float | None = None,
-    chunk_size: int | None = None,
-    quantiles: Sequence[float] = (0.1, 0.5, 0.9),
-    tau_grid=None,
-    n_devices: int | None = None,
-    checkpoint_dir: str | None = None,
-    resume: bool = False,
-):
-    """Execute a (scenarios x seeds) sweep on the planned device mesh.
+@dataclasses.dataclass
+class _SweepSetup:
+    """Everything ``run`` and the dispatch workers/coordinator share: the
+    normalized sweep definition plus the derived compile-cache keys. Built
+    once by :func:`_prepare`; the dispatcher pickles the *inputs* (ps, cfg,
+    seeds, knobs) and each worker rebuilds this identically, so every
+    process compiles the same chunk program and produces bitwise-identical
+    results."""
 
-    Args:
-      ps:         one ``FGParams`` or a sequence (the scenario axis); all
-                  scenarios share the model count ``M``.
-      cfg:        shared simulation geometry/discretization.
-      seeds:      PRNG seeds (the replication axis).
-      reduce:     ``"trace"`` (full per-sample traces, bitwise the
-                  historical ``simulate_batch``) or an on-device
-                  reduction: ``"mean"`` (post-warmup time-mean + std),
-                  ``"final"`` (last sample), ``"quantiles"`` (post-warmup
-                  time-quantiles), ``"o_tau"`` (the o(τ) estimator's
-                  holder-fraction age histograms, accumulated on device —
-                  requires ``tau_grid``; stats ship ``o_tau`` plus the
-                  raw ``o_tau_num``/``o_tau_den`` histograms for
-                  cross-seed aggregation, pinned against
-                  ``observations.estimate_o_of_tau`` on the trace path).
-      warmup_frac: fraction of samples discarded before reducing
-                  (defaults to ``cfg.warmup_frac``; ignored for
-                  ``"trace"``/``"final"``).
-      chunk_size: scenarios per dispatched chunk (``None`` = one
-                  dispatch). Chunks stream with double-buffering: the
-                  next chunk is dispatched before the previous chunk's
-                  outputs are pulled to the host.
-      quantiles:  quantile levels for ``reduce="quantiles"``.
-      tau_grid:   uniform observation-age grid starting at 0 for
-                  ``reduce="o_tau"`` (its length and spacing define the
-                  histogram bins, exactly like ``estimate_o_of_tau``).
-      n_devices:  mesh size override (defaults to all visible devices).
-      checkpoint_dir: when set, every completed chunk's host-side result
-                  is saved there (``repro.checkpoint.ckpt``) together
-                  with a fingerprint of the (config, grid, plan,
-                  reduction, seeds) quintuple, and chunk dispatch gains a
-                  retry-once-then-record-failure path (a chunk that fails
-                  twice is NaN/zero-filled and listed in
-                  ``failed_chunks``). Checkpointed execution materializes
-                  each chunk synchronously (no double buffering) so a
-                  saved chunk is always durable.
-      resume:     with ``checkpoint_dir``, skip chunks whose saved
-                  fingerprint matches this sweep — a killed-and-resumed
-                  sweep reproduces the uninterrupted run's results
-                  bitwise. Mismatched checkpoints are ignored (warned),
-                  never reused.
+    cfg: SimConfig
+    M: int
+    plan: SweepPlan
+    reduce: str
+    quantiles: tuple
+    s0: int                # warmup samples (reporting)
+    key_s0: int            # normalized compile-cache keys: only what the
+    key_qs: tuple          # chosen reduction actually reads
+    key_tau: tuple
+    p_keys: tuple
+    p_stack: dict          # padded parameter stack (scenario axis)
+    keys: jnp.ndarray      # padded PRNG keys (seed axis)
 
-    Returns:
-      ``BatchSimOutputs`` for ``reduce="trace"`` — with the extra
-      attributes ``plan``/``devices_used``/``host_bytes`` attached — or a
-      :class:`SweepSummary` for the reduced modes.
-    """
+    def worker(self):
+        return _chunk_worker(self.cfg, self.M, self.plan, self.reduce,
+                             self.key_s0, self.key_qs, self.key_tau,
+                             self.p_keys)
+
+    def chunk_params(self, c: int) -> dict:
+        cp = self.plan.chunk_scenarios
+        return {k: v[c * cp:(c + 1) * cp] for k, v in self.p_stack.items()}
+
+    def expected_shapes(self) -> dict:
+        """Quantity name -> ``ShapeDtypeStruct`` of one chunk's host
+        result. Abstract-evals the *uncompiled* chunk program — nothing
+        compiles, runs, or touches the jit cache."""
+        fn = _worker_fn(self.cfg, self.M, self.reduce, self.key_s0,
+                        self.key_qs, self.key_tau)
+        return dict(jax.eval_shape(fn, self.keys, self.chunk_params(0)))
+
+
+def _prepare(ps, cfg, seeds, reduce, warmup_frac, chunk_size, quantiles,
+             tau_grid, n_devices) -> _SweepSetup:
+    """Validate and normalize a sweep definition into a :class:`_SweepSetup`."""
     if isinstance(ps, FGParams):
         ps = [ps]
     if reduce not in REDUCERS:
@@ -463,84 +508,41 @@ def run(
         key_tau = (len(tau_grid), float(tau_grid[1] - tau_grid[0]))
     else:
         key_tau = ()
-    worker = _chunk_worker(cfg, M, plan, reduce, key_s0, key_qs, key_tau,
-                           tuple(sorted(p_stack)))
+    return _SweepSetup(
+        cfg=cfg, M=M, plan=plan, reduce=reduce, quantiles=tuple(quantiles),
+        s0=s0, key_s0=key_s0, key_qs=key_qs, key_tau=key_tau,
+        p_keys=tuple(sorted(p_stack)), p_stack=p_stack, keys=keys,
+    )
 
+
+def _setup_fingerprint(setup: _SweepSetup, seeds) -> str:
+    return _sweep_fingerprint(
+        setup.cfg, setup.M, setup.plan, setup.reduce, setup.key_s0,
+        setup.key_qs, setup.key_tau, seeds, setup.p_stack,
+    )
+
+
+def _coverage_mask(plan: SweepPlan, uncovered: Sequence[int]) -> np.ndarray:
+    """(n_scenarios,) bool: ``False`` exactly on the scenario rows of the
+    chunks in ``uncovered`` (chunks slice the scenario axis, so the
+    chunk → row mapping is exact; pad rows fall off the end)."""
+    cov = np.ones((plan.n_scenarios,), bool)
     cp = plan.chunk_scenarios
+    for c in uncovered:
+        cov[c * cp:(c + 1) * cp] = False
+    return cov
 
-    def dispatch(c):
-        # the chunk slice is rebuilt per attempt: donation may have
-        # invalidated a previous attempt's buffers
-        p_chunk = {k: v[c * cp:(c + 1) * cp] for k, v in p_stack.items()}
-        with warnings.catch_warnings():
-            # CPU cannot always alias donated input pages into outputs;
-            # the donation is still honored where the backend supports it
-            warnings.filterwarnings(
-                "ignore", message="Some donated buffers were not usable"
-            )
-            return worker(keys, p_chunk)
 
-    devices_used = 0
-    failed: list[int] = []
-
-    def note_devices(out):
-        nonlocal devices_used
-        devices_used = max(
-            devices_used,
-            len(jax.tree_util.tree_leaves(out)[0].sharding.device_set),
-        )
-
-    if checkpoint_dir is None:
-        host_chunks: list[dict] = []
-        pending = None
-        for c in range(plan.n_chunks):
-            out = dispatch(c)
-            note_devices(out)
-            if pending is not None:
-                # double buffer: materialize chunk c-1 while chunk c runs
-                host_chunks.append(
-                    jax.tree_util.tree_map(np.asarray, pending)
-                )
-            pending = out
-        host_chunks.append(jax.tree_util.tree_map(np.asarray, pending))
-    else:
-        from repro.checkpoint.ckpt import save_checkpoint
-
-        fp = _sweep_fingerprint(cfg, M, plan, reduce, key_s0, key_qs,
-                                key_tau, seeds, p_stack)
-        done = (_load_chunks(checkpoint_dir, fp, plan.n_chunks)
-                if resume else {})
-        by_idx: dict[int, dict] = {}
-        for c in range(plan.n_chunks):
-            if c in done:
-                by_idx[c] = done[c]
-                continue
-            hc = None
-            for attempt in (0, 1):
-                # retry once; only Exception is retried — a kill signal
-                # (KeyboardInterrupt/SystemExit) propagates, which is the
-                # preemption this path checkpoints against
-                try:
-                    out = dispatch(c)
-                    hc = jax.tree_util.tree_map(np.asarray, out)
-                    note_devices(out)
-                    break
-                except Exception as e:
-                    warnings.warn(
-                        f"sweep chunk {c} dispatch failed "
-                        f"(attempt {attempt + 1}/2): {e!r}"
-                    )
-            if hc is None:
-                failed.append(c)
-                p_chunk = {k: v[c * cp:(c + 1) * cp]
-                           for k, v in p_stack.items()}
-                by_idx[c] = _failed_chunk_like(worker, keys, p_chunk)
-                continue
-            save_checkpoint(checkpoint_dir, c,
-                            dict(hc, fingerprint=_fp_array(fp)))
-            by_idx[c] = hc
-        host_chunks = [by_idx[c] for c in range(plan.n_chunks)]
-
+def _finalize(setup: _SweepSetup, host_chunks: list, *, devices_used: int,
+              failed: Sequence[int] = (), quarantined: Sequence[int] = (),
+              telemetry: dict | None = None):
+    """Assemble chunk results (host dicts, in chunk order) into the sweep's
+    return value — shared by the in-process runner and the dispatcher, so
+    both produce byte-for-byte the same ``BatchSimOutputs``/``SweepSummary``
+    from the same chunk reductions."""
+    plan, cfg, reduce = setup.plan, setup.cfg, setup.reduce
+    failed = tuple(sorted(failed))
+    quarantined = tuple(sorted(quarantined))
     P, R = plan.n_scenarios, plan.n_seeds
     # what actually crossed the device/host boundary: the materialized
     # (padded) chunks, before the pad rows are sliced off
@@ -552,15 +554,17 @@ def run(
         for k in host_chunks[0]
     }
     t = _sample_times(cfg)
+    coverage = _coverage_mask(plan, failed)
 
     if failed:
         warnings.warn(
             f"{len(failed)} sweep chunk(s) failed after retry and were "
-            f"NaN/zero-filled: {failed}"
+            f"NaN/zero-filled: {list(failed)} (see SweepSummary.coverage)"
         )
     if "nbr_overflow" in outs:
         from repro.sim.engine import check_overflow
 
+        # uncovered chunks are zero-filled — they can't trip the gate
         check_overflow(cfg, outs["nbr_overflow"], context="sweep")
 
     if reduce == "trace":
@@ -582,15 +586,236 @@ def run(
             n_in_rz_c=outs.get("n_in_rz_c"),
             fault_events=outs.get("fault_events"),
             plan=plan, devices_used=devices_used, host_bytes=host_bytes,
-            failed_chunks=tuple(failed),
+            failed_chunks=failed, coverage=coverage,
+            quarantined=quarantined, telemetry=telemetry,
         )
     if reduce == "o_tau":
         # the ratio is host-side arithmetic on the shipped histograms
         num, den = outs["o_tau_num"], outs["o_tau_den"]
         outs["o_tau"] = np.where(den > 0, num / np.maximum(den, 1), np.nan)
     return SweepSummary(
-        reduce=reduce, t=t, warmup_samples=s0, stats=outs, plan=plan,
+        reduce=reduce, t=t, warmup_samples=setup.s0, stats=outs, plan=plan,
         devices_used=devices_used, host_bytes=host_bytes,
-        quantiles=tuple(quantiles) if reduce == "quantiles" else None,
-        failed_chunks=tuple(failed),
+        quantiles=setup.quantiles if reduce == "quantiles" else None,
+        failed_chunks=failed, coverage=coverage, quarantined=quarantined,
+        telemetry=telemetry,
     )
+
+
+def run(
+    ps: Sequence[FGParams] | FGParams,
+    cfg: SimConfig,
+    seeds: Sequence[int] = (0,),
+    *,
+    reduce: str = "trace",
+    warmup_frac: float | None = None,
+    chunk_size: int | None = None,
+    quantiles: Sequence[float] = (0.1, 0.5, 0.9),
+    tau_grid=None,
+    n_devices: int | None = None,
+    checkpoint_dir: str | None = None,
+    resume: bool = False,
+    retry_policy=None,
+    workers: int | None = None,
+    queue_dir: str | None = None,
+    xla_cache_dir: str | None = None,
+):
+    """Execute a (scenarios x seeds) sweep on the planned device mesh.
+
+    Args:
+      ps:         one ``FGParams`` or a sequence (the scenario axis); all
+                  scenarios share the model count ``M``.
+      cfg:        shared simulation geometry/discretization.
+      seeds:      PRNG seeds (the replication axis).
+      reduce:     ``"trace"`` (full per-sample traces, bitwise the
+                  historical ``simulate_batch``) or an on-device
+                  reduction: ``"mean"`` (post-warmup time-mean + std),
+                  ``"final"`` (last sample), ``"quantiles"`` (post-warmup
+                  time-quantiles), ``"o_tau"`` (the o(τ) estimator's
+                  holder-fraction age histograms, accumulated on device —
+                  requires ``tau_grid``; stats ship ``o_tau`` plus the
+                  raw ``o_tau_num``/``o_tau_den`` histograms for
+                  cross-seed aggregation, pinned against
+                  ``observations.estimate_o_of_tau`` on the trace path).
+      warmup_frac: fraction of samples discarded before reducing
+                  (defaults to ``cfg.warmup_frac``; ignored for
+                  ``"trace"``/``"final"``).
+      chunk_size: scenarios per dispatched chunk (``None`` = one
+                  dispatch). Chunks stream with double-buffering: the
+                  next chunk is dispatched before the previous chunk's
+                  outputs are pulled to the host.
+      quantiles:  quantile levels for ``reduce="quantiles"``.
+      tau_grid:   uniform observation-age grid starting at 0 for
+                  ``reduce="o_tau"`` (its length and spacing define the
+                  histogram bins, exactly like ``estimate_o_of_tau``).
+      n_devices:  mesh size override (defaults to all visible devices).
+      checkpoint_dir: when set, every completed chunk's host-side result
+                  is saved there (``repro.checkpoint.ckpt`` — atomic
+                  temp-rename writes with per-array content hashes and the
+                  attempt number in the manifest) together with a
+                  fingerprint of the (config, grid, plan, reduction,
+                  seeds) quintuple, and chunk dispatch retries under
+                  ``retry_policy`` (a chunk that exhausts its attempts is
+                  NaN/zero-filled, listed in ``failed_chunks`` and masked
+                  out of ``coverage``). Checkpointed execution
+                  materializes each chunk synchronously (no double
+                  buffering) so a saved chunk is always durable.
+      resume:     with ``checkpoint_dir``, skip chunks whose saved
+                  fingerprint matches this sweep — a killed-and-resumed
+                  sweep reproduces the uninterrupted run's results
+                  bitwise. Mismatched, truncated, corrupt, or
+                  shape-drifted checkpoints are skipped with a warning
+                  naming the chunk and reason, never reused.
+      retry_policy: a :class:`repro.sim.dispatch.RetryPolicy` governing
+                  per-chunk retries and backoff on the checkpointed path
+                  (default: 2 attempts, the historical retry-once).
+      workers:    run the sweep through the fault-tolerant multi-process
+                  dispatcher instead of in-process: ``workers`` N worker
+                  processes claim chunk tasks from a filesystem work
+                  queue under ``queue_dir`` via atomic-rename leases with
+                  heartbeat renewal; dead/stalled workers are detected
+                  and their chunks re-dispatched with backoff under
+                  ``retry_policy``. See
+                  :func:`repro.sim.dispatch.run_dispatched` (which this
+                  delegates to) for the full contract.
+      queue_dir:  the work-queue directory for ``workers=`` (shared-dir
+                  multi-host by construction; default: a temp dir, or
+                  ``{checkpoint_dir}/.queue`` when ``checkpoint_dir`` is
+                  set).
+      xla_cache_dir: persistent XLA compile-cache directory shared by the
+                  dispatcher's worker processes (default:
+                  ``{queue_dir}/xla_cache``) — a warm cache makes a fresh
+                  worker load the chunk program instead of recompiling.
+
+    Returns:
+      ``BatchSimOutputs`` for ``reduce="trace"`` — with the extra
+      attributes ``plan``/``devices_used``/``host_bytes``/``coverage``
+      attached — or a :class:`SweepSummary` for the reduced modes.
+    """
+    if workers is not None:
+        from repro.sim import dispatch
+
+        return dispatch.run_dispatched(
+            ps, cfg, seeds, reduce=reduce, warmup_frac=warmup_frac,
+            chunk_size=chunk_size, quantiles=quantiles, tau_grid=tau_grid,
+            n_devices=n_devices, checkpoint_dir=checkpoint_dir,
+            resume=resume, retry_policy=retry_policy, workers=workers,
+            queue_dir=queue_dir, xla_cache_dir=xla_cache_dir,
+        )
+
+    setup = _prepare(ps, cfg, seeds, reduce, warmup_frac, chunk_size,
+                     quantiles, tau_grid, n_devices)
+    plan = setup.plan
+
+    worker_cell: list = []
+
+    def dispatch_chunk(c):
+        # the chunk slice is rebuilt per attempt: donation may have
+        # invalidated a previous attempt's buffers. The worker resolves
+        # lazily (a fully resumed sweep never touches the jit cache) but
+        # exactly once per run.
+        if not worker_cell:
+            worker_cell.append(setup.worker())
+        p_chunk = setup.chunk_params(c)
+        with warnings.catch_warnings():
+            # CPU cannot always alias donated input pages into outputs;
+            # the donation is still honored where the backend supports it
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable"
+            )
+            return worker_cell[0](setup.keys, p_chunk)
+
+    devices_used = 0
+    failed: list[int] = []
+
+    def note_devices(out):
+        nonlocal devices_used
+        devices_used = max(
+            devices_used,
+            len(jax.tree_util.tree_leaves(out)[0].sharding.device_set),
+        )
+
+    if checkpoint_dir is None:
+        host_chunks: list[dict] = []
+        pending = None
+        for c in range(plan.n_chunks):
+            out = dispatch_chunk(c)
+            note_devices(out)
+            if pending is not None:
+                # double buffer: materialize chunk c-1 while chunk c runs
+                host_chunks.append(
+                    jax.tree_util.tree_map(np.asarray, pending)
+                )
+            pending = out
+        host_chunks.append(jax.tree_util.tree_map(np.asarray, pending))
+        return _finalize(setup, host_chunks, devices_used=devices_used)
+
+    from repro.checkpoint.ckpt import save_checkpoint
+    from repro.sim.dispatch import RetryPolicy
+
+    policy = retry_policy if retry_policy is not None else RetryPolicy()
+    fp = _setup_fingerprint(setup, seeds)
+    expected = setup.expected_shapes()
+    done = (_load_chunks(checkpoint_dir, fp, plan.n_chunks,
+                         expected=expected)
+            if resume else {})
+    telemetry: dict = {"chunks": {}}
+    by_idx: dict[int, dict] = {}
+    import time as _time
+
+    for c in range(plan.n_chunks):
+        if c in done:
+            by_idx[c] = done[c]
+            telemetry["chunks"][c] = {"attempts": 0, "resumed": True}
+            continue
+        hc = None
+        t_claim = _time.monotonic()
+        attempt = 0
+        for attempt in range(policy.max_attempts):
+            # only Exception is retried — a kill signal
+            # (KeyboardInterrupt/SystemExit) propagates, which is the
+            # preemption this path checkpoints against
+            try:
+                out = dispatch_chunk(c)
+                hc = jax.tree_util.tree_map(np.asarray, out)
+                # validate the (possibly retried) output against the
+                # worker's contract before anything is checkpointed — a
+                # retry that returned drifted shapes must not poison the
+                # checkpoint dir
+                reason = _tree_mismatch(hc, expected)
+                if reason is not None:
+                    hc = None
+                    raise RuntimeError(
+                        f"chunk result failed validation: {reason}")
+                note_devices(out)
+                break
+            except Exception as e:
+                warnings.warn(
+                    f"sweep chunk {c} dispatch failed "
+                    f"(attempt {attempt + 1}/{policy.max_attempts}): {e!r}"
+                )
+                if attempt + 1 < policy.max_attempts:
+                    delay = policy.backoff(attempt + 1, key=f"{fp}:{c}")
+                    if delay > 0:
+                        _time.sleep(delay)
+        latency = _time.monotonic() - t_claim
+        if hc is None:
+            failed.append(c)
+            by_idx[c] = _fill_chunk(expected)
+            telemetry["chunks"][c] = {
+                "attempts": policy.max_attempts, "latency_s": latency,
+            }
+            continue
+        save_checkpoint(
+            checkpoint_dir, c, dict(hc, fingerprint=_fp_array(fp)),
+            meta={"chunk": c, "attempt": attempt,
+                  "fingerprint": fp, "schema": "sweep-chunk-v1"},
+            integrity=True, atomic=True,
+        )
+        by_idx[c] = hc
+        telemetry["chunks"][c] = {
+            "attempts": attempt + 1, "latency_s": latency,
+        }
+    host_chunks = [by_idx[c] for c in range(plan.n_chunks)]
+    return _finalize(setup, host_chunks, devices_used=devices_used,
+                     failed=failed, telemetry=telemetry)

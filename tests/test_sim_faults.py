@@ -324,3 +324,76 @@ def test_fault_config_validation():
         FaultConfig(p_abort=1.5)
     with pytest.raises(ValueError):
         duty_mix(duty=0.0)
+
+
+# --------------------------------------------------------------------------
+# 5. Zipf-distributed participation weights
+# --------------------------------------------------------------------------
+
+
+def test_zipf_weights_structure():
+    from repro.configs.fg_faults import zipf_weights
+
+    w = zipf_weights(5, s=0.9)
+    assert w[0] == 1.0 and len(w) == 5
+    assert all(a > b for a, b in zip(w, w[1:]))  # strictly rank-decreasing
+    assert w[1] == pytest.approx(2.0 ** -0.9)
+    assert zipf_weights(4, s=0.0) == (1.0,) * 4  # s=0 degenerates uniform
+    with pytest.raises(ValueError):
+        zipf_weights(0)
+    with pytest.raises(ValueError):
+        zipf_weights(3, s=-0.1)
+
+
+def test_zipf_mix_classes_thread_duty():
+    from repro.configs.fg_faults import zipf_mix, zipf_weights
+    from repro.core.meanfield import _class_vectors
+
+    fc = zipf_mix(n_classes=4, s=0.9)
+    w = zipf_weights(4, s=0.9)
+    assert len(fc.classes) == 4
+    assert sum(c.frac for c in fc.classes) == pytest.approx(1.0)
+    assert all(c.frac == pytest.approx(0.25) for c in fc.classes)
+    # class duties ARE the zipf weights — the hook into the class solver
+    for c, wk in zip(fc.classes, w):
+        assert c.duty == pytest.approx(wk)
+    assert fc.classes[0].rate_off == 0.0  # head class is always-on
+    fracs, q, serves = _class_vectors(fc)
+    assert np.allclose(q, w)
+    assert np.all(serves == 1.0)
+
+
+def test_zipf_meanfield_availability_rank_ordered():
+    from repro.configs.fg_faults import zipf_mix
+
+    fc = zipf_mix(n_classes=4)
+    cs = solve_fixed_point_classes(P, CM, faults=fc, strict=True)
+    a = np.asarray(cs.a)[:, 0]
+    assert np.all(np.diff(a) < 0.0)  # heavier participation, higher a
+    assert np.all((a > 0.0) & (a <= 1.0))
+    q_bar = float(np.asarray(cs.q_bar))
+    assert q_bar == pytest.approx(
+        float(np.mean([c.duty for c in fc.classes])))
+
+
+def test_zipf_sim_vs_meanfield_spot():
+    """The sim-vs-meanfield spot check at the fig_faults operating point:
+    per-class availability from a short paper-geometry sweep must match
+    the class solver's Zipf-graded prediction within the benchmark's 15%
+    acceptance tolerance, with the class ordering exact."""
+    from repro.configs.fg_faults import zipf_mix
+    from repro.sim import sweep
+
+    fc = zipf_mix(n_classes=3)
+    p = paper_params(lam=0.05, M=1)
+    cs = solve_fixed_point_classes(p, CM, faults=fc)
+    a_model = np.asarray(cs.a)[:, 0]
+
+    cfg = SimConfig(n_slots=4000, sample_every=8, faults=fc)
+    summ = sweep.run([p], cfg, seeds=(0, 1), reduce="mean",
+                     warmup_frac=0.5)
+    a_sim = np.asarray(summ.stats["availability_c"])[0, :, 0, :].mean(axis=0)
+
+    assert np.array_equal(np.argsort(a_model), np.argsort(a_sim))
+    rel = np.abs(a_sim - a_model) / a_model
+    assert float(rel.max()) < 0.15, (a_model, a_sim)

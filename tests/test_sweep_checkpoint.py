@@ -177,3 +177,180 @@ def test_checkpoint_trace_mode(tmp_path):
                    checkpoint_dir=str(tmp_path))
     for k in ("availability", "busy_frac", "n_in_rz", "model_holders"):
         assert np.array_equal(getattr(plain, k), getattr(ck, k)), k
+
+
+# --------------------------------------------------------------------------
+# corrupt / foreign chunk files (hardened _load_chunks)
+# --------------------------------------------------------------------------
+
+
+def _chunk_files(d):
+    return sorted(glob.glob(os.path.join(str(d), "step_*.npz")))
+
+
+def test_corrupt_chunk_files_warned_and_recomputed(tmp_path):
+    """Truncated npz, garbage bytes, and a shape-drifted array must each
+    be skipped with a warning naming the chunk — then recomputed; resume
+    never crashes and never consumes a damaged file."""
+    full = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    files = _chunk_files(tmp_path)
+    assert len(files) == 3
+
+    # chunk 0: truncated mid-archive (torn write)
+    blob = open(files[0], "rb").read()
+    with open(files[0], "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    # chunk 1: pure garbage under the right name
+    with open(files[1], "wb") as f:
+        f.write(b"\xffnot-an-npz\x00" * 32)
+    # chunk 2: readable npz, wrong shape for one quantity
+    data = dict(np.load(files[2]))
+    key = next(k for k in data if k != "fingerprint")
+    data[key] = np.zeros((1, 1, 7), data[key].dtype)
+    with open(files[2], "wb") as f:
+        np.savez(f, **data)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        resumed = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path),
+                            resume=True)
+    msgs = [str(w.message) for w in rec]
+    for c in range(3):
+        assert any(f"chunk {c}" in m for m in msgs), (c, msgs)
+    assert any("unreadable or corrupt" in m for m in msgs)
+    _stats_equal(full.stats, resumed.stats)
+    assert resumed.failed_chunks == ()
+    assert resumed.coverage.all()
+
+
+def test_bitflip_caught_by_content_hash(tmp_path):
+    """A flipped payload byte that keeps the zip structure intact is
+    caught by the per-leaf sha256, not trusted as data."""
+    full = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    target = _chunk_files(tmp_path)[1]
+    data = dict(np.load(target))
+    key = next(k for k in data if k != "fingerprint")
+    arr = data[key].copy()
+    flat = arr.reshape(-1).view(np.uint8)
+    flat[len(flat) // 2] ^= 0xFF
+    data[key] = arr
+    with open(target, "wb") as f:
+        np.savez(f, **data)
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        resumed = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path),
+                            resume=True)
+    assert any("chunk 1" in str(w.message) for w in rec)
+    _stats_equal(full.stats, resumed.stats)
+
+
+# --------------------------------------------------------------------------
+# attempt metadata and RetryPolicy on the in-process path
+# --------------------------------------------------------------------------
+
+
+def test_chunk_manifest_records_attempt_and_schema(tmp_path, monkeypatch):
+    """Chunk checkpoints carry provenance: attempt number, chunk index,
+    sweep fingerprint, schema tag — and a retried chunk's file records
+    the attempt that actually produced it."""
+    from repro.checkpoint.ckpt import load_manifest
+
+    flaky = {"left": 1}
+    orig = sweep._chunk_worker
+
+    def patched(*args, **kwargs):
+        worker = orig(*args, **kwargs)
+
+        def wrapper(keys, p_chunk):
+            if flaky["left"]:
+                flaky["left"] -= 1
+                raise RuntimeError("injected transient dispatch failure")
+            return worker(keys, p_chunk)
+
+        return wrapper
+
+    monkeypatch.setattr(sweep, "_chunk_worker", patched)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        out = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    assert out.failed_chunks == ()
+
+    metas = [load_manifest(p)["meta"] for p in _chunk_files(tmp_path)]
+    assert [m["chunk"] for m in metas] == [0, 1, 2]
+    assert all(m["schema"] == "sweep-chunk-v1" for m in metas)
+    assert all(m["fingerprint"] == metas[0]["fingerprint"] for m in metas)
+    # chunk 0 succeeded on its retry — the file says so
+    assert metas[0]["attempt"] == 1
+    assert metas[1]["attempt"] == 0 and metas[2]["attempt"] == 0
+    # telemetry mirrors the on-disk attempt counts (1-based totals)
+    assert out.telemetry["chunks"][0]["attempts"] == 2
+    assert out.telemetry["chunks"][1]["attempts"] == 1
+
+
+def test_retry_policy_governs_in_process_attempts(tmp_path, monkeypatch):
+    """The historical hardcoded retry-once is a RetryPolicy default:
+    max_attempts=3 survives two failures, and the fingerprinted retry
+    output is validated like any first attempt."""
+    from repro.sim.dispatch import RetryPolicy
+
+    plain = sweep.run(PS, CFG, **KW)
+    flaky = {"left": 2}
+    orig = sweep._chunk_worker
+
+    def patched(*args, **kwargs):
+        worker = orig(*args, **kwargs)
+
+        def wrapper(keys, p_chunk):
+            if flaky["left"]:
+                flaky["left"] -= 1
+                raise RuntimeError("injected transient dispatch failure")
+            return worker(keys, p_chunk)
+
+        return wrapper
+
+    monkeypatch.setattr(sweep, "_chunk_worker", patched)
+    pol = RetryPolicy(max_attempts=3, backoff_base_s=0.01)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path),
+                        retry_policy=pol)
+    assert any("attempt 2/3" in str(w.message) for w in rec)
+    assert out.failed_chunks == ()
+    _stats_equal(plain.stats, out.stats)
+    assert out.telemetry["chunks"][0]["attempts"] == 3
+
+
+def test_retry_output_shape_validated(tmp_path, monkeypatch):
+    """A retry that returns the wrong schema is a *failed* attempt — it
+    must never be fingerprinted into a checkpoint file (satellite: the
+    retry path validates its output like the first attempt)."""
+    state = {"n": 0}
+    orig = sweep._chunk_worker
+
+    def patched(*args, **kwargs):
+        worker = orig(*args, **kwargs)
+
+        def wrapper(keys, p_chunk):
+            state["n"] += 1
+            if state["n"] == 1:
+                raise RuntimeError("injected transient dispatch failure")
+            if state["n"] == 2:  # the retry: schema-drifted output
+                return {"availability": np.zeros((1, 1))}
+            return worker(keys, p_chunk)
+
+        return wrapper
+
+    monkeypatch.setattr(sweep, "_chunk_worker", patched)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        out = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path))
+    assert out.failed_chunks == (0,)
+    assert list(out.coverage) == [False, True, True]
+    msgs = " ".join(str(w.message) for w in rec)
+    assert "missing" in msgs or "shape" in msgs
+    # nothing schema-drifted reached disk: the surviving files restore
+    resumed = sweep.run(PS, CFG, **KW, checkpoint_dir=str(tmp_path),
+                        resume=True)
+    assert resumed.failed_chunks == ()
+    _stats_equal(sweep.run(PS, CFG, **KW).stats, resumed.stats)
