@@ -24,7 +24,8 @@ os.environ.setdefault(
 
 from benchmarks import (  # noqa: E402
     fig1_availability, fig2_capacity, fig3_stability, fig4_staleness,
-    fig_convergence, fig_faults, fig_multizone, gossip_throughput,
+    fig_convergence, fig_faults, fig_learning, fig_multizone,
+    gossip_throughput,
     roofline_table,
     sim_engine,
 )
@@ -36,6 +37,7 @@ BENCHES = {
     "fig4": fig4_staleness.main,
     "fig_convergence": fig_convergence.main,
     "fig_faults": fig_faults.main,
+    "fig_learning": fig_learning.main,
     "fig_multizone": fig_multizone.main,
     "gossip": gossip_throughput.main,
     "roofline": roofline_table.main,

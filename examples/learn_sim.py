@@ -1,0 +1,53 @@
+"""Gossip Learning end-to-end on the mobility simulator.
+
+Attaches a real logistic-regression replica to every simulated node
+(``repro.sim.learn``): D2D deliveries merge parameter vectors with the
+paper's weighted average, training completions take local SGD steps on a
+synthetic teacher stream, churn resets replicas. Prints the population /
+holder test-accuracy trajectory and the protocol's bitwise invariance to
+carrying models.
+
+    PYTHONPATH=src python examples/learn_sim.py [--policy obs_count]
+"""
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.configs.fg_learn import logreg_task
+from repro.configs.fg_paper import paper_params
+from repro.sim.engine import SimConfig, simulate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--policy", default="obs_count",
+                    choices=("uniform", "obs_count", "staleness"))
+    ap.add_argument("--slots", type=int, default=2400)
+    args = ap.parse_args()
+
+    p = paper_params(lam=0.05, Lam=10.0, M=1)
+    lc = logreg_task(merge_policy=args.policy)
+    cfg = SimConfig(n_nodes=80, area_side=120.0, rz_radius=60.0,
+                    n_slots=args.slots, sample_every=8, learn=lc)
+    print(f"N={cfg.n_nodes} nodes, {args.slots} slots, "
+          f"model dim={lc.param_dim}, policy={lc.merge_policy}")
+
+    out = simulate(p, cfg, seed=0)
+    idx = np.linspace(0, len(out.t) - 1, 8).astype(int)
+    print("\n   t[s]   acc(all)  acc(holders)  mean obs   theta var")
+    for i in idx:
+        print(f"  {out.t[i]:6.0f}   {out.test_acc[i]:.4f}    "
+              f"{out.test_acc_holders[i]:.4f}       "
+              f"{out.learn_obs[i]:9.1f}  {out.theta_var[i]:.2e}")
+
+    # the learning layer never touches the protocol's PRNG chain: the
+    # protocol traces are bitwise those of a learning-free run
+    base = simulate(p, dataclasses.replace(cfg, learn=None), seed=0)
+    same = np.array_equal(out.availability, base.availability)
+    print(f"\nprotocol bitwise identical with learning on/off: {same}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,9 @@
 #                   (tests/test_sim_convergence.py: the availability
 #                   error vs the Lemma 1-3 prediction must shrink from
 #                   the paper-scale N to a cells-backend large-N point).
+#                   Also runs the full fig_learning sweep and fails
+#                   unless the measured Gossip-Learning accuracy ordering
+#                   agrees with the Theorem 2 capacity ordering.
 #   --bench-smoke   additionally gate on sweep performance: run the quick
 #                   sim_engine bench and fail if (a) the same-run
 #                   reduced-sweep/serial speedup ratio regressed more than 30%
@@ -131,6 +134,33 @@ for k in a.files:
 print("1- and 2-device faulted sweeps bitwise-identical")
 EOF
 
+echo
+echo "=== learning-smoke: end-to-end Gossip Learning on the sim substrate ==="
+# The learning layer (repro.sim.learn) must (a) actually learn — holder
+# test accuracy after warmup beats the untrained start — and (b) be a
+# pure function of (seed, LearnConfig): two identical runs bitwise equal.
+python - <<'EOF'
+import numpy as np
+
+from repro.configs.fg_learn import logreg_task
+from repro.configs.fg_paper import paper_params
+from repro.sim import SimConfig, sweep
+
+cfg = SimConfig(n_nodes=48, area_side=100.0, rz_radius=50.0, n_slots=480,
+                sample_every=8, k_obs=32, learn=logreg_task())
+p = paper_params(lam=0.05, Lam=10.0, M=1)
+runs = [sweep.run([p], cfg, seeds=(0,), reduce="trace") for _ in range(2)]
+for k in ("test_acc", "test_acc_holders", "learn_obs", "theta_var",
+          "availability"):
+    a, b = np.asarray(getattr(runs[0], k)), np.asarray(getattr(runs[1], k))
+    assert np.array_equal(a, b), f"non-deterministic learning trace: {k}"
+acc = np.asarray(runs[0].test_acc)[0, 0]
+early, late = float(np.mean(acc[:3])), float(np.mean(acc[-3:]))
+assert late > early + 0.05, f"no learning: acc {early:.3f} -> {late:.3f}"
+print(f"learning smoke OK: acc {early:.3f} -> {late:.3f}, "
+      "repeated runs bitwise-identical")
+EOF
+
 if [ "$CHAOS_SMOKE" = "1" ]; then
   echo
   echo "=== chaos-smoke: dispatched sweep under kill + hang ==="
@@ -190,6 +220,18 @@ fi
 echo
 echo "=== smoke: batched simulation engine (quick) ==="
 python -m benchmarks.run --quick --only sim_engine
+
+if [ "$NIGHTLY" = "1" ]; then
+  echo
+  echo "=== nightly: Gossip-Learning capacity-ordering sweep (fig_learning) ==="
+  # Full (lambda, T_T) x merge-policy sweep: measured holder accuracy must
+  # order the points the same way as the Theorem 2 stored-information
+  # capacity. The benchmark's derived line carries ordering_ok; gate on it.
+  python -m benchmarks.run --only fig_learning | tee /tmp/fig_learning.out
+  grep -q "ordering_ok=True" /tmp/fig_learning.out \
+    || { echo "FAIL: measured accuracy ordering disagrees with Theorem 2"; \
+         exit 1; }
+fi
 
 if [ "$BENCH_SMOKE" = "1" ]; then
   echo

@@ -1,0 +1,56 @@
+"""Preset learning configurations for the Gossip-Learning studies.
+
+The learning layer (``repro.sim.learn``) is parameterized by a
+``LearnConfig`` — model architecture, local-SGD step, synthetic-task
+shape, merge policy. These builders name the scenarios the learning
+benchmark and tests use, so a study reads ``logreg_task()`` instead of a
+raw field soup.
+
+Every builder returns a hashable ``LearnConfig`` suitable for the static
+``SimConfig.learn`` jit argument.
+"""
+
+from __future__ import annotations
+
+from repro.sim.learn import LearnConfig
+
+__all__ = ["logreg_task", "mlp_task", "policy_grid"]
+
+
+def logreg_task(
+    *,
+    merge_policy: str = "obs_count",
+    lr: float = 0.5,
+    label_noise: float = 0.5,
+    data_seed: int = 0,
+) -> LearnConfig:
+    """The workhorse: 16-feature binary logistic regression (convex, so
+    every replica descends the same landscape and merging always helps —
+    the cleanest setting for reading capacity off accuracy curves)."""
+    return LearnConfig(
+        model="logreg", n_features=16, n_classes=2, lr=lr,
+        label_noise=label_noise, merge_policy=merge_policy,
+        data_seed=data_seed,
+    )
+
+
+def mlp_task(
+    *,
+    merge_policy: str = "obs_count",
+    hidden: int = 16,
+    lr: float = 0.2,
+    label_noise: float = 0.5,
+    data_seed: int = 0,
+) -> LearnConfig:
+    """One-hidden-layer ReLU MLP on the same teacher: non-convex, shared
+    init (so coordinate-wise parameter averaging stays meaningful)."""
+    return LearnConfig(
+        model="mlp", n_features=16, n_classes=2, hidden=hidden, lr=lr,
+        label_noise=label_noise, merge_policy=merge_policy,
+        data_seed=data_seed,
+    )
+
+
+def policy_grid(policies=("uniform", "obs_count"), **kw) -> list[LearnConfig]:
+    """One ``logreg_task`` per merge policy — the benchmark's policy axis."""
+    return [logreg_task(merge_policy=p, **kw) for p in policies]

@@ -43,6 +43,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.merge import MergePolicy, merge_weights
+from repro.kernels.gossip_merge import gossip_merge
 
 try:  # jax >= 0.8 (kwarg renamed check_rep -> check_vma)
     from jax import shard_map as _shard_map
@@ -103,12 +104,22 @@ def hypercube_matchings(R: int) -> list[list[tuple[int, int]]]:
 
 
 def random_matchings(R: int, K: int, seed: int) -> list[list[tuple[int, int]]]:
-    """K random perfect pairings (R even). Faithful to random D2D contacts."""
+    """K random pairings — always involutions. Faithful to random D2D
+    contacts.
+
+    For even R every matching is a perfect pairing. For odd R one node per
+    round is necessarily unmatched; it is **self-paired** (``perm[i] = i``),
+    which the exchange treats as a no-op (``build_gossip_round`` gates
+    success on ``partner != i``) — exactly a node that found no contact
+    partner this round. The historical bug left the leftover node pointing
+    at node 0 (a non-involution: the "exchange" was asymmetric).
+    """
     rng = np.random.default_rng(seed)
     out = []
     for _ in range(K):
         order = rng.permutation(R)
-        perm = [0] * R
+        # identity init: with odd R the leftover order[-1] self-pairs
+        perm = list(range(R))
         for a, b in zip(order[0::2], order[1::2]):
             perm[a], perm[b] = b, a
         out.append([(i, perm[i]) for i in range(R)])
@@ -191,9 +202,10 @@ def build_gossip_round(
 
         def merge_leaf(x, px):
             if cfg.segments <= 1:
-                merged = (w_own * x.astype(jnp.float32)
-                          + w_peer * px.astype(jnp.float32)).astype(x.dtype)
-                return jnp.where(success, merged, x)
+                # the fused Pallas kernel (compiled on TPU; its bit-identical
+                # jnp reference elsewhere — w_peer == 1 - w_own exactly, so
+                # the reference reproduces the historical inline expression)
+                return gossip_merge(x, px, w_own, success)
             # segmented gossip: merge only chunk (round mod segments)
             flat = x.reshape(-1)
             pflat = px.reshape(-1)

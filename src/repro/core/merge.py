@@ -43,12 +43,21 @@ def merge_weights(
     if policy == "uniform":
         w_own = jnp.asarray(0.5)
     elif policy == "obs_count":
-        tot = jnp.maximum(own_count + peer_count, 1.0)
-        w_own = own_count / tot
+        # two untrained replicas (both counts zero) merge symmetrically:
+        # without the fallback w_own = 0/1 = 0 hands the peer full weight
+        tot = own_count + peer_count
+        w_own = jnp.where(
+            tot > 0.0, own_count / jnp.maximum(tot, 1.0), 0.5
+        )
     elif policy == "staleness":
-        s_own = jnp.exp(-own_age / tau_l)
-        s_peer = jnp.exp(-peer_age / tau_l)
-        w_own = s_own / jnp.maximum(s_own + s_peer, 1e-12)
+        # shift by the min age: w_own only depends on the age *gap*, and
+        # the fresher side's score is exactly 1, so two equally-ancient
+        # instances split 0.5/0.5 instead of exp underflowing both scores
+        # to zero (w_own = 0/eps = 0, an asymmetric merge of equals)
+        m = jnp.minimum(own_age, peer_age)
+        s_own = jnp.exp(-(own_age - m) / tau_l)
+        s_peer = jnp.exp(-(peer_age - m) / tau_l)
+        w_own = s_own / (s_own + s_peer)
     else:
         raise ValueError(f"unknown merge policy {policy!r}")
     return w_own, 1.0 - w_own

@@ -8,6 +8,24 @@ HBM (the merge is purely memory-bound: 2 reads + 1 write per element).
 
 Scalars (w_own, success) ride in SMEM via PrefetchScalarGridSpec so one
 compiled kernel serves every round's weights.
+
+Two entry points:
+
+* :func:`gossip_merge` — scalar (w_own, success) over an any-shape buffer;
+  the datacenter gossip path (``repro.core.gossip.build_gossip_round``)
+  merges whole replicas through it.
+* :func:`gossip_merge_rows` — per-row ``(N,)`` weights/success over an
+  ``(N, D)`` buffer; the sim-substrate Gossip-Learning layer
+  (``repro.sim.learn``) merges every node's parameter vector against its
+  partner's snapshot in one call.
+
+Dispatch rule (the ``kernels/contacts.py`` pattern): with
+``interpret=None`` (the default) the **compiled** kernel runs only on TPU
+backends; everywhere else the bit-identical ``jnp`` reference
+(``repro.kernels.ref.gossip_merge_ref``) runs instead. Interpret mode is
+reserved for tests, which pin the kernel against the reference bit for
+bit on padded/odd-length buffers (``tests/test_kernels.py``,
+``tests/test_sim_learn.py``).
 """
 
 from __future__ import annotations
@@ -19,9 +37,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gossip_merge"]
+__all__ = ["gossip_merge", "gossip_merge_rows"]
 
 BLK = 16 * 1024  # 64 KiB fp32 per operand block — 3 operands well under VMEM
+BLK_ROWS = 256   # rows per grid step of the per-row kernel
+LANE = 128       # TPU lane width: trailing dims pad to a multiple of this
 
 
 def _kernel(scalars_ref, own_ref, peer_ref, out_ref):
@@ -35,8 +55,7 @@ def _kernel(scalars_ref, own_ref, peer_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def gossip_merge(own, peer, w_own, success, *, interpret: bool = True):
-    """own/peer: any-shape arrays (same shape/dtype); w_own, success: scalars."""
+def _merge_pallas(own, peer, w_own, success, *, interpret: bool):
     shape = own.shape
     flat = own.reshape(-1)
     pflat = peer.reshape(-1)
@@ -66,3 +85,80 @@ def gossip_merge(own, peer, w_own, success, *, interpret: bool = True):
         interpret=interpret,
     )(scalars, flat, pflat)
     return out[:n].reshape(shape)
+
+
+def gossip_merge(own, peer, w_own, success, *, interpret: bool | None = None):
+    """``success ? w_own*own + (1-w_own)*peer : own`` (fp32 accumulate).
+
+    ``own``/``peer``: any-shape arrays (same shape/dtype); ``w_own``,
+    ``success``: scalars. ``interpret=None`` dispatches: compiled kernel
+    on TPU, the bit-identical ``jnp`` reference elsewhere; pass
+    ``True``/``False`` to force the Pallas path (tests / TPU overrides).
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _merge_pallas(own, peer, w_own, success, interpret=False)
+        from repro.kernels.ref import gossip_merge_ref
+
+        return gossip_merge_ref(
+            own, peer, jnp.asarray(w_own, jnp.float32),
+            jnp.asarray(success, jnp.float32) > 0.5,
+        )
+    return _merge_pallas(own, peer, w_own, success, interpret=interpret)
+
+
+def _rows_kernel(w_ref, s_ref, own_ref, peer_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)        # (BLK_ROWS, 1)
+    s = s_ref[...].astype(jnp.float32)        # (BLK_ROWS, 1)
+    own = own_ref[...].astype(jnp.float32)    # (BLK_ROWS, Dp)
+    peer = peer_ref[...].astype(jnp.float32)
+    merged = w * own + (1.0 - w) * peer
+    out_ref[...] = jnp.where(s > 0.5, merged, own).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _rows_pallas(own, peer, w_own, success, *, interpret: bool):
+    n, d = own.shape
+    nb = -(-n // BLK_ROWS)
+    dp = -(-d // LANE) * LANE
+    pad_n, pad_d = nb * BLK_ROWS - n, dp - d
+    if pad_n or pad_d:
+        own = jnp.pad(own, ((0, pad_n), (0, pad_d)))
+        peer = jnp.pad(peer, ((0, pad_n), (0, pad_d)))
+    w = jnp.pad(jnp.asarray(w_own, jnp.float32), (0, pad_n))[:, None]
+    s = jnp.pad(
+        jnp.asarray(success, jnp.float32), (0, pad_n)
+    )[:, None]
+
+    out = pl.pallas_call(
+        _rows_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((BLK_ROWS, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_ROWS, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_ROWS, dp), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_ROWS, dp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLK_ROWS, dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * BLK_ROWS, dp), own.dtype),
+        interpret=interpret,
+    )(w, s, own, peer)
+    return out[:n, :d]
+
+
+def gossip_merge_rows(own, peer, w_own, success, *,
+                      interpret: bool | None = None):
+    """Row-wise merge: ``out[i] = success[i] ? w[i]*own[i] + (1-w[i])*peer[i]
+    : own[i]`` in fp32 accumulation.
+
+    ``own``/``peer``: ``(N, D)``; ``w_own``: ``(N,)`` float;
+    ``success``: ``(N,)`` bool/float. Same dispatch rule as
+    :func:`gossip_merge`.
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _rows_pallas(own, peer, w_own, success, interpret=False)
+        from repro.kernels.ref import gossip_merge_rows_ref
+
+        return gossip_merge_rows_ref(own, peer, w_own, success)
+    return _rows_pallas(own, peer, w_own, success, interpret=interpret)

@@ -53,7 +53,9 @@ def ssd_op(x, dt, A, B_, C_, D, *, chunk=128, interpret=None):
 
 
 def gossip_merge_op(own_tree, peer_tree, w_own, success, *, interpret=None):
-    interpret = default_interpret() if interpret is None else interpret
+    """Leafwise fused merge. ``interpret=None`` defers to ``gossip_merge``'s
+    own backend dispatch (compiled kernel on TPU, the bit-identical jnp
+    reference elsewhere — interpret mode is reserved for tests)."""
     return jax.tree.map(
         lambda a, b: gossip_merge(a, b, w_own, success, interpret=interpret),
         own_tree, peer_tree,

@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["attention_ref", "ssd_ref", "gossip_merge_ref"]
+__all__ = ["attention_ref", "ssd_ref", "gossip_merge_ref",
+           "gossip_merge_rows_ref"]
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
@@ -61,3 +62,13 @@ def gossip_merge_ref(own, peer, w_own, success):
     merged = (w_own * own.astype(jnp.float32)
               + (1.0 - w_own) * peer.astype(jnp.float32)).astype(own.dtype)
     return jnp.where(success, merged, own)
+
+
+def gossip_merge_rows_ref(own, peer, w_own, success):
+    """Row-wise merge oracle: ``out[i] = success[i] ? w[i]*own[i] +
+    (1-w[i])*peer[i] : own[i]`` (fp32 accumulate; own/peer (N, D))."""
+    w = jnp.asarray(w_own, jnp.float32)[:, None]
+    s = jnp.asarray(success, jnp.float32)[:, None]
+    merged = (w * own.astype(jnp.float32)
+              + (1.0 - w) * peer.astype(jnp.float32))
+    return jnp.where(s > 0.5, merged, own.astype(jnp.float32)).astype(own.dtype)

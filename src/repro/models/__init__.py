@@ -1,3 +1,4 @@
+from repro.models import tiny  # noqa: F401
 from repro.models.transformer import (  # noqa: F401
     init_lm, lm_forward, lm_loss, init_cache, lm_decode_step, encoder_forward,
 )

@@ -30,6 +30,7 @@ import numpy as np
 from repro.core.meanfield import FGParams
 from repro.core.zones import ZoneSet, single_zone
 from repro.sim import cells, compute, contacts, faults, observations
+from repro.sim import learn as learning
 from repro.sim.mobility import get_mobility
 from repro.sim.state import init_sim_state
 
@@ -95,6 +96,13 @@ class SimConfig:
     faults: Any = None                   # repro.sim.faults.FaultConfig;
                                          # None or a disabled config traces
                                          # exactly the fault-free program
+    learn: Any = None                    # repro.sim.learn.LearnConfig: carry
+                                         # real per-node model parameters and
+                                         # train/merge them on the protocol's
+                                         # events; None traces exactly the
+                                         # learning-free program, and the
+                                         # protocol itself is bitwise
+                                         # unaffected either way
     overflow_mode: str = "warn"          # cells backend nbr_overflow > 0:
                                          # "warn" emits a structured
                                          # NeighborOverflowWarning post-run,
@@ -149,6 +157,11 @@ class SimOutputs:
     n_in_rz_c: np.ndarray | None = None        # (S, C)
     fault_events: np.ndarray | None = None     # (S, 3) cumulative
                                                # abort/link-fail/crash
+    # gossip-learning telemetry (enabled LearnConfig only; repro.sim.learn)
+    test_acc: np.ndarray | None = None         # (S,) population mean accuracy
+    test_acc_holders: np.ndarray | None = None # (S,) mean over in-RZ holders
+    learn_obs: np.ndarray | None = None        # (S,) mean obs count / holder
+    theta_var: np.ndarray | None = None        # (S,) mean parameter variance
 
 
 @dataclasses.dataclass
@@ -177,6 +190,10 @@ class BatchSimOutputs:
     on_frac_c: np.ndarray | None = None        # (P, R, S, C)
     n_in_rz_c: np.ndarray | None = None        # (P, R, S, C)
     fault_events: np.ndarray | None = None     # (P, R, S, 3)
+    test_acc: np.ndarray | None = None         # (P, R, S)
+    test_acc_holders: np.ndarray | None = None # (P, R, S)
+    learn_obs: np.ndarray | None = None        # (P, R, S)
+    theta_var: np.ndarray | None = None        # (P, R, S)
     plan: Any = None             # SweepPlan of the producing sweep
     devices_used: int | None = None
     host_bytes: int | None = None
@@ -214,6 +231,10 @@ class BatchSimOutputs:
             on_frac_c=_z(self.on_frac_c),
             n_in_rz_c=_z(self.n_in_rz_c),
             fault_events=_z(self.fault_events),
+            test_acc=_z(self.test_acc),
+            test_acc_holders=_z(self.test_acc_holders),
+            learn_obs=_z(self.learn_obs),
+            theta_var=_z(self.theta_var),
         )
 
 
@@ -337,6 +358,15 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             np.asarray([c.free_rider for c in fc.classes], bool)[ids]
         )
 
+    # ---- gossip-learning constants (static gate like faults: a None
+    # cfg.learn keeps every learn_on branch dead; an enabled one adds carry
+    # fields and per-slot work but never touches the engine's PRNG chain,
+    # so the *protocol* traces are bitwise identical either way) ----
+    lc = cfg.learn if (cfg.learn is not None and cfg.learn.enabled) else None
+    learn_on = lc is not None
+    if learn_on:
+        task = learning.make_task(lc)    # teacher/init/test set, hoisted
+
     def zone_member(pos, t_now):
         """(N, K) bool per-zone membership at time ``t_now``.
 
@@ -405,6 +435,15 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             tq_model, mq_model = dropped["tq_model"], dropped["mq_model"]
             serving, serv_left = dropped["serving"], dropped["serv_left"]
 
+        # ---- learning churn: a node dropping its packed protocol state
+        # also resets its model replica to the shared init ----
+        if learn_on:
+            drop = (left | crashed) if faults_on else left
+            theta, theta_cnt, theta_age = learning.reset_replicas(
+                drop, state.theta, state.theta_cnt, state.theta_age,
+                task.theta0,
+            )
+
         # ---- contact dynamics ----
         # Dense backend: the O(N²) pairwise sweep in two stages — the
         # shared part (positions/RZ only — computed once per *seed* in
@@ -458,6 +497,16 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             # free-riders receive but never serve
             delivered = faults.gate_deliveries(delivered, pidx, is_fr)
 
+        # ---- learning merge: a delivery of the learned model's instance
+        # merges the sender's connection-time parameter snapshot into the
+        # receiver (the paper's weighted-coefficient average, fused kernel)
+        if learn_on:
+            theta, theta_cnt, theta_age = learning.merge_deliveries(
+                lc, delivered[:, learning.LEARN_MODEL], pidx,
+                theta, theta_cnt, theta_age,
+                state.theta_snap, state.snap_cnt, state.snap_age, tau_l,
+            )
+
         # enqueue merge jobs for delivered instances that add information
         # (merge only when the received training set is not a subset of the
         # local one — Y of Definition 4). A received instance is NOT
@@ -494,6 +543,13 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             exch_elapsed=elapsed, exch_total=state.exch_total,
             order_seed=state.order_seed, slot_idx=slot_idx, t0=t0, T_L=T_L,
         )
+        # ---- learning snapshot: parameters are frozen alongside the
+        # protocol's snap words when a connection forms ----
+        if learn_on:
+            theta_snap, snap_cnt, snap_age = learning.snapshot_params(
+                match >= 0, theta, theta_cnt, theta_age,
+                state.theta_snap, state.snap_cnt, state.snap_age,
+            )
 
         # ---- observation generation & training enqueue ----
         obs_birth, obs_head, inc, want_train, slot_payload = (
@@ -522,6 +578,20 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             obs_birth=obs_birth,
         )
         serving = jnp.where(fin_merge | fin_train, -1, serving)
+        # ---- learning train step: a finished training job on the learned
+        # model whose observation is still in the ring (the same freshness
+        # gate apply_completions uses) takes one local SGD step ----
+        if learn_on:
+            did_train = (
+                fin_train
+                & (state.serv_model == learning.LEARN_MODEL)
+                & (obs_birth[learning.LEARN_MODEL, state.serv_slot]
+                   > -jnp.inf)
+            )
+            theta, theta_cnt, theta_age = learning.train_completions(
+                lc, task, slot_idx, did_train, theta, theta_cnt, theta_age,
+                dt,
+            )
         served = compute.pick_next_jobs(
             serving=serving, serv_left=serv_left,
             serv_model=state.serv_model, serv_mask=state.serv_mask,
@@ -539,13 +609,19 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             ]).astype(jnp.int32)
             fault_kw = dict(availw=availw,
                             fault_events=state.fault_events + events)
+        learn_kw = {}
+        if learn_on:
+            learn_kw = dict(
+                theta=theta, theta_cnt=theta_cnt, theta_age=theta_age,
+                theta_snap=theta_snap, snap_cnt=snap_cnt, snap_age=snap_age,
+            )
         new_state = state.replace(
             mob=mob, prev_close=closew, inc=inc, has_model=has_model,
             obs_birth=obs_birth, obs_head=obs_head, tq_slot=tq_slot,
             mq_mask=mq_mask, zone_prev=zonew,
             nbr_overflow=(jnp.maximum(state.nbr_overflow, ovf)
                           if use_cells else state.nbr_overflow),
-            **conn, **served, **fault_kw,
+            **conn, **served, **fault_kw, **learn_kw,
         )
         return (new_state, key), None
 
@@ -573,6 +649,11 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
                 in_rz=state.zone_prev != 0, has_model=state.has_model,
                 cls1h=cls1h, n_per_class=n_per_class,
                 fault_events=state.fault_events,
+            ))
+        if learn_on:
+            out.update(learning.learn_outputs(
+                lc, task, state.theta, state.theta_cnt,
+                has_model=state.has_model, in_rz=state.zone_prev != 0,
             ))
         return (state, key), out
 
@@ -681,6 +762,10 @@ def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
         on_frac_c=_opt("on_frac_c"),
         n_in_rz_c=_opt("n_in_rz_c"),
         fault_events=_opt("fault_events"),
+        test_acc=_opt("test_acc"),
+        test_acc_holders=_opt("test_acc_holders"),
+        learn_obs=_opt("learn_obs"),
+        theta_var=_opt("theta_var"),
     )
 
 

@@ -1,0 +1,275 @@
+"""Gossip-Learning layer: real per-node models on the simulation substrate.
+
+The engine tracks the paper's *protocol* (model ids, incorporation bits,
+queues); this layer attaches an actual parameter vector to every node and
+turns the protocol's events into learning:
+
+* **delivery** — when a D2D exchange delivers model 0's instance, the
+  receiver merges the sender's *snapshotted* parameter vector into its own
+  with a ``repro.core.merge.merge_weights`` policy (uniform / obs_count /
+  staleness), applied through the fused ``gossip_merge_rows`` kernel
+  (compiled on TPU, bit-identical jnp reference elsewhere). This is
+  gossipy's MERGE_UPDATE semantics on the sim's contact process.
+* **train completion** — when a node finishes a training job on a fresh
+  observation (``fin_train``), it takes one local SGD step
+  (``repro.optim.sgd``) on a minibatch of its synthetic stream: an
+  *observation* of the paper = ``batch`` labeled samples here.
+* **churn** — leaving the RZ union (or crash-restart) resets the replica
+  to the shared init, exactly like the packed protocol state drop.
+* **connection formation** — the parameter vector is snapshotted alongside
+  the protocol's ``snap`` words, so what a partner receives is what the
+  node held when the exchange started.
+
+The synthetic task is a fixed linear teacher: ``y = argmax(x W* + σ g)``
+over i.i.d. normal features — deterministic in ``data_seed``, shared by
+every node and scenario (only the *timing* of events differs), so learning
+curves are comparable across a (λ, T_T) sweep. Models come from
+``repro.models.tiny`` (logistic regression / tiny MLP on a flat vector).
+
+Everything is keyed off a hashable frozen :class:`LearnConfig` riding the
+static ``SimConfig.learn`` jit argument — ``learn=None`` traces exactly
+the learning-free program (no extra carry fields, no extra PRNG use).
+**The learning layer never feeds back into the protocol**: with learning
+enabled the protocol traces (availability, busy, stored, ...) stay bitwise
+identical to the ``learn=None`` run at the same seed (the layer draws its
+minibatches from its own fold_in chain, never from the engine's key), so
+the paper-validation results are unchanged by carrying models — pinned in
+``tests/test_sim_learn.py``.
+
+Telemetry (per output sample, riding the sweep reductions like the fault
+keys): ``test_acc`` (population mean test accuracy), ``test_acc_holders``
+(mean over in-RZ model holders — the paper's per-user quantity),
+``learn_obs`` (mean observations incorporated per holding node — the
+measured twin of Lemma 4's stored information), and ``theta_var`` (mean
+parameter variance across holders — the vanishing-variance diagnostic of
+decentralized averaging, PAPERS.md: arXiv 2404.04616).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.merge import merge_weights
+from repro.kernels.gossip_merge import gossip_merge_rows
+from repro.models import tiny
+from repro.optim.optimizers import sgd
+
+__all__ = ["LearnConfig", "LearnTask", "make_task", "init_fields",
+           "reset_replicas", "merge_deliveries", "snapshot_params",
+           "train_completions", "learn_outputs", "LEARN_MODEL"]
+
+#: The model id the learning layer attaches to (deliveries/training of
+#: other ids leave the parameter vectors untouched).
+LEARN_MODEL = 0
+
+#: Saturation for the observation counters. Merging *sums* the two counts
+#: (the union-of-training-sets approximation, same as the datacenter
+#: protocol's bookkeeping), which compounds roughly once per delivery —
+#: unbounded it overflows float32 on long runs and turns the obs_count
+#: weights into NaN. At the cap w_own = c/(c+p) is exactly 0.5.
+CNT_CAP = 1.0e12
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnConfig:
+    """Hashable learning-twin parameters (static via ``SimConfig.learn``).
+
+    ``merge_policy`` selects the ``repro.core.merge`` weighting; ``lr`` and
+    ``batch`` govern the local SGD step taken at each train completion;
+    ``label_noise`` is the teacher's logit noise σ (Bayes error > 0 keeps
+    accuracy trajectories informative instead of saturating); ``data_seed``
+    fixes the task (teacher, init, test set, stream) independently of the
+    simulation seed.
+    """
+
+    model: str = "logreg"         # repro.models.tiny family
+    n_features: int = 16
+    n_classes: int = 2
+    hidden: int = 16              # mlp only
+    lr: float = 0.5
+    batch: int = 8                # samples per local step (one observation)
+    n_test: int = 256             # shared held-out set
+    label_noise: float = 0.5      # teacher logit noise σ
+    merge_policy: str = "obs_count"
+    data_seed: int = 0
+
+    def __post_init__(self):
+        # delegate architecture validation (and fail at config build time)
+        self.spec  # noqa: B018
+        if self.lr <= 0.0 or self.batch < 1 or self.n_test < 1:
+            raise ValueError("need lr > 0, batch >= 1, n_test >= 1")
+        if self.label_noise < 0.0:
+            raise ValueError("label_noise must be >= 0")
+        if self.merge_policy not in ("uniform", "obs_count", "staleness"):
+            raise ValueError(
+                f"unknown merge policy {self.merge_policy!r}; known: "
+                "'uniform', 'obs_count', 'staleness'"
+            )
+
+    @property
+    def spec(self) -> tiny.TinySpec:
+        return tiny.TinySpec(
+            model=self.model, n_features=self.n_features,
+            n_classes=self.n_classes, hidden=self.hidden,
+        )
+
+    @property
+    def param_dim(self) -> int:
+        return self.spec.dim
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class LearnTask:
+    """Per-config constants hoisted out of the scan (all derived
+    deterministically from ``LearnConfig.data_seed``)."""
+
+    theta0: jnp.ndarray       # (D,) shared replica init
+    w_true: jnp.ndarray       # (F, C) linear teacher
+    x_test: jnp.ndarray       # (n_test, F)
+    y_test: jnp.ndarray       # (n_test,)
+    stream_key: jnp.ndarray   # base key of the per-slot minibatch stream
+
+
+def _labels(key, lc: LearnConfig, x, w_true):
+    """Teacher labels: ``argmax(x W* + σ g)`` (σ = 0 → noiseless)."""
+    logits = x @ w_true
+    if lc.label_noise > 0.0:
+        logits = logits + lc.label_noise * jax.random.normal(
+            key, logits.shape, jnp.float32
+        )
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def make_task(lc: LearnConfig) -> LearnTask:
+    base = jax.random.PRNGKey(lc.data_seed)
+    k_teacher, k_init, k_test, k_ytest, k_stream = jax.random.split(
+        jax.random.fold_in(base, 0x7EAC), 5
+    )
+    w_true = jax.random.normal(
+        k_teacher, (lc.n_features, lc.n_classes), jnp.float32
+    )
+    x_test = jax.random.normal(k_test, (lc.n_test, lc.n_features), jnp.float32)
+    return LearnTask(
+        theta0=tiny.init_theta(k_init, lc.spec),
+        w_true=w_true,
+        x_test=x_test,
+        y_test=_labels(k_ytest, lc, x_test, w_true),
+        stream_key=k_stream,
+    )
+
+
+def init_fields(lc: LearnConfig, n: int) -> dict:
+    """Initial learning carry: every node (and every connection snapshot)
+    starts at the shared init with zero observation count and zero age."""
+    task = make_task(lc)
+    theta = jnp.broadcast_to(task.theta0, (n, task.theta0.shape[0]))
+    zeros = jnp.zeros((n,), jnp.float32)
+    return dict(
+        theta=theta, theta_cnt=zeros, theta_age=zeros,
+        theta_snap=theta, snap_cnt=zeros, snap_age=zeros,
+    )
+
+
+def reset_replicas(drop, theta, theta_cnt, theta_age, theta0):
+    """Churn/crash: replica back to the shared init (the parameter-space
+    twin of ``faults.drop_state``). Connection snapshots are *not* reset —
+    like the protocol's ``snap`` words, they belong to the exchange."""
+    return (
+        jnp.where(drop[:, None], theta0[None, :], theta),
+        jnp.where(drop, 0.0, theta_cnt),
+        jnp.where(drop, 0.0, theta_age),
+    )
+
+
+def merge_deliveries(lc: LearnConfig, received, pidx, theta, theta_cnt,
+                     theta_age, theta_snap, snap_cnt, snap_age, tau_l):
+    """Apply the paper's merging transformation on this slot's deliveries.
+
+    ``received (N,)`` flags receivers of model ``LEARN_MODEL``; ``pidx`` is
+    the clipped partner (sender) index. The received coefficients are the
+    sender's *snapshot at connection formation* — matching the protocol,
+    which transfers ``snap``, not live state. Weights follow
+    ``lc.merge_policy``; counts add (training-set union) and ages take the
+    min (the merged instance is as fresh as its freshest input).
+    """
+    n = theta.shape[0]
+    peer_theta = theta_snap[pidx]
+    peer_cnt = snap_cnt[pidx]
+    peer_age = snap_age[pidx]
+    w_own, _ = merge_weights(
+        lc.merge_policy, theta_cnt, peer_cnt, theta_age, peer_age, tau_l
+    )
+    w_own = jnp.broadcast_to(jnp.asarray(w_own, jnp.float32), (n,))
+    theta = gossip_merge_rows(theta, peer_theta, w_own, received)
+    theta_cnt = jnp.where(
+        received, jnp.minimum(theta_cnt + peer_cnt, CNT_CAP), theta_cnt
+    )
+    theta_age = jnp.where(
+        received, jnp.minimum(theta_age, peer_age), theta_age
+    )
+    return theta, theta_cnt, theta_age
+
+
+def snapshot_params(newly, theta, theta_cnt, theta_age, theta_snap,
+                    snap_cnt, snap_age):
+    """Snapshot the parameter vector (and its merge bookkeeping) when a
+    connection forms — the learning twin of ``form_connections``'s
+    ``snap``/``snap_has`` copy."""
+    return (
+        jnp.where(newly[:, None], theta, theta_snap),
+        jnp.where(newly, theta_cnt, snap_cnt),
+        jnp.where(newly, theta_age, snap_age),
+    )
+
+
+def train_completions(lc: LearnConfig, task: LearnTask, slot_idx, did_train,
+                      theta, theta_cnt, theta_age, dt):
+    """One local SGD step per node that completed training this slot.
+
+    The minibatch is drawn from the node's synthetic stream keyed on
+    ``(data_seed, slot)`` — node ``i`` reads row ``i`` of the slot draw, so
+    the stream is deterministic and *independent of the engine's PRNG
+    chain* (the protocol stays bitwise identical with learning enabled).
+    Ages advance by ``dt`` every slot and reset on a fresh local step;
+    counts add the one incorporated observation.
+    """
+    n = theta.shape[0]
+    k_slot = jax.random.fold_in(task.stream_key, slot_idx)
+    kx, ky = jax.random.split(k_slot)
+    x = jax.random.normal(kx, (n, lc.batch, lc.n_features), jnp.float32)
+    y = _labels(ky, lc, x, task.w_true)
+    spec = lc.spec
+    grads = jax.vmap(jax.grad(lambda th, xb, yb: tiny.tiny_loss(
+        spec, th, xb, yb
+    )))(theta, x, y)
+    stepped, _ = sgd(lc.lr).update(grads, {}, theta, slot_idx)
+    theta = jnp.where(did_train[:, None], stepped, theta)
+    theta_cnt = jnp.where(did_train, theta_cnt + 1.0, theta_cnt)
+    theta_age = jnp.where(did_train, 0.0, theta_age + dt)
+    return theta, theta_cnt, theta_age
+
+
+def learn_outputs(lc: LearnConfig, task: LearnTask, theta, theta_cnt,
+                  has_model, in_rz) -> dict:
+    """Per-sample learning telemetry (see the module docstring)."""
+    acc = tiny.tiny_accuracy(lc.spec, theta, task.x_test, task.y_test)  # (N,)
+    hold = has_model[:, LEARN_MODEL] & in_rz
+    w = hold.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    mu = jnp.sum(w[:, None] * theta, axis=0) / denom                 # (D,)
+    var = jnp.sum(
+        w[:, None] * jnp.square(theta - mu[None, :]), axis=0
+    ) / denom
+    return dict(
+        test_acc=jnp.mean(acc),
+        test_acc_holders=jnp.sum(w * acc) / denom,
+        learn_obs=jnp.sum(w * theta_cnt) / denom,
+        theta_var=jnp.mean(var),
+    )

@@ -98,6 +98,14 @@ class SimState:
                                  # on/off accessibility word
     fault_events: Any = None     # (3,) int32 cumulative abort / link-fail
                                  # / crash node-event counters
+    # --- gossip-learning carry (None unless cfg.learn is enabled; see
+    # repro.sim.learn — D = flat parameter dim of the learned model) ---
+    theta: Any = None            # (N, D) live replica parameters
+    theta_cnt: Any = None        # (N,) observations incorporated
+    theta_age: Any = None        # (N,) time since last fresh local step
+    theta_snap: Any = None       # (N, D) parameters at connection formation
+    snap_cnt: Any = None         # (N,) count at connection formation
+    snap_age: Any = None         # (N,) age at connection formation
 
     def replace(self, **kw) -> "SimState":
         return dataclasses.replace(self, **kw)
@@ -153,6 +161,7 @@ def init_sim_state(mob_state, zone0: jnp.ndarray, *, M: int, cfg) -> SimState:
         zone_prev=zone0,
         nbr_overflow=jnp.zeros((), dtype=jnp.int32),
         **_fault_fields(cfg, n),
+        **_learn_fields(cfg, n),
     )
 
 
@@ -169,3 +178,15 @@ def _fault_fields(cfg, n: int) -> dict:
         availw=faults.init_avail(n),
         fault_events=jnp.zeros((faults.N_EVENTS,), dtype=jnp.int32),
     )
+
+
+def _learn_fields(cfg, n: int) -> dict:
+    """Initial gossip-learning carry: empty (``None`` leaves — absent from
+    the pytree) unless ``cfg.learn`` is an enabled
+    ``repro.sim.learn.LearnConfig``."""
+    lc = getattr(cfg, "learn", None)
+    if lc is None or not lc.enabled:
+        return {}
+    from repro.sim import learn
+
+    return learn.init_fields(lc, n)

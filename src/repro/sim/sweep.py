@@ -92,6 +92,11 @@ _LIGHT_KEYS = ("availability", "busy_frac", "stored", "model_holders",
 #: its final sample, like ``nbr_overflow``.
 _FAULT_KEYS = ("availability_c", "on_frac_c", "n_in_rz_c")
 
+#: Gossip-learning telemetry (present only when ``cfg.learn`` is an
+#: enabled LearnConfig; all per-sample scalars). Reduced like the light
+#: keys on every reduction mode.
+_LEARN_KEYS = ("test_acc", "test_acc_holders", "learn_obs", "theta_var")
+
 
 @dataclasses.dataclass(frozen=True)
 class SweepPlan:
@@ -219,7 +224,9 @@ class SweepSummary:
 
 def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
     """Per-run on-device reduction over the sample axis (axis 2)."""
-    keys = _LIGHT_KEYS + tuple(k for k in _FAULT_KEYS if k in outs)
+    keys = _LIGHT_KEYS + tuple(
+        k for k in _FAULT_KEYS + _LEARN_KEYS if k in outs
+    )
     if reduce == "o_tau":
         from repro.sim.observations import o_tau_histograms
 
@@ -585,6 +592,10 @@ def _finalize(setup: _SweepSetup, host_chunks: list, *, devices_used: int,
             on_frac_c=outs.get("on_frac_c"),
             n_in_rz_c=outs.get("n_in_rz_c"),
             fault_events=outs.get("fault_events"),
+            test_acc=outs.get("test_acc"),
+            test_acc_holders=outs.get("test_acc_holders"),
+            learn_obs=outs.get("learn_obs"),
+            theta_var=outs.get("theta_var"),
             plan=plan, devices_used=devices_used, host_bytes=host_bytes,
             failed_chunks=failed, coverage=coverage,
             quarantined=quarantined, telemetry=telemetry,

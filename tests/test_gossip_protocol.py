@@ -181,3 +181,42 @@ def test_gossip_training_beats_no_communication():
         print("gossip err", err_gossip, "isolated err", err_iso)
         assert err_gossip < 0.5 * err_iso
     """)
+
+
+def test_odd_matchings_are_involutions_with_self_pair():
+    """Regression: odd-R random matchings used to point the leftover node
+    at node 0 (a non-involution — node 0 disagreed about its partner).
+    Now the leftover self-pairs, which the round treats as 'no contact'."""
+    from repro.core.gossip import random_matchings
+    for m in random_matchings(9, 6, 3):
+        perm = {s: d for s, d in m}
+        assert len(perm) == 9
+        self_paired = [s for s, d in m if s == d]
+        assert len(self_paired) == 1          # exactly one leftover
+        for s, d in m:
+            assert perm[d] == s, "pairing must be symmetric"
+
+
+def test_zero_count_obs_merge_is_symmetric_average():
+    """Regression (obs_count zero-count fallback): two never-trained
+    replicas must merge 0.5/0.5 — the old w_own = 0/1 = 0 replaced the
+    receiving replica with its peer's wholesale."""
+    _run("""
+        params = {"w": put(jnp.arange(R, dtype=jnp.float32)[:, None] *
+                           jnp.ones((1, 4)), P("data", None))}
+        default = jax.tree.map(jnp.zeros_like, params)
+        specs = {"w": P("data", None)}
+        cfg = GossipConfig(axis_names=("data",), matching="hypercube",
+                           merge_policy="obs_count")
+        fn, _ = build_gossip_round(mesh, specs, cfg)
+        # all counts zero: the obs_count weights must fall back to 0.5
+        st = jax.tree.map(lambda x: put(x, P("data")), init_gossip_state(R))
+        w0 = np.asarray(params["w"])
+        with use_mesh(mesh):
+            params, st = fn(params, st, default, 0)
+        w = np.asarray(params["w"])
+        # round 0 of the hypercube pairs i <-> i^1: exact 0.5/0.5 average
+        pair = w0[np.arange(R) ^ 1]
+        np.testing.assert_allclose(w, 0.5 * w0 + 0.5 * pair, atol=1e-6)
+        print("zero-count merge OK")
+    """)

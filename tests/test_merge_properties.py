@@ -51,3 +51,16 @@ def test_merge_idempotent_on_equal_instances():
     a = {"w": jnp.arange(8, dtype=jnp.float32)}
     out = merge_pytrees(a, a, jnp.asarray(0.37), jnp.asarray(0.63))
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(a["w"]), rtol=1e-6)
+
+
+@given(c=finite, a=finite)
+@settings(max_examples=60, deadline=None)
+def test_weights_symmetric_at_equal_inputs(c, a):
+    """Equal instances split exactly 0.5/0.5 under every policy — including
+    the both-counts-zero corner the obs_count fallback regression fixed
+    (w_own used to come out 0/1 = 0 there)."""
+    for policy in ("uniform", "obs_count", "staleness"):
+        w1, w2 = merge_weights(policy, jnp.asarray(c), jnp.asarray(c),
+                               jnp.asarray(a), jnp.asarray(a), tau_l=300.0)
+        assert abs(float(w1) - 0.5) < 1e-5, policy
+        assert abs(float(w1 + w2) - 1.0) < 1e-5, policy

@@ -1,0 +1,236 @@
+"""Gossip-Learning layer tests: the dormant merge/gossip stack fixes and
+the end-to-end learning loop on the sim substrate (ISSUE 9).
+
+Covers the satellites —
+
+* ``merge_weights("obs_count")`` zero-count regression (two untrained
+  replicas merge 0.5/0.5, not 0/1);
+* ``gossip_merge`` (interpret oracle) bit-equality against
+  ``merge_pytrees`` on padded and odd-length buffers, and the backend
+  dispatch default returning the jnp reference off-TPU;
+* the per-row ``gossip_merge_rows`` kernel against its reference —
+
+and the tentpole: learning enabled adds carry fields and telemetry
+without perturbing the protocol bitwise, accuracy improves over the run,
+both merge policies execute, the telemetry rides the sweep reductions,
+and chunked checkpoint/resume stays bitwise with learning on.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.fg_learn import logreg_task, mlp_task
+from repro.configs.fg_paper import paper_params
+from repro.core.merge import merge_pytrees, merge_weights
+from repro.kernels.gossip_merge import gossip_merge, gossip_merge_rows
+from repro.kernels.ref import gossip_merge_ref, gossip_merge_rows_ref
+from repro.sim import SimConfig, sweep
+from repro.sim.engine import simulate
+from repro.sim.learn import LearnConfig, make_task
+from repro.models import tiny
+
+
+# ---------------------------------------------------------------------------
+# satellite: obs_count zero-count fallback
+# ---------------------------------------------------------------------------
+
+def test_obs_count_zero_counts_merge_symmetrically():
+    """Regression: both counts zero used to give w_own = 0/1 = 0 — the
+    peer's untrained replica replaced ours wholesale."""
+    z = jnp.asarray(0.0)
+    w_own, w_peer = merge_weights("obs_count", z, z, z, z, tau_l=300.0)
+    assert float(w_own) == pytest.approx(0.5)
+    assert float(w_peer) == pytest.approx(0.5)
+
+
+def test_obs_count_zero_against_trained_peer():
+    """One-sided zero still hands the trained side its full weight."""
+    w_own, _ = merge_weights(
+        "obs_count", jnp.asarray(0.0), jnp.asarray(5.0),
+        jnp.asarray(0.0), jnp.asarray(0.0), tau_l=300.0)
+    assert float(w_own) == pytest.approx(0.0)
+
+
+@pytest.mark.parametrize("policy", ["uniform", "obs_count", "staleness"])
+def test_weights_symmetric_at_equal_inputs(policy):
+    """Equal inputs (including the all-zero corner) must split 0.5/0.5."""
+    for c, a in [(0.0, 0.0), (3.0, 7.0), (100.0, 0.5)]:
+        w_own, w_peer = merge_weights(
+            policy, jnp.asarray(c), jnp.asarray(c),
+            jnp.asarray(a), jnp.asarray(a), tau_l=300.0)
+        assert float(w_own) == pytest.approx(0.5, abs=1e-6)
+        assert float(w_own + w_peer) == pytest.approx(1.0, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# satellite: kernel dispatch + bit-equality oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [17, 128, 2 * 16 * 1024 + 7])
+def test_gossip_merge_interpret_matches_merge_pytrees(n):
+    """The kernel (interpret oracle) is bitwise ``merge_pytrees`` at
+    w_peer = 1 - w_own, on odd and pad-requiring lengths alike. Both sides
+    run under jit: XLA fuses mul+add to an FMA inside compiled programs,
+    so comparing a compiled kernel against *eager* ops would chase a 1-ULP
+    compilation-regime artifact, not a kernel property."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n))
+    a = jax.random.normal(k1, (n,), jnp.float32)
+    b = jax.random.normal(k2, (n,), jnp.float32)
+    w = jnp.asarray(0.37, jnp.float32)
+    out = gossip_merge(a, b, w, jnp.asarray(True), interpret=True)
+    ref = jax.jit(merge_pytrees)(a, b, w, 1.0 - w)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # failed transfer: own comes back untouched
+    out = gossip_merge(a, b, w, jnp.asarray(False), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(a))
+
+
+def test_gossip_merge_default_dispatch_off_tpu_is_reference():
+    """interpret=None must route to the jnp reference off-TPU (the old
+    default ran the interpreter — orders of magnitude slower and never
+    the compiled path's semantics)."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("off-TPU dispatch test")
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (501,), jnp.float32)
+    b = jax.random.normal(k2, (501,), jnp.float32)
+    w = jnp.asarray(0.25, jnp.float32)
+    out = gossip_merge(a, b, w, jnp.asarray(True))
+    ref = gossip_merge_ref(a, b, w, jnp.asarray(True))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("shape", [(5, 33), (256, 128), (300, 257)])
+def test_gossip_merge_rows_matches_reference(shape):
+    n, d = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(d), 3)
+    own = jax.random.normal(k1, (n, d), jnp.float32)
+    peer = jax.random.normal(k2, (n, d), jnp.float32)
+    w = jax.random.uniform(k3, (n,), jnp.float32)
+    s = (jnp.arange(n) % 3) != 0
+    # jit the reference: same compilation regime as the kernel (see above)
+    ref = jax.jit(gossip_merge_rows_ref)(own, peer, w, s)
+    out_i = gossip_merge_rows(own, peer, w, s, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(ref))
+    if jax.default_backend() != "tpu":
+        out = gossip_merge_rows(own, peer, w, s)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(gossip_merge_rows_ref(own, peer, w, s))
+        )
+    # unmerged rows bitwise untouched
+    np.testing.assert_array_equal(
+        np.asarray(out_i)[~np.asarray(s)], np.asarray(own)[~np.asarray(s)])
+
+
+# ---------------------------------------------------------------------------
+# tentpole: learning on the sim substrate
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    base = dict(n_nodes=48, area_side=100.0, rz_radius=50.0, n_slots=480,
+                sample_every=8, k_obs=32)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def _params():
+    return paper_params(lam=0.05, Lam=10.0, M=1)
+
+
+@pytest.fixture(scope="module")
+def learn_run():
+    cfg = _cfg(learn=logreg_task())
+    return simulate(_params(), cfg, seed=0), cfg
+
+
+def test_learn_disabled_has_no_fields():
+    out = simulate(_params(), _cfg(), seed=0)
+    assert out.test_acc is None
+    assert out.test_acc_holders is None
+    assert out.learn_obs is None
+    assert out.theta_var is None
+
+
+def test_protocol_bitwise_invariant_under_learning(learn_run):
+    out, cfg = learn_run
+    base = simulate(_params(), dataclasses.replace(cfg, learn=None), seed=0)
+    for k in ("availability", "busy_frac", "stored_info", "model_holders",
+              "n_in_rz", "obs_birth"):
+        np.testing.assert_array_equal(
+            getattr(out, k), getattr(base, k), err_msg=k)
+
+
+def test_accuracy_improves_over_run(learn_run):
+    out, _ = learn_run
+    early = float(np.mean(out.test_acc[:3]))
+    late = float(np.mean(out.test_acc[-3:]))
+    assert late > early + 0.05, (early, late)
+    # holders are at least as good as the population (they merged/trained)
+    assert float(np.mean(out.test_acc_holders[-3:])) >= late - 1e-6
+
+
+def test_learning_is_deterministic(learn_run):
+    out, cfg = learn_run
+    again = simulate(_params(), cfg, seed=0)
+    np.testing.assert_array_equal(out.test_acc, again.test_acc)
+    np.testing.assert_array_equal(out.theta_var, again.theta_var)
+
+
+@pytest.mark.parametrize("lc", [
+    logreg_task(merge_policy="uniform"),
+    mlp_task(),
+], ids=["uniform-logreg", "obs_count-mlp"])
+def test_policies_and_models_run(lc):
+    out = simulate(_params(), _cfg(n_slots=320, learn=lc), seed=1)
+    assert np.all(np.isfinite(out.test_acc))
+    # observations were incorporated (training + merging happened)
+    assert float(out.learn_obs[-1]) > 0.0
+
+
+def test_learn_telemetry_rides_sweep_reduction():
+    cfg = _cfg(n_slots=320, learn=logreg_task())
+    summ = sweep.run([_params()], cfg, seeds=(0, 1), reduce="mean",
+                     warmup_frac=0.5)
+    for k in ("test_acc", "test_acc_holders", "learn_obs", "theta_var"):
+        assert k in summ.stats and k + "_std" in summ.stats, k
+        assert summ.stats[k].shape == (1, 2)
+        assert np.all(np.isfinite(summ.stats[k]))
+
+
+def test_learn_sweep_checkpoint_resume_bitwise(tmp_path):
+    ps = [_params(), paper_params(lam=0.02, Lam=10.0, M=1)]
+    cfg = _cfg(n_slots=320, learn=logreg_task())
+    ck = str(tmp_path / "ck")
+    s1 = sweep.run(ps, cfg, seeds=(0,), reduce="mean", chunk_size=1,
+                   checkpoint_dir=ck)
+    s2 = sweep.run(ps, cfg, seeds=(0,), reduce="mean", chunk_size=1,
+                   checkpoint_dir=ck, resume=True)
+    assert all(v.get("resumed") for v in s2.telemetry["chunks"].values())
+    for k in s1.stats:
+        np.testing.assert_array_equal(s1.stats[k], s2.stats[k], err_msg=k)
+
+
+def test_learn_config_validation():
+    with pytest.raises(ValueError):
+        LearnConfig(merge_policy="nope")
+    with pytest.raises(ValueError):
+        LearnConfig(lr=0.0)
+    with pytest.raises(ValueError):
+        LearnConfig(model="cnn")
+
+
+def test_tiny_model_shapes_and_task_determinism():
+    lc = logreg_task()
+    spec = lc.spec
+    assert spec.dim == 16 * 2 + 2
+    t1, t2 = make_task(lc), make_task(lc)
+    np.testing.assert_array_equal(t1.x_test, t2.x_test)
+    np.testing.assert_array_equal(t1.y_test, t2.y_test)
+    # batched accuracy broadcasts over leading axes
+    theta = jnp.zeros((7, spec.dim), jnp.float32)
+    acc = tiny.tiny_accuracy(spec, theta, t1.x_test, t1.y_test)
+    assert acc.shape == (7,)
