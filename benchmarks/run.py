@@ -24,7 +24,8 @@ os.environ.setdefault(
 
 from benchmarks import (  # noqa: E402
     fig1_availability, fig2_capacity, fig3_stability, fig4_staleness,
-    fig_convergence, fig_faults, fig_learning, fig_multizone,
+    fig_adversarial, fig_convergence, fig_faults, fig_learning,
+    fig_multizone,
     gossip_throughput,
     roofline_table,
     sim_engine,
@@ -35,6 +36,7 @@ BENCHES = {
     "fig2": fig2_capacity.main,
     "fig3": fig3_stability.main,
     "fig4": fig4_staleness.main,
+    "fig_adversarial": fig_adversarial.main,
     "fig_convergence": fig_convergence.main,
     "fig_faults": fig_faults.main,
     "fig_learning": fig_learning.main,

@@ -18,9 +18,19 @@
 # regressions (tests silently dropping out of a lane) are visible in
 # the log diff.
 #
-# Usage:  bash scripts/ci.sh [--bench-smoke] [--chaos-smoke] [--nightly]
+# Usage:  bash scripts/ci.sh [--bench-smoke] [--chaos-smoke]
+#                            [--adversarial-smoke] [--nightly]
 #                            [extra pytest args...]
 #
+#   --adversarial-smoke  gate the Byzantine layer's two invariants:
+#                   (a) a zero-rate adversarial config (honest classes,
+#                   all-off defense knobs) is bitwise identical to
+#                   faults=None/defense=None on BOTH contact backends
+#                   (dense and cells) across every protocol and learning
+#                   trace, and (b) at the 10% amplified-sign-flip preset
+#                   the calibrated clipped defense recovers >= 90% of the
+#                   clean holder accuracy while the undefended run
+#                   degrades below it.
 #   --chaos-smoke   gate the fault-tolerant dispatcher's core invariant:
 #                   run a small sweep through the multi-process work
 #                   queue under an injected chaos schedule (one worker
@@ -62,14 +72,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 BENCH_SMOKE=0
 CHAOS_SMOKE=0
+ADV_SMOKE=0
 NIGHTLY=0
 ARGS=()
 for a in "$@"; do
   case "$a" in
-    --bench-smoke) BENCH_SMOKE=1 ;;
-    --chaos-smoke) CHAOS_SMOKE=1 ;;
-    --nightly)     NIGHTLY=1 ;;
-    *)             ARGS+=("$a") ;;
+    --bench-smoke)       BENCH_SMOKE=1 ;;
+    --chaos-smoke)       CHAOS_SMOKE=1 ;;
+    --adversarial-smoke) ADV_SMOKE=1 ;;
+    --nightly)           NIGHTLY=1 ;;
+    *)                   ARGS+=("$a") ;;
   esac
 done
 
@@ -214,6 +226,91 @@ print(f"devices={dc}: chaos (kill+hang) recovered bitwise, "
       f"{tel['respawns']} workers respawned")
 EOF
   done
+  echo "OK"
+fi
+
+if [ "$ADV_SMOKE" = "1" ]; then
+  echo
+  echo "=== adversarial-smoke: zero-rate bitwise + defended recovery ==="
+  # (a) A config that *names* the Byzantine machinery but arms none of it
+  # (honest classes, every defense knob at its off default) must trace
+  # the exact same program as faults=None/defense=None — gated on both
+  # contact backends so neither merge path pays for the feature.
+  python - <<'EOF'
+import dataclasses
+
+import numpy as np
+
+from repro.configs.fg_adversarial import honest
+from repro.configs.fg_learn import logreg_task
+from repro.configs.fg_paper import paper_params
+from repro.core.merge import DefenseConfig
+from repro.sim import SimConfig, sweep
+
+p = paper_params(lam=0.05, Lam=10.0, M=1)
+kw = dict(n_nodes=48, area_side=100.0, rz_radius=50.0, n_slots=240,
+          sample_every=8, k_obs=32)
+keys = ("availability", "busy_frac", "stored_info", "n_in_rz",
+        "test_acc", "test_acc_holders", "learn_obs", "theta_var",
+        "merge_stats")
+for backend in ("dense", "cells"):
+    base_cfg = SimConfig(learn=logreg_task(), contact_backend=backend,
+                         **kw)
+    zero_cfg = SimConfig(
+        learn=dataclasses.replace(logreg_task(), defense=DefenseConfig()),
+        faults=honest(), contact_backend=backend, **kw)
+    base = sweep.run([p], base_cfg, seeds=(0,), reduce="trace")
+    zero = sweep.run([p], zero_cfg, seeds=(0,), reduce="trace")
+    for k in keys:
+        a, b = np.asarray(getattr(base, k)), np.asarray(getattr(zero, k))
+        assert np.array_equal(a, b), \
+            f"zero-rate adversarial config diverged ({backend}): {k}"
+    assert zero.poisoned_frac is None, \
+        "honest config must not carry contamination telemetry"
+    print(f"backend={backend}: zero-rate adversarial bitwise-identical "
+          "to faults=None/defense=None")
+EOF
+
+  # (b) The calibrated clipped defense must hold >= 90% of the clean
+  # holder accuracy at the 10% amplified-sign-flip preset (and the
+  # undefended run must actually degrade — otherwise the gate is vacuous).
+  python - <<'EOF'
+import dataclasses
+
+import numpy as np
+
+from repro.configs.fg_adversarial import robust_defense, signflip
+from repro.configs.fg_learn import logreg_task
+from repro.configs.fg_paper import paper_params
+from repro.sim import SimConfig, sweep
+from repro.sim.learn import MS_ATTEMPT_POISON, MS_DISTREJ_POISON
+
+p = paper_params(lam=0.05, Lam=10.0, M=1)
+kw = dict(n_nodes=48, area_side=100.0, rz_radius=50.0, n_slots=960,
+          sample_every=8, k_obs=32)
+
+
+def acc_of(cfg):
+    out = sweep.run([p], cfg, seeds=(0,), reduce="trace")
+    acc = float(np.asarray(out.test_acc_holders)[0, 0, -20:].mean())
+    ms = np.asarray(out.merge_stats)[0, 0, -1]
+    return acc, ms
+
+
+clean, _ = acc_of(SimConfig(learn=logreg_task(), **kw))
+fc = signflip(frac=0.1)
+undef, _ = acc_of(SimConfig(learn=logreg_task(), faults=fc, **kw))
+lc_def = dataclasses.replace(logreg_task(), defense=robust_defense())
+defended, ms = acc_of(SimConfig(learn=lc_def, faults=fc, **kw))
+rej = int(ms[MS_DISTREJ_POISON])
+att = int(ms[MS_ATTEMPT_POISON])
+print(f"clean={clean:.4f} undefended={undef:.4f} defended={defended:.4f} "
+      f"poison merges rejected {rej}/{att}")
+assert undef < clean, "sign-flip attack did not degrade the undefended run"
+assert defended >= 0.90 * clean, (
+    f"defended accuracy {defended:.4f} below 90% of clean {clean:.4f}")
+print("defended recovery OK (>= 90% of clean)")
+EOF
   echo "OK"
 fi
 

@@ -45,6 +45,7 @@ __all__ = [
     "solve_observation_availability_batch",
     "solve_observation_availability_classes",
     "solve_observation_availability_multizone",
+    "solve_contamination_transient",
 ]
 
 
@@ -525,4 +526,80 @@ def solve_observation_availability_classes(
                       what="solve_observation_availability_classes")
     weights = jnp.asarray(csol.fracs) * q / jnp.maximum(q_bar, 1e-12)
     return DDESolution(tau=tau, o=o, dt=dt, weights=weights,
+                       converged=converged, residual=residual)
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def _contamination_scan(m, reset, p_adv, honest_n, e_a, e_h, n_steps,
+                        dt):
+    """Euler trace of the contamination compartment model from x(0) = 0."""
+
+    def step(x, _):
+        poi = p_adv * e_a + e_h * jnp.einsum("ck,ck->k", honest_n, x)
+        dx = m * (1.0 - x) * poi[None, :] - reset[None, :] * x
+        x_new = jnp.clip(x + dt * dx, 0.0, 1.0)
+        return x_new, x_new
+
+    _, trace = jax.lax.scan(step, jnp.zeros_like(m), None,
+                            length=n_steps)
+    return jnp.moveaxis(trace, 0, -1)                    # (C, K, n_steps)
+
+
+def solve_contamination_transient(
+    contam,
+    *,
+    dt: float = 1.0,
+    t_max: float | None = None,
+    strict: bool = False,
+) -> DDESolution:
+    """Transient of the Byzantine contamination compartment model.
+
+    ``contam`` is a ``repro.core.meanfield.ContaminationSolution``; each
+    (class ``c``, zone ``z``) lane integrates, from a clean start
+    ``x(0) = 0`` (every replica begins at the shared θ0),
+
+        dx_cz/dt = m_cz (1 - x_cz) [ p_adv_z eta_adv
+                     + eta_honest sum_h s_hz x_hz ] - reset_z x_cz
+
+    — exactly the balance whose root :func:`...solve_contamination_classes`
+    returns, so the trace settles onto the steady ``contam.x``. No delay
+    term is involved (the poison flag transfers at merge time), so this
+    is a plain Euler ODE ride on the DDE container: the result is a
+    ``DDESolution`` with ``o`` of shape (C, K, nt) holding the
+    poisoned-fraction trajectory, ``weights = fracs`` so ``weighted()``
+    collapses to the population trace the simulator's ``poisoned_frac``
+    telemetry measures, and the usual ``converged``/``residual``
+    diagnostics. With no adversarial classes (``p_adv == 0``) the trace
+    is identically zero.
+
+    ``t_max`` defaults to eight relaxation times of the slowest lane
+    (relaxation rate is at least ``m p_adv eta_adv + reset``)."""
+    m = jnp.asarray(contam.m)
+    reset = jnp.asarray(contam.reset)
+    p_adv = jnp.asarray(contam.p_adv)
+    honest_n = jnp.asarray(contam.honest_n)
+    e_a = jnp.asarray(contam.eta_adv)
+    e_h = jnp.asarray(contam.eta_honest)
+    _check_finite_coeffs(m=m, reset=reset, p_adv=p_adv,
+                         honest_n=honest_n, eta=jnp.stack([e_a, e_h]))
+
+    if t_max is None:
+        rate = float(jnp.min(m * (p_adv * e_a)[None, :] + reset[None, :]))
+        t_max = 8.0 / max(rate, 1e-6)
+    n_steps = min(max(int(round(float(t_max) / dt)), 1), 1_000_000)
+    tau = jnp.arange(n_steps + 1) * dt
+
+    trace = _contamination_scan(
+        m.astype(jnp.float32), reset.astype(jnp.float32),
+        p_adv.astype(jnp.float32), honest_n.astype(jnp.float32),
+        e_a.astype(jnp.float32), e_h.astype(jnp.float32), n_steps,
+        jnp.asarray(dt, jnp.float32),
+    )
+    o = jnp.concatenate(
+        [jnp.zeros(m.shape + (1,), trace.dtype), trace], axis=-1
+    )
+    converged, residual = _trace_diag(o, dt)
+    if strict:
+        _strict_trace(converged, what="solve_contamination_transient")
+    return DDESolution(tau=tau, o=o, dt=dt, weights=contam.fracs,
                        converged=converged, residual=residual)

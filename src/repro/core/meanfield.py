@@ -46,6 +46,9 @@ __all__ = [
     "solve_fixed_point_batch",
     "solve_fixed_point_multizone",
     "solve_fixed_point_classes",
+    "ContaminationSolution",
+    "solve_contamination_classes",
+    "contamination_closed_form",
     "merge_arrival_rate",
     "queueing_delays",
     "stability_lhs",
@@ -783,6 +786,266 @@ def solve_fixed_point_classes(
         a=a, a_serve=a_serve, q=q_j, q_bar=jnp.asarray(q_bar), fracs=f_j,
         b=b, S=S, T_S=T_S, N_z=N_j, alpha_z=alpha_j, Lam_z=Lam_j,
         r=r, d_M=d_M, d_I=d_I, converged=converged, residual=residual,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ContaminationSolution:
+    """Steady-state poisoned-replica compartment model (class × zone).
+
+    The Byzantine layer's analytic twin: ``x[c, z]`` is the steady-state
+    fraction of class-``c`` replicas in zone ``z`` carrying the poison
+    flag (the quantity the simulator emits as ``poisoned_frac_c``). See
+    :func:`solve_contamination_classes` for the balance equation."""
+
+    x: jnp.ndarray          # (C, K) steady poisoned-replica fraction
+    x_mean: jnp.ndarray     # (K,) population (f_c-weighted) mean fraction
+    p_adv: jnp.ndarray      # (K,) adversarial share of served payloads
+    m: jnp.ndarray          # (C, K) per-node merge-delivery rate [1/s]
+    reset: jnp.ndarray      # (K,) per-node replica reset rate [1/s]
+    eta_adv: jnp.ndarray    # () acceptance prob. of adversarial payloads
+    eta_honest: jnp.ndarray # () acceptance prob. of contaminated honest
+                            #    payloads (defenses rarely screen these)
+    honest_n: Any = None    # (C, K) honest classes' normalised source
+                            #    shares (zero rows for adversarial ones)
+    fracs: Any = None       # (C,) class population fractions
+    csol: ClassSolution = None
+    converged: Any = None
+    residual: Any = None
+
+    @property
+    def x_pop(self) -> jnp.ndarray:
+        """() overall population poisoned fraction (zone- and
+        class-weighted by ``f_c``; zones weighted by ``N_z``)."""
+        w_z = self.csol.N_z / jnp.maximum(jnp.sum(self.csol.N_z), _EPS)
+        return jnp.sum(self.x_mean * w_z)
+
+    def holder_fraction(self, x) -> jnp.ndarray:
+        """Map an overall poisoned fraction ``x`` to the *holder*
+        population — what the simulator's holder-masked ``poisoned_frac``
+        telemetry measures.
+
+        A holder has received at least one merge since its last reset; a
+        node with zero merges is clean by construction but also not a
+        holder, so the holder population is contaminated *more* than the
+        overall one. With merges Poisson(``m``) and resets
+        Poisson(``reset``), the merges-since-reset count is geometric
+        with ``P(K = 0) = reset / (m + reset)``, and every zero-merge
+        node is clean, so
+
+            x_holders = 1 - (P(clean) - P(K=0)) / (1 - P(K=0)),
+
+        with ``P(clean) = 1 - x``. ``x`` must lead with the (C, K) axes;
+        trailing axes (a transient's time axis) broadcast."""
+        x = jnp.asarray(x)
+        p0 = self.reset[None, :] / jnp.maximum(
+            self.m + self.reset[None, :], _EPS)
+        p0 = p0.reshape(p0.shape + (1,) * (x.ndim - 2))
+        clean = jnp.maximum((1.0 - x) - p0, 0.0)
+        return 1.0 - clean / jnp.maximum(1.0 - p0, _EPS)
+
+    @property
+    def x_holders(self) -> jnp.ndarray:
+        """(C, K) steady poisoned fraction among holders
+        (:meth:`holder_fraction` of the steady ``x``)."""
+        return self.holder_fraction(self.x)
+
+    @property
+    def x_pop_holders(self) -> jnp.ndarray:
+        """() overall holder-population poisoned fraction — compare with
+        the simulator's ``poisoned_frac``."""
+        xh = self.x_holders
+        f = self.fracs if self.fracs is not None else self.csol.fracs
+        w_z = self.csol.N_z / jnp.maximum(jnp.sum(self.csol.N_z), _EPS)
+        return jnp.sum(jnp.einsum("c,ck->k", jnp.asarray(f), xh) * w_z)
+
+
+def contamination_closed_form(m, p_adv, reset, *, eta_adv=1.0,
+                              eta_honest=1.0):
+    """Closed-form single-honest-source contamination fixed point.
+
+    With one honest class (payload mix: fraction ``p_adv`` adversarial,
+    ``1 - p_adv`` honest) the balance of
+    :func:`solve_contamination_classes` collapses to the quadratic
+
+        A x^2 + (B + reset - A) x - B = 0,
+        A = m (1 - p_adv) eta_honest,  B = m p_adv eta_adv,
+
+    whose root in [0, 1] this returns (the ``A -> 0`` limit is
+    ``x = B / (B + reset)``). Used to pin the damped iteration of the
+    full solver in tests."""
+    m = jnp.asarray(m, jnp.float64 if jax.config.jax_enable_x64
+                    else jnp.float32)
+    A = m * (1.0 - p_adv) * eta_honest
+    B = m * p_adv * eta_adv
+    c = B + reset - A
+    x_quad = (-c + jnp.sqrt(c * c + 4.0 * A * B)) / jnp.maximum(
+        2.0 * A, _EPS)
+    x_lin = B / jnp.maximum(B + reset, _EPS)
+    return jnp.clip(jnp.where(A > 1e-9, x_quad, x_lin), 0.0, 1.0)
+
+
+def _contamination_system(fc, csol: ClassSolution):
+    """(f, m, reset, p_adv, honest_n) coefficients of the contamination
+    balance, shared by the steady solver here and the transient in
+    ``repro.core.dde``.
+
+    * ``f`` (C,) class population fractions;
+    * ``m`` (C, K) per-node merge-delivery rate ``q_c r_z``;
+    * ``reset`` (K,) per-node replica reset rate ``alpha_z/N_z + crash``;
+    * ``p_adv`` (K,) adversarial share of the served-payload source mix
+      ``s_kz ∝ f_k q_k (1 - fr_k) a_kz``;
+    * ``honest_n`` (C, K) the honest classes' normalised source shares
+      (zero rows for adversarial classes)."""
+    fracs, q, serves = _class_vectors(fc)
+    adv = np.asarray(
+        [getattr(c, "adv_mode", "none") != "none" for c in fc.classes],
+        np.float64,
+    )
+    f_j = jnp.asarray(fracs, jnp.float32)
+    q_j = jnp.asarray(q, jnp.float32)
+    adv_j = jnp.asarray(adv, jnp.float32)
+    K = csol.a.shape[-1]
+
+    # payload source mix: accessible, serving, holding classes (``csol.a``
+    # broadcasts along the class axis when the class solver delegated —
+    # an attack-only config is protocol-trivial, so every class shares
+    # the delegated availability column)
+    s = (f_j * q_j
+         * jnp.asarray(serves, jnp.float32))[:, None] * csol.a   # (C, K)
+    s_tot = jnp.maximum(jnp.sum(s, axis=0), _EPS)                # (K,)
+    s_n = s / s_tot[None, :]
+    p_adv = jnp.einsum("c,ck->k", adv_j, s_n)                    # (K,)
+
+    # the fc duty (== csol.q on the non-delegated path) keeps m at
+    # (C, K) even when the delegated csol carries a single class column
+    m = q_j[:, None] * jnp.asarray(csol.r)[None, :]              # (C, K)
+    m = jnp.broadcast_to(m, (len(fracs), K))
+    reset = csol.alpha_z / jnp.maximum(csol.N_z, _EPS) \
+        + float(fc.crash_rate)                                   # (K,)
+    honest_n = s_n * (1.0 - adv_j)[:, None]                      # (C, K)
+    return f_j, m, reset, p_adv, honest_n
+
+
+def solve_contamination_classes(
+    p: FGParams,
+    contact: ContactModel,
+    faults=None,
+    zones: ZoneSet | None = None,
+    *,
+    eta_adv: float = 1.0,
+    eta_honest: float = 1.0,
+    merge_rate=None,
+    csol: ClassSolution | None = None,
+    density: float | None = None,
+    speed: float | None = None,
+    t: float = 0.0,
+    area_side: float | None = None,
+    iters: int = 200,
+    tol: float = 1e-6,
+    strict: bool = False,
+) -> ContaminationSolution:
+    """(class × zone) compartment model of the poisoned-replica fraction.
+
+    Rides the class-structured operating point
+    (:func:`solve_fixed_point_classes` — pass ``csol`` to reuse one): per
+    class ``c`` and zone ``z`` the poison flag spreads through accepted
+    merges and is cleared by replica resets,
+
+        dx_cz/dt = m_cz (1 - x_cz) [ p_adv_z eta_adv
+                     + sum_h s_hz x_hz eta_honest ] - reset_z x_cz
+
+    with the fault-corrected ingredients
+
+    * ``m_cz = q_c r_z`` — the Lemma 2 per-node merge-delivery rate of
+      the class solution, derated by the receiver's duty ``q_c`` (a
+      replica only accepts payloads while its node is accessible).
+      ``merge_rate`` (scalar or (C, K)) overrides it with a *measured*
+      per-node delivery rate — finite-size simulations run below the
+      Lemma 2 rate, and the twin's claim is the contagion balance, not
+      the contact physics;
+    * payload source mix ``s_kz ∝ f_k q_k (1 - fr_k) a_kz`` (normalised
+      over classes) — who the served snapshot comes from; ``p_adv_z``
+      is the adversarial classes' share, and honest classes contribute
+      poisoned payloads in proportion to their own contamination
+      ``x_hz`` (``snap_poison`` is inherited by snapshots of poisoned
+      replicas);
+    * acceptance probabilities ``eta_adv`` / ``eta_honest`` — the
+      defense screens' pass rates for adversarial / contaminated-honest
+      payloads. Undefended both are 1; a defended run's measured
+      ``eta_adv`` is ``1 - dist_rej_poison / attempts_poison`` from the
+      simulator's ``merge_stats`` counters;
+    * ``reset_z = alpha_z / N_z + crash_rate`` — zone-churn replacement
+      and crash-restart both reset the replica (and its flag) to θ0.
+
+    Solved by the same damped fixed-point iteration as the class solver
+    (each step maps ``x`` to ``m·poi / (m·poi + reset)`` at the current
+    poison intensity). With **no adversarial classes the answer is
+    exactly zero** — the solver returns ``x = 0`` without iterating, so
+    an honest config costs nothing and agrees bitwise with "no attack".
+    The single-honest-class closed form is
+    :func:`contamination_closed_form`. Validated against the simulator's
+    ``poisoned_frac_c`` telemetry in ``benchmarks/fig_adversarial.py``.
+    """
+    fc = faults if faults is not None else getattr(p, "faults", None)
+    if csol is None:
+        csol = solve_fixed_point_classes(
+            p, contact, fc, zones, density=density, speed=speed, t=t,
+            area_side=area_side, iters=iters, tol=tol, strict=strict,
+        )
+    C, K = csol.a.shape
+
+    adversarial = fc is not None and bool(
+        getattr(fc, "adversarial", False)
+    )
+    if not adversarial:
+        # no poison source: x = 0 is the exact fixed point
+        zero_ck = jnp.zeros((C, K))
+        return ContaminationSolution(
+            x=zero_ck, x_mean=jnp.zeros((K,)), p_adv=jnp.zeros((K,)),
+            m=(jnp.broadcast_to(
+                jnp.asarray(merge_rate, jnp.float32), (C, K))
+               if merge_rate is not None
+               else csol.q[:, None] * jnp.asarray(csol.r)[None, :]),
+            reset=csol.alpha_z / jnp.maximum(csol.N_z, _EPS)
+            + (float(fc.crash_rate) if fc is not None and fc.enabled
+               else 0.0),
+            eta_adv=jnp.asarray(float(eta_adv)),
+            eta_honest=jnp.asarray(float(eta_honest)),
+            honest_n=zero_ck, fracs=csol.fracs,
+            csol=csol, converged=jnp.asarray(True),
+            residual=jnp.asarray(0.0),
+        )
+
+    f_j, m, reset, p_adv, honest_n = _contamination_system(fc, csol)
+    # class count from the fault config — the class solver may have
+    # delegated (attack-only configs are protocol-trivial), leaving csol
+    # with a single class column
+    C, K = honest_n.shape
+    if merge_rate is not None:
+        m = jnp.broadcast_to(
+            jnp.asarray(merge_rate, jnp.float32), (C, K))
+    e_a = jnp.asarray(float(eta_adv))
+    e_h = jnp.asarray(float(eta_honest))
+
+    def body(_, x):
+        poi = p_adv * e_a + e_h * jnp.einsum("ck,ck->k", honest_n, x)
+        lam_x = m * poi[None, :]
+        x_new = lam_x / jnp.maximum(lam_x + reset[None, :], _EPS)
+        return 0.5 * x + 0.5 * jnp.clip(x_new, 0.0, 1.0)
+
+    x = jax.lax.fori_loop(0, iters, body, jnp.full((C, K), 0.5))
+    residual = jnp.max(jnp.abs(body(0, x) - x))
+    converged = _converged(residual, tol)
+    if strict:
+        _strict_check(converged, residual,
+                      what="solve_contamination_classes", iters=iters,
+                      tol=tol)
+    x_mean = jnp.einsum("c,ck->k", f_j, x)
+    return ContaminationSolution(
+        x=x, x_mean=x_mean, p_adv=p_adv, m=m, reset=reset,
+        eta_adv=e_a, eta_honest=e_h, honest_n=honest_n, fracs=f_j,
+        csol=csol, converged=converged, residual=residual,
     )
 
 

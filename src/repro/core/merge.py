@@ -17,18 +17,125 @@ We implement that weighted average with three weighting policies:
 
 These run inside the gossip protocol (see ``repro.core.gossip``) and are the
 op that the ``gossip_merge`` Pallas kernel fuses on TPU.
+
+Byzantine defenses (:class:`DefenseConfig`, riding ``LearnConfig.defense``)
+screen the peer *before* the weighted average:
+
+* ``norm_clip``   — scale an over-norm peer payload down to the clip radius
+  (bounds the energy any single poisoned merge can inject);
+* ``dist_gate``   — reject peers farther than a robust radius from the own
+  parameters; the radius is *relative* (``dist_gate * (dist_floor +
+  ‖own‖)``) so the gate is scale-free as training grows ‖θ‖;
+* ``cnt_clip``    — clamp the peer's *claimed* observation count to a
+  multiple of the own count (defeats inflated-metadata lying that would
+  hijack the ``obs_count``/``staleness`` weights);
+* ``mode="trimmed"`` — merge against the coordinate-wise median of the
+  ``recent_peers`` last *accepted* peer payloads instead of the raw peer
+  (a minority of poisoned entries cannot move the median).
+
+The primitives here are pure jnp; the sim learning layer
+(``repro.sim.learn.merge_deliveries``) composes them with the per-row
+``gossip_merge_rows``/``gossip_merge_rows_scaled`` kernel path.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["merge_weights", "merge_pytrees", "MergePolicy"]
+__all__ = ["merge_weights", "merge_pytrees", "MergePolicy", "DefenseConfig",
+           "norm_clip_factors", "distance_accept", "clip_peer_counts",
+           "trimmed_peer"]
 
 MergePolicy = Literal["uniform", "obs_count", "staleness"]
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class DefenseConfig:
+    """Hashable Byzantine-defense knobs (static via ``LearnConfig.defense``).
+
+    Every knob at its default is *off*: a default/``None`` config keeps the
+    merge path bitwise the undefended program. ``norm_clip``/``dist_gate``/
+    ``cnt_clip`` at ``0.0`` disable that screen; ``mode="average"`` is the
+    plain weighted average."""
+
+    norm_clip: float = 0.0     # clip radius for the peer payload norm
+    dist_gate: float = 0.0     # accept iff ||peer-own|| <= gate*(floor+||own||)
+    dist_floor: float = 1e-3   # absolute floor of the relative gate radius
+    cnt_clip: float = 0.0      # cap peer_cnt at cnt_clip * (1 + own_cnt)
+    mode: str = "average"      # "average" | "trimmed"
+    recent_peers: int = 3      # trimmed mode: accepted-peer ring buffer size
+
+    def __post_init__(self):
+        for r in (self.norm_clip, self.dist_gate, self.cnt_clip):
+            if r < 0.0:
+                raise ValueError("defense radii/clips must be >= 0")
+        if self.dist_floor <= 0.0:
+            raise ValueError("dist_floor must be > 0")
+        if self.mode not in ("average", "trimmed"):
+            raise ValueError(
+                f"unknown defense mode {self.mode!r}; known: "
+                "'average', 'trimmed'"
+            )
+        if self.mode == "trimmed" and self.recent_peers < 1:
+            raise ValueError("trimmed mode needs recent_peers >= 1")
+
+    @property
+    def enabled(self) -> bool:
+        return (
+            self.norm_clip > 0.0
+            or self.dist_gate > 0.0
+            or self.cnt_clip > 0.0
+            or self.mode != "average"
+        )
+
+
+def norm_clip_factors(peer_theta, radius: float):
+    """(N,) f32 down-scaling factor ``min(1, radius/||peer||)`` per row
+    (1 everywhere for in-radius peers — the honest path is untouched)."""
+    nrm = jnp.linalg.norm(peer_theta.astype(jnp.float32), axis=-1)
+    return jnp.minimum(1.0, radius / jnp.maximum(nrm, _EPS))
+
+
+def distance_accept(own_theta, peer_theta, gate: float, floor: float):
+    """(N,) bool acceptance of the relative robust-radius gate:
+    ``||peer - own|| <= gate * (floor + ||own||)``, with a cold-replica
+    escape — a near-init own replica (``||own|| <= floor``) accepts
+    anything, because it has no trust anchor yet and rejecting would also
+    reject every *honest* trained peer (a freshly churn-reset node sits as
+    far from the honest consensus as a poisoned payload does). The radius
+    depends only on the *receiver's* state, so an attacker cannot inflate
+    its own acceptance threshold."""
+    own = own_theta.astype(jnp.float32)
+    own_nrm = jnp.linalg.norm(own, axis=-1)
+    d = jnp.linalg.norm(peer_theta.astype(jnp.float32) - own, axis=-1)
+    return (d <= gate * (floor + own_nrm)) | (own_nrm <= floor)
+
+
+def clip_peer_counts(own_cnt, peer_cnt, clip: float):
+    """Clamp the peer's claimed observation count to ``clip * (1 +
+    own_cnt)`` — the metadata-liar screen."""
+    return jnp.minimum(peer_cnt, clip * (1.0 + own_cnt))
+
+
+def trimmed_peer(own_theta, peer_buf, peer_fill):
+    """Coordinate-wise median over {own} ∪ {valid ring-buffer entries}.
+
+    ``peer_buf`` is (N, B, D) of the last accepted peer payloads, written
+    ring-wise; ``peer_fill`` (N,) counts total accepted peers, so entries
+    ``min(fill, B)`` onward are unwritten and are masked to the *own* row
+    (a cold buffer merges a node with itself — a no-op)."""
+    n, b, _ = peer_buf.shape
+    valid = jnp.arange(b)[None, :] < jnp.minimum(peer_fill, b)[:, None]
+    own = own_theta.astype(jnp.float32)[:, None, :]
+    buf = jnp.where(valid[:, :, None], peer_buf.astype(jnp.float32), own)
+    return jnp.median(jnp.concatenate([own, buf], axis=1), axis=1)
 
 
 def merge_weights(

@@ -18,6 +18,12 @@ Two entry points:
   ``(N, D)`` buffer; the sim-substrate Gossip-Learning layer
   (``repro.sim.learn``) merges every node's parameter vector against its
   partner's snapshot in one call.
+* :func:`gossip_merge_rows_scaled` — the defended-merge variant: a per-row
+  ``scale`` multiplies the peer payload inside the fused combine
+  (``w*own + (1-w)*(scale*peer)``), so the Byzantine norm-clip screen
+  (``repro.core.merge.DefenseConfig.norm_clip``) costs no extra pass over
+  the ``(N, D)`` buffer. ``scale == 1`` everywhere is bitwise
+  :func:`gossip_merge_rows`.
 
 Dispatch rule (the ``kernels/contacts.py`` pattern): with
 ``interpret=None`` (the default) the **compiled** kernel runs only on TPU
@@ -37,7 +43,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["gossip_merge", "gossip_merge_rows"]
+__all__ = ["gossip_merge", "gossip_merge_rows", "gossip_merge_rows_scaled"]
 
 BLK = 16 * 1024  # 64 KiB fp32 per operand block — 3 operands well under VMEM
 BLK_ROWS = 256   # rows per grid step of the per-row kernel
@@ -162,3 +168,68 @@ def gossip_merge_rows(own, peer, w_own, success, *,
 
         return gossip_merge_rows_ref(own, peer, w_own, success)
     return _rows_pallas(own, peer, w_own, success, interpret=interpret)
+
+
+def _rows_scaled_kernel(w_ref, c_ref, s_ref, own_ref, peer_ref, out_ref):
+    w = w_ref[...].astype(jnp.float32)        # (BLK_ROWS, 1)
+    c = c_ref[...].astype(jnp.float32)        # (BLK_ROWS, 1) peer scale
+    s = s_ref[...].astype(jnp.float32)        # (BLK_ROWS, 1)
+    own = own_ref[...].astype(jnp.float32)    # (BLK_ROWS, Dp)
+    peer = peer_ref[...].astype(jnp.float32)
+    merged = w * own + (1.0 - w) * (c * peer)
+    out_ref[...] = jnp.where(s > 0.5, merged, own).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _rows_scaled_pallas(own, peer, w_own, scale, success, *, interpret: bool):
+    n, d = own.shape
+    nb = -(-n // BLK_ROWS)
+    dp = -(-d // LANE) * LANE
+    pad_n, pad_d = nb * BLK_ROWS - n, dp - d
+    if pad_n or pad_d:
+        own = jnp.pad(own, ((0, pad_n), (0, pad_d)))
+        peer = jnp.pad(peer, ((0, pad_n), (0, pad_d)))
+    w = jnp.pad(jnp.asarray(w_own, jnp.float32), (0, pad_n))[:, None]
+    c = jnp.pad(jnp.asarray(scale, jnp.float32), (0, pad_n))[:, None]
+    s = jnp.pad(
+        jnp.asarray(success, jnp.float32), (0, pad_n)
+    )[:, None]
+
+    out = pl.pallas_call(
+        _rows_scaled_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((BLK_ROWS, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_ROWS, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_ROWS, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_ROWS, dp), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_ROWS, dp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLK_ROWS, dp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb * BLK_ROWS, dp), own.dtype),
+        interpret=interpret,
+    )(w, c, s, own, peer)
+    return out[:n, :d]
+
+
+def gossip_merge_rows_scaled(own, peer, w_own, scale, success, *,
+                             interpret: bool | None = None):
+    """Defended row-wise merge: ``out[i] = success[i] ? w[i]*own[i] +
+    (1-w[i])*(scale[i]*peer[i]) : own[i]`` in fp32 accumulation.
+
+    ``scale`` (N,) is the norm-clip down-scaling factor
+    (``repro.core.merge.norm_clip_factors``); fusing it here keeps the
+    defended merge a single pass over the parameter buffer. Same dispatch
+    rule as :func:`gossip_merge`.
+    """
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return _rows_scaled_pallas(
+                own, peer, w_own, scale, success, interpret=False
+            )
+        from repro.kernels.ref import gossip_merge_rows_scaled_ref
+
+        return gossip_merge_rows_scaled_ref(own, peer, w_own, scale, success)
+    return _rows_scaled_pallas(
+        own, peer, w_own, scale, success, interpret=interpret
+    )

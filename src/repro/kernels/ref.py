@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["attention_ref", "ssd_ref", "gossip_merge_ref",
-           "gossip_merge_rows_ref"]
+           "gossip_merge_rows_ref", "gossip_merge_rows_scaled_ref"]
 
 
 def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
@@ -71,4 +71,15 @@ def gossip_merge_rows_ref(own, peer, w_own, success):
     s = jnp.asarray(success, jnp.float32)[:, None]
     merged = (w * own.astype(jnp.float32)
               + (1.0 - w) * peer.astype(jnp.float32))
+    return jnp.where(s > 0.5, merged, own.astype(jnp.float32)).astype(own.dtype)
+
+
+def gossip_merge_rows_scaled_ref(own, peer, w_own, scale, success):
+    """Defended row-wise merge oracle: ``out[i] = success[i] ? w[i]*own[i]
+    + (1-w[i])*(scale[i]*peer[i]) : own[i]`` (fp32 accumulate)."""
+    w = jnp.asarray(w_own, jnp.float32)[:, None]
+    c = jnp.asarray(scale, jnp.float32)[:, None]
+    s = jnp.asarray(success, jnp.float32)[:, None]
+    merged = (w * own.astype(jnp.float32)
+              + (1.0 - w) * (c * peer.astype(jnp.float32)))
     return jnp.where(s > 0.5, merged, own.astype(jnp.float32)).astype(own.dtype)

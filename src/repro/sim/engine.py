@@ -162,6 +162,12 @@ class SimOutputs:
     test_acc_holders: np.ndarray | None = None # (S,) mean over in-RZ holders
     learn_obs: np.ndarray | None = None        # (S,) mean obs count / holder
     theta_var: np.ndarray | None = None        # (S,) mean parameter variance
+    merge_stats: np.ndarray | None = None      # (S, 6) cumulative merge-
+                                               # screen counters
+    # Byzantine telemetry (adversarial FaultConfig + enabled LearnConfig)
+    poisoned_frac: np.ndarray | None = None    # (S,) poisoned fraction of
+                                               # in-RZ holders
+    poisoned_frac_c: np.ndarray | None = None  # (S, C) per-class split
 
 
 @dataclasses.dataclass
@@ -194,6 +200,9 @@ class BatchSimOutputs:
     test_acc_holders: np.ndarray | None = None # (P, R, S)
     learn_obs: np.ndarray | None = None        # (P, R, S)
     theta_var: np.ndarray | None = None        # (P, R, S)
+    merge_stats: np.ndarray | None = None      # (P, R, S, 6)
+    poisoned_frac: np.ndarray | None = None    # (P, R, S)
+    poisoned_frac_c: np.ndarray | None = None  # (P, R, S, C)
     plan: Any = None             # SweepPlan of the producing sweep
     devices_used: int | None = None
     host_bytes: int | None = None
@@ -235,6 +244,9 @@ class BatchSimOutputs:
             test_acc_holders=_z(self.test_acc_holders),
             learn_obs=_z(self.learn_obs),
             theta_var=_z(self.theta_var),
+            merge_stats=_z(self.merge_stats),
+            poisoned_frac=_z(self.poisoned_frac),
+            poisoned_frac_c=_z(self.poisoned_frac_c),
         )
 
 
@@ -364,8 +376,24 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
     # so the *protocol* traces are bitwise identical either way) ----
     lc = cfg.learn if (cfg.learn is not None and cfg.learn.enabled) else None
     learn_on = lc is not None
+    adv_on = trimmed_on = False
     if learn_on:
         task = learning.make_task(lc)    # teacher/init/test set, hoisted
+        # ---- Byzantine gates: attacks ride cfg.faults.adversarial —
+        # *independent* of the protocol-fault gate above, because
+        # adversaries follow the protocol honestly (an attack-only config
+        # keeps faults_on False and the protocol bitwise faults=None);
+        # the trimmed-defense peer buffer rides lc.defense ----
+        adv_on = cfg.faults is not None and cfg.faults.adversarial
+        dc = lc.defense if (
+            lc.defense is not None and lc.defense.enabled
+        ) else None
+        trimmed_on = dc is not None and dc.mode == "trimmed"
+        if adv_on:
+            adv = faults.adv_vectors(cfg.faults, cfg.n_nodes)  # static
+            cls1h_adv = jnp.asarray(
+                faults.class_onehot(cfg.faults, cfg.n_nodes)
+            )
 
     def zone_member(pos, t_now):
         """(N, K) bool per-zone membership at time ``t_now``.
@@ -439,10 +467,17 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         # also resets its model replica to the shared init ----
         if learn_on:
             drop = (left | crashed) if faults_on else left
-            theta, theta_cnt, theta_age = learning.reset_replicas(
+            rr = learning.reset_replicas(
                 drop, state.theta, state.theta_cnt, state.theta_age,
                 task.theta0,
+                poisoned=state.poisoned if adv_on else None,
+                peer_fill=state.peer_fill if trimmed_on else None,
             )
+            theta, theta_cnt, theta_age = (
+                rr["theta"], rr["theta_cnt"], rr["theta_age"]
+            )
+            poisoned = rr.get("poisoned")
+            peer_fill = rr.get("peer_fill")
 
         # ---- contact dynamics ----
         # Dense backend: the O(N²) pairwise sweep in two stages — the
@@ -501,11 +536,23 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
         # merges the sender's connection-time parameter snapshot into the
         # receiver (the paper's weighted-coefficient average, fused kernel)
         if learn_on:
-            theta, theta_cnt, theta_age = learning.merge_deliveries(
+            md = learning.merge_deliveries(
                 lc, delivered[:, learning.LEARN_MODEL], pidx,
                 theta, theta_cnt, theta_age,
                 state.theta_snap, state.snap_cnt, state.snap_age, tau_l,
+                merge_stats=state.merge_stats,
+                poisoned=poisoned,
+                snap_poison=state.snap_poison if adv_on else None,
+                peer_buf=state.peer_buf if trimmed_on else None,
+                peer_fill=peer_fill,
             )
+            theta, theta_cnt, theta_age = (
+                md["theta"], md["theta_cnt"], md["theta_age"]
+            )
+            merge_stats = md["merge_stats"]
+            poisoned = md.get("poisoned", poisoned)
+            peer_buf = md.get("peer_buf")
+            peer_fill = md.get("peer_fill", peer_fill)
 
         # enqueue merge jobs for delivered instances that add information
         # (merge only when the received training set is not a subset of the
@@ -544,12 +591,27 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             order_seed=state.order_seed, slot_idx=slot_idx, t0=t0, T_L=T_L,
         )
         # ---- learning snapshot: parameters are frozen alongside the
-        # protocol's snap words when a connection forms ----
+        # protocol's snap words when a connection forms; the Byzantine
+        # attack then transforms the snapshot an adversarial node just
+        # took — the serve side — leaving its live replica untouched ----
         if learn_on:
-            theta_snap, snap_cnt, snap_age = learning.snapshot_params(
-                match >= 0, theta, theta_cnt, theta_age,
+            newly = match >= 0
+            snap = learning.snapshot_params(
+                newly, theta, theta_cnt, theta_age,
                 state.theta_snap, state.snap_cnt, state.snap_age,
+                poisoned=poisoned,
+                snap_poison=state.snap_poison if adv_on else None,
             )
+            if adv_on:
+                theta_snap, snap_cnt, snap_age, snap_poison = snap
+                theta_snap, snap_cnt, snap_age, snap_poison = (
+                    learning.poison_snapshots(
+                        adv, task, slot_idx, newly,
+                        theta_snap, snap_cnt, snap_age, snap_poison,
+                    )
+                )
+            else:
+                theta_snap, snap_cnt, snap_age = snap
 
         # ---- observation generation & training enqueue ----
         obs_birth, obs_head, inc, want_train, slot_payload = (
@@ -614,7 +676,12 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             learn_kw = dict(
                 theta=theta, theta_cnt=theta_cnt, theta_age=theta_age,
                 theta_snap=theta_snap, snap_cnt=snap_cnt, snap_age=snap_age,
+                merge_stats=merge_stats,
             )
+            if adv_on:
+                learn_kw.update(poisoned=poisoned, snap_poison=snap_poison)
+            if trimmed_on:
+                learn_kw.update(peer_buf=peer_buf, peer_fill=peer_fill)
         new_state = state.replace(
             mob=mob, prev_close=closew, inc=inc, has_model=has_model,
             obs_birth=obs_birth, obs_head=obs_head, tq_slot=tq_slot,
@@ -654,6 +721,9 @@ def _run(key, p_dyn: dict, cfg: SimConfig, M: int, trace: str = "full"):
             out.update(learning.learn_outputs(
                 lc, task, state.theta, state.theta_cnt,
                 has_model=state.has_model, in_rz=state.zone_prev != 0,
+                merge_stats=state.merge_stats,
+                poisoned=state.poisoned if adv_on else None,
+                cls1h=cls1h_adv if adv_on else None,
             ))
         return (state, key), out
 
@@ -766,6 +836,9 @@ def simulate(p: FGParams, cfg: SimConfig, seed: int = 0) -> SimOutputs:
         test_acc_holders=_opt("test_acc_holders"),
         learn_obs=_opt("learn_obs"),
         theta_var=_opt("theta_var"),
+        merge_stats=_opt("merge_stats"),
+        poisoned_frac=_opt("poisoned_frac"),
+        poisoned_frac_c=_opt("poisoned_frac_c"),
     )
 
 

@@ -22,6 +22,17 @@ completes or is cut only by RZ exit. Real opportunistic deployments see
   the ``zone_churn`` drop path (:func:`drop_state`).
 * **free-riders** — class-flagged nodes that receive model instances but
   never serve them to a partner.
+* **Byzantine (adversarial) classes** — nodes that follow the *protocol*
+  honestly but poison the *learning* payload they serve
+  (``FaultClass.adv_mode``): sign-flipped parameters (``"signflip"``),
+  scaled-noise injection (``"noise"``), stale replay of the shared init
+  (``"replay"``), or inflated-metadata lying (``"liar"`` — bogus
+  ``theta_cnt``/``theta_age`` that hijack the ``obs_count``/``staleness``
+  merge weights). Attacks apply at the *serve side* of the learning layer
+  (``repro.sim.learn.poison_snapshots``), never to the protocol state, so
+  an adversarial-only config keeps ``enabled == False`` and the protocol
+  traces bitwise ``faults=None``; :attr:`FaultConfig.adversarial` gates
+  the learn-layer machinery instead.
 
 Everything here is keyed off a hashable frozen :class:`FaultConfig` riding
 the static ``SimConfig`` jit argument. The all-zero-rates config reports
@@ -48,7 +59,7 @@ from repro.sim import compute
 __all__ = [
     "FaultClass", "FaultConfig", "node_classes", "class_onehot",
     "init_avail", "duty_step", "drop_state", "link_fail", "abort_matches",
-    "gate_deliveries", "fault_outputs",
+    "gate_deliveries", "fault_outputs", "adv_vectors", "ADV_MODES",
     "EV_ABORT", "EV_LINKFAIL", "EV_CRASH", "N_EVENTS",
 ]
 
@@ -57,16 +68,27 @@ __all__ = [
 EV_ABORT, EV_LINKFAIL, EV_CRASH = 0, 1, 2
 N_EVENTS = 3
 
+#: Known adversarial serve-side behaviors (``FaultClass.adv_mode``).
+#: ``"none"`` = honest; the others poison the served learning payload.
+ADV_MODES = ("none", "signflip", "noise", "replay", "liar")
+
 
 @dataclasses.dataclass(frozen=True)
 class FaultClass:
     """One behavior class: a fraction of the population sharing duty-cycle
-    rates and the free-rider flag. ``rate_off == 0`` means always-on."""
+    rates, the free-rider flag and the adversarial serve behavior.
+    ``rate_off == 0`` means always-on; ``adv_mode == "none"`` means honest.
+
+    ``adv_scale`` parameterizes the attack: the noise σ for ``"noise"``
+    and the claimed (bogus) observation count for ``"liar"``; it is unused
+    by ``"signflip"``/``"replay"``."""
 
     frac: float = 1.0        # fraction of nodes in this class
     rate_off: float = 0.0    # on -> off transition rate [1/s]
     rate_on: float = 0.0     # off -> on transition rate [1/s]
     free_rider: bool = False  # receives but never serves
+    adv_mode: str = "none"   # serve-side attack (see ADV_MODES)
+    adv_scale: float = 1.0   # attack magnitude (noise sigma / liar count)
     name: str = "default"
 
     @property
@@ -107,6 +129,13 @@ class FaultConfig:
                 raise ValueError("fault rates must be >= 0")
         if not 0.0 <= self.p_abort < 1.0:
             raise ValueError("p_abort must be in [0, 1)")
+        for c in self.classes:
+            if c.adv_mode not in ADV_MODES:
+                raise ValueError(
+                    f"unknown adv_mode {c.adv_mode!r}; known: {ADV_MODES}"
+                )
+            if c.adv_mode != "none" and c.adv_scale <= 0.0:
+                raise ValueError("adversarial classes need adv_scale > 0")
 
     @property
     def n_classes(self) -> int:
@@ -114,8 +143,11 @@ class FaultConfig:
 
     @property
     def enabled(self) -> bool:
-        """True iff any fault mechanism is active. Disabled configs keep
-        the engine bitwise-identical to ``faults=None``."""
+        """True iff any *protocol* fault mechanism is active. Disabled
+        configs keep the engine bitwise-identical to ``faults=None``.
+        Adversarial serve behavior is deliberately excluded: Byzantine
+        nodes follow the protocol honestly (see :attr:`adversarial`), so
+        an attack-only config still traces the fault-free protocol."""
         return (
             self.link_fail_rate > 0.0
             or self.p_abort > 0.0
@@ -124,6 +156,18 @@ class FaultConfig:
                 c.rate_off > 0.0 or c.free_rider for c in self.classes
             )
         )
+
+    @property
+    def adversarial(self) -> bool:
+        """True iff any class poisons the learning payload it serves.
+        Gates the learn-layer attack machinery (``repro.sim.learn``)
+        independently of :attr:`enabled`."""
+        return any(c.adv_mode != "none" for c in self.classes)
+
+    @property
+    def adv_frac(self) -> float:
+        """Population fraction of adversarial nodes."""
+        return sum(c.frac for c in self.classes if c.adv_mode != "none")
 
 
 def node_classes(fc: FaultConfig, n: int) -> np.ndarray:
@@ -146,6 +190,26 @@ def class_onehot(fc: FaultConfig, n: int) -> np.ndarray:
     """(N, C) bool static class-membership matrix."""
     ids = node_classes(fc, n)
     return ids[:, None] == np.arange(fc.n_classes, dtype=np.int32)[None, :]
+
+
+def adv_vectors(fc: FaultConfig, n: int) -> dict:
+    """Static per-node attack vectors (numpy — compile-time constants).
+
+    Returns ``is_adv`` (N,) bool plus one bool mask per attack mode
+    (``signflip``/``noise``/``replay``/``liar``) and ``scale`` (N,) f32
+    (the class ``adv_scale`` broadcast to its members)."""
+    ids = node_classes(fc, n)
+    modes = np.asarray([c.adv_mode for c in fc.classes])[ids]
+    return dict(
+        is_adv=modes != "none",
+        signflip=modes == "signflip",
+        noise=modes == "noise",
+        replay=modes == "replay",
+        liar=modes == "liar",
+        scale=np.asarray(
+            [c.adv_scale for c in fc.classes], np.float32
+        )[ids],
+    )
 
 
 def init_avail(n: int) -> jnp.ndarray:

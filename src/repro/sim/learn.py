@@ -43,27 +43,62 @@ keys): ``test_acc`` (population mean test accuracy), ``test_acc_holders``
 measured twin of Lemma 4's stored information), and ``theta_var`` (mean
 parameter variance across holders — the vanishing-variance diagnostic of
 decentralized averaging, PAPERS.md: arXiv 2404.04616).
+
+**Byzantine layer** (PR 10): adversarial classes
+(``FaultClass.adv_mode``, see ``repro.sim.faults``) poison the payload
+they *serve* — the attack transforms the connection-time snapshot in
+:func:`poison_snapshots`, so the receive/merge path and every protocol
+trace stay untouched; defenses (``LearnConfig.defense``, a
+``repro.core.merge.DefenseConfig``) screen the peer inside
+:func:`merge_deliveries` (non-finite guard → metadata count clip →
+norm clip → distance gate → trimmed-median combine). A ``poisoned``
+contamination flag propagates through accepted merges (the sim-side twin
+of ``core.meanfield.solve_contamination_classes``) and cumulative
+``merge_stats`` counters make the realized defense acceptance rates
+measurable. All of it is gated: attack machinery only when
+``faults.adversarial``, defense machinery only when
+``defense.enabled`` — the off config traces the exact PR-8 program.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 
-from repro.core.merge import merge_weights
-from repro.kernels.gossip_merge import gossip_merge_rows
+from repro.core.merge import (
+    DefenseConfig, clip_peer_counts, distance_accept, merge_weights,
+    norm_clip_factors, trimmed_peer,
+)
+from repro.kernels.gossip_merge import (
+    gossip_merge_rows, gossip_merge_rows_scaled,
+)
 from repro.models import tiny
 from repro.optim.optimizers import sgd
 
 __all__ = ["LearnConfig", "LearnTask", "make_task", "init_fields",
            "reset_replicas", "merge_deliveries", "snapshot_params",
-           "train_completions", "learn_outputs", "LEARN_MODEL"]
+           "poison_snapshots", "train_completions", "learn_outputs",
+           "LEARN_MODEL", "MS_ATTEMPT", "MS_ATTEMPT_POISON",
+           "MS_NONFINITE", "MS_NORMCLIP", "MS_DISTREJ",
+           "MS_DISTREJ_POISON", "N_MERGE_STATS"]
 
 #: The model id the learning layer attaches to (deliveries/training of
 #: other ids leave the parameter vectors untouched).
 LEARN_MODEL = 0
+
+#: Indices into the cumulative ``merge_stats`` counter (carried whenever
+#: learning is on): delivery-merge attempts, attempts whose payload was
+#: poisoned, non-finite peers skipped by the entry guard, peers down-scaled
+#: by the norm clip, peers rejected by the distance gate, and
+#: distance-rejections whose payload was poisoned. The *_POISON splits let
+#: the contamination twin consume the measured defense acceptance rate.
+(MS_ATTEMPT, MS_ATTEMPT_POISON, MS_NONFINITE, MS_NORMCLIP,
+ MS_DISTREJ, MS_DISTREJ_POISON) = range(6)
+N_MERGE_STATS = 6
 
 #: Saturation for the observation counters. Merging *sums* the two counts
 #: (the union-of-training-sets approximation, same as the datacenter
@@ -95,6 +130,9 @@ class LearnConfig:
     label_noise: float = 0.5      # teacher logit noise σ
     merge_policy: str = "obs_count"
     data_seed: int = 0
+    defense: Any = None           # repro.core.merge.DefenseConfig; None or
+                                  # a disabled config keeps the merge path
+                                  # bitwise the undefended program
 
     def __post_init__(self):
         # delegate architecture validation (and fail at config build time)
@@ -107,6 +145,13 @@ class LearnConfig:
             raise ValueError(
                 f"unknown merge policy {self.merge_policy!r}; known: "
                 "'uniform', 'obs_count', 'staleness'"
+            )
+        if self.defense is not None and not isinstance(
+            self.defense, DefenseConfig
+        ):
+            raise ValueError(
+                "LearnConfig.defense must be a repro.core.merge."
+                f"DefenseConfig (got {type(self.defense).__name__})"
             )
 
     @property
@@ -165,31 +210,62 @@ def make_task(lc: LearnConfig) -> LearnTask:
     )
 
 
-def init_fields(lc: LearnConfig, n: int) -> dict:
+def init_fields(lc: LearnConfig, n: int, fc=None) -> dict:
     """Initial learning carry: every node (and every connection snapshot)
-    starts at the shared init with zero observation count and zero age."""
+    starts at the shared init with zero observation count and zero age.
+
+    ``fc`` is the (possibly None) ``FaultConfig``: an adversarial one adds
+    the contamination-flag carry; an enabled trimmed defense adds the
+    recent-peer ring buffer. Each extra field is gated so the off config
+    keeps the PR-8 carry — except ``merge_stats``, which rides whenever
+    learning is on (the non-finite entry guard is always armed)."""
     task = make_task(lc)
     theta = jnp.broadcast_to(task.theta0, (n, task.theta0.shape[0]))
     zeros = jnp.zeros((n,), jnp.float32)
-    return dict(
+    fields = dict(
         theta=theta, theta_cnt=zeros, theta_age=zeros,
         theta_snap=theta, snap_cnt=zeros, snap_age=zeros,
+        merge_stats=jnp.zeros((N_MERGE_STATS,), jnp.int32),
     )
+    if fc is not None and fc.adversarial:
+        fields.update(
+            poisoned=jnp.zeros((n,), bool),
+            snap_poison=jnp.zeros((n,), bool),
+        )
+    dc = lc.defense
+    if dc is not None and dc.enabled and dc.mode == "trimmed":
+        fields.update(
+            peer_buf=jnp.zeros(
+                (n, dc.recent_peers, theta.shape[1]), jnp.float32
+            ),
+            peer_fill=jnp.zeros((n,), jnp.int32),
+        )
+    return fields
 
 
-def reset_replicas(drop, theta, theta_cnt, theta_age, theta0):
+def reset_replicas(drop, theta, theta_cnt, theta_age, theta0, *,
+                   poisoned=None, peer_fill=None):
     """Churn/crash: replica back to the shared init (the parameter-space
     twin of ``faults.drop_state``). Connection snapshots are *not* reset —
-    like the protocol's ``snap`` words, they belong to the exchange."""
-    return (
-        jnp.where(drop[:, None], theta0[None, :], theta),
-        jnp.where(drop, 0.0, theta_cnt),
-        jnp.where(drop, 0.0, theta_age),
+    like the protocol's ``snap`` words, they belong to the exchange. The
+    contamination flag and the recent-peer buffer fill (when carried)
+    reset with the replica: a fresh init is clean and peer-less."""
+    out = dict(
+        theta=jnp.where(drop[:, None], theta0[None, :], theta),
+        theta_cnt=jnp.where(drop, 0.0, theta_cnt),
+        theta_age=jnp.where(drop, 0.0, theta_age),
     )
+    if poisoned is not None:
+        out["poisoned"] = jnp.where(drop, False, poisoned)
+    if peer_fill is not None:
+        out["peer_fill"] = jnp.where(drop, 0, peer_fill)
+    return out
 
 
 def merge_deliveries(lc: LearnConfig, received, pidx, theta, theta_cnt,
-                     theta_age, theta_snap, snap_cnt, snap_age, tau_l):
+                     theta_age, theta_snap, snap_cnt, snap_age, tau_l, *,
+                     merge_stats, poisoned=None, snap_poison=None,
+                     peer_buf=None, peer_fill=None) -> dict:
     """Apply the paper's merging transformation on this slot's deliveries.
 
     ``received (N,)`` flags receivers of model ``LEARN_MODEL``; ``pidx`` is
@@ -198,35 +274,180 @@ def merge_deliveries(lc: LearnConfig, received, pidx, theta, theta_cnt,
     which transfers ``snap``, not live state. Weights follow
     ``lc.merge_policy``; counts add (training-set union) and ages take the
     min (the merged instance is as fresh as its freshest input).
+
+    The Byzantine screens run in order: (1) the **non-finite guard**
+    (always armed — one NaN replica must not poison the population even
+    with defenses off), then with an enabled ``lc.defense`` (2) the
+    metadata **count clip**, (3) the **norm clip** (down-scales the
+    payload, fused into the kernel), (4) the **distance gate** (rejects
+    the merge outright), and (5) the **trimmed-median** combine against
+    the recent-accepted-peer ring buffer. Cumulative ``merge_stats``
+    counters record attempts/rejections (poison-attributed when the
+    contamination carry rides along). Returns a dict of the updated
+    fields (only the gated-in ones present).
     """
     n = theta.shape[0]
     peer_theta = theta_snap[pidx]
     peer_cnt = snap_cnt[pidx]
     peer_age = snap_age[pidx]
+    peer_poison = (
+        snap_poison[pidx] if snap_poison is not None
+        else jnp.zeros((n,), bool)
+    )
+
+    # (1) non-finite entry guard: a corrupted payload or bookkeeping skips
+    # the merge entirely (the receiver keeps its replica untouched)
+    finite = (
+        jnp.all(jnp.isfinite(peer_theta), axis=-1)
+        & jnp.isfinite(peer_cnt) & jnp.isfinite(peer_age)
+    )
+    accept = received & finite
+
+    dc = lc.defense if (lc.defense is not None and lc.defense.enabled) \
+        else None
+    scale = None
+    norm_clipped = jnp.zeros((), jnp.int32)
+    dist_rej = jnp.zeros((), jnp.int32)
+    dist_rej_poison = jnp.zeros((), jnp.int32)
+    if dc is not None:
+        # (2) metadata count clip: bound the *claimed* peer count before it
+        # reaches the merge weights and the count accumulation
+        if dc.cnt_clip > 0.0:
+            peer_cnt = clip_peer_counts(theta_cnt, peer_cnt, dc.cnt_clip)
+        # (3) norm clip: down-scale an over-norm payload (fused into the
+        # kernel via the per-row scale)
+        if dc.norm_clip > 0.0:
+            scale = norm_clip_factors(peer_theta, dc.norm_clip)
+            norm_clipped = jnp.sum(accept & (scale < 1.0)).astype(jnp.int32)
+        # (4) distance gate: reject peers outside the robust radius
+        if dc.dist_gate > 0.0:
+            gated_peer = (
+                peer_theta if scale is None else scale[:, None] * peer_theta
+            )
+            near = distance_accept(
+                theta, gated_peer, dc.dist_gate, dc.dist_floor
+            )
+            dist_rej = jnp.sum(accept & ~near).astype(jnp.int32)
+            dist_rej_poison = jnp.sum(
+                accept & ~near & peer_poison
+            ).astype(jnp.int32)
+            accept = accept & near
+
     w_own, _ = merge_weights(
         lc.merge_policy, theta_cnt, peer_cnt, theta_age, peer_age, tau_l
     )
     w_own = jnp.broadcast_to(jnp.asarray(w_own, jnp.float32), (n,))
-    theta = gossip_merge_rows(theta, peer_theta, w_own, received)
+
+    out = {}
+    if dc is not None and dc.mode == "trimmed":
+        # (5) trimmed mode: push the accepted (clipped) payload into the
+        # ring buffer, then combine against the coordinate-wise median of
+        # the recent accepted peers — a minority of poisoned entries
+        # cannot move it
+        pushed = (
+            peer_theta if scale is None else scale[:, None] * peer_theta
+        ).astype(jnp.float32)
+        slot = jnp.mod(peer_fill, dc.recent_peers)
+        buf_new = peer_buf.at[jnp.arange(n), slot].set(pushed)
+        peer_buf = jnp.where(accept[:, None, None], buf_new, peer_buf)
+        peer_fill = jnp.where(accept, peer_fill + 1, peer_fill)
+        med = trimmed_peer(theta, peer_buf, peer_fill)
+        theta = gossip_merge_rows(theta, med, w_own, accept)
+        out.update(peer_buf=peer_buf, peer_fill=peer_fill)
+    elif scale is not None:
+        theta = gossip_merge_rows_scaled(
+            theta, peer_theta, w_own, scale, accept
+        )
+    else:
+        theta = gossip_merge_rows(theta, peer_theta, w_own, accept)
+
     theta_cnt = jnp.where(
-        received, jnp.minimum(theta_cnt + peer_cnt, CNT_CAP), theta_cnt
+        accept, jnp.minimum(theta_cnt + peer_cnt, CNT_CAP), theta_cnt
     )
     theta_age = jnp.where(
-        received, jnp.minimum(theta_age, peer_age), theta_age
+        accept, jnp.minimum(theta_age, peer_age), theta_age
     )
-    return theta, theta_cnt, theta_age
+
+    stats = jnp.stack([
+        jnp.sum(received).astype(jnp.int32),
+        jnp.sum(received & peer_poison).astype(jnp.int32),
+        jnp.sum(received & ~finite).astype(jnp.int32),
+        norm_clipped,
+        dist_rej,
+        dist_rej_poison,
+    ])
+    out.update(
+        theta=theta, theta_cnt=theta_cnt, theta_age=theta_age,
+        merge_stats=merge_stats + stats,
+    )
+    if poisoned is not None:
+        # contamination spreads through accepted poisoned payloads
+        out["poisoned"] = poisoned | (accept & peer_poison)
+    return out
 
 
 def snapshot_params(newly, theta, theta_cnt, theta_age, theta_snap,
-                    snap_cnt, snap_age):
+                    snap_cnt, snap_age, *, poisoned=None, snap_poison=None):
     """Snapshot the parameter vector (and its merge bookkeeping) when a
     connection forms — the learning twin of ``form_connections``'s
-    ``snap``/``snap_has`` copy."""
-    return (
+    ``snap``/``snap_has`` copy. The contamination flag (when carried)
+    snapshots alongside: what a partner receives is as poisoned as the
+    node was at connection time."""
+    out = (
         jnp.where(newly[:, None], theta, theta_snap),
         jnp.where(newly, theta_cnt, snap_cnt),
         jnp.where(newly, theta_age, snap_age),
     )
+    if snap_poison is None:
+        return out
+    return out + (jnp.where(newly, poisoned, snap_poison),)
+
+
+def poison_snapshots(adv: dict, task: LearnTask, slot_idx, newly,
+                     theta_snap, snap_cnt, snap_age, snap_poison):
+    """Serve-side Byzantine attack: transform the *snapshot* adversarial
+    nodes just took, leaving their live replica — and every protocol
+    trace — untouched.
+
+    ``adv`` holds the static per-node attack vectors
+    (``repro.sim.faults.adv_vectors``). Modes: ``signflip`` serves the
+    negated parameters amplified by ``adv_scale`` (scale 1 = the plain
+    flip; larger scales are the classic boosted model-poisoning update),
+    ``noise`` adds ``adv_scale``-σ Gaussian noise (keyed off the learning
+    layer's own stream chain, never the engine key), ``replay`` always
+    serves the shared init, and ``liar`` serves honest parameters under a
+    bogus observation count ``adv_scale`` with age 0 (hijacking the
+    ``obs_count``/``staleness`` weights). The served payload of an
+    adversary is always flagged poisoned."""
+    is_adv = jnp.asarray(adv["is_adv"])
+    hit = newly & is_adv
+    poisoned = theta_snap
+    if adv["signflip"].any():
+        poisoned = jnp.where(
+            jnp.asarray(adv["signflip"])[:, None],
+            -jnp.asarray(adv["scale"])[:, None] * poisoned, poisoned,
+        )
+    if adv["replay"].any():
+        poisoned = jnp.where(
+            jnp.asarray(adv["replay"])[:, None],
+            task.theta0[None, :], poisoned,
+        )
+    if adv["noise"].any():
+        k_noise = jax.random.fold_in(
+            jax.random.fold_in(task.stream_key, 0xBAD), slot_idx
+        )
+        g = jax.random.normal(k_noise, theta_snap.shape, jnp.float32)
+        poisoned = jnp.where(
+            jnp.asarray(adv["noise"])[:, None],
+            poisoned + jnp.asarray(adv["scale"])[:, None] * g, poisoned,
+        )
+    theta_snap = jnp.where(hit[:, None], poisoned, theta_snap)
+    if adv["liar"].any():
+        liar_hit = hit & jnp.asarray(adv["liar"])
+        snap_cnt = jnp.where(liar_hit, jnp.asarray(adv["scale"]), snap_cnt)
+        snap_age = jnp.where(liar_hit, 0.0, snap_age)
+    snap_poison = jnp.where(hit, True, snap_poison)
+    return theta_snap, snap_cnt, snap_age, snap_poison
 
 
 def train_completions(lc: LearnConfig, task: LearnTask, slot_idx, did_train,
@@ -257,19 +478,47 @@ def train_completions(lc: LearnConfig, task: LearnTask, slot_idx, did_train,
 
 
 def learn_outputs(lc: LearnConfig, task: LearnTask, theta, theta_cnt,
-                  has_model, in_rz) -> dict:
-    """Per-sample learning telemetry (see the module docstring)."""
+                  has_model, in_rz, *, merge_stats, poisoned=None,
+                  cls1h=None) -> dict:
+    """Per-sample learning telemetry (see the module docstring).
+
+    Holder-conditioned means are masked means with an *explicit* fill for
+    the zero-holder slot (no holders → ``test_acc_holders`` falls back to
+    the population mean, counts/variance to 0) so a no-holder warmup
+    window cannot NaN — or silently zero-bias — the sweep reductions.
+    With the contamination carry on, adds ``poisoned_frac`` (poisoned
+    fraction among in-RZ holders) and its per-class split
+    ``poisoned_frac_c`` (the sim-side twin of
+    ``solve_contamination_classes``)."""
     acc = tiny.tiny_accuracy(lc.spec, theta, task.x_test, task.y_test)  # (N,)
     hold = has_model[:, LEARN_MODEL] & in_rz
     w = hold.astype(jnp.float32)
-    denom = jnp.maximum(jnp.sum(w), 1.0)
+    n_hold = jnp.sum(w)
+    denom = jnp.maximum(n_hold, 1.0)
+    any_hold = n_hold > 0.0
     mu = jnp.sum(w[:, None] * theta, axis=0) / denom                 # (D,)
     var = jnp.sum(
         w[:, None] * jnp.square(theta - mu[None, :]), axis=0
     ) / denom
-    return dict(
+    out = dict(
         test_acc=jnp.mean(acc),
-        test_acc_holders=jnp.sum(w * acc) / denom,
-        learn_obs=jnp.sum(w * theta_cnt) / denom,
-        theta_var=jnp.mean(var),
+        test_acc_holders=jnp.where(
+            any_hold, jnp.sum(w * acc) / denom, jnp.mean(acc)
+        ),
+        learn_obs=jnp.where(any_hold, jnp.sum(w * theta_cnt) / denom, 0.0),
+        theta_var=jnp.where(any_hold, jnp.mean(var), 0.0),
+        merge_stats=merge_stats,
     )
+    if poisoned is not None:
+        p = poisoned.astype(jnp.float32)
+        out["poisoned_frac"] = jnp.where(
+            any_hold, jnp.sum(w * p) / denom, 0.0
+        )
+        in_cls = jnp.where(hold[:, None], cls1h.astype(jnp.float32), 0.0)
+        n_c = jnp.sum(in_cls, axis=0)                                # (C,)
+        out["poisoned_frac_c"] = jnp.where(
+            n_c > 0.0,
+            jnp.einsum("n,nc->c", p, in_cls) / jnp.maximum(n_c, 1.0),
+            0.0,
+        )
+    return out

@@ -106,6 +106,15 @@ class SimState:
     theta_snap: Any = None       # (N, D) parameters at connection formation
     snap_cnt: Any = None         # (N,) count at connection formation
     snap_age: Any = None         # (N,) age at connection formation
+    merge_stats: Any = None      # (6,) int32 cumulative merge-screen
+                                 # counters (learn.N_MERGE_STATS layout)
+    # --- Byzantine carry (gated separately: contamination flags only when
+    # cfg.faults.adversarial, the peer buffer only for an enabled trimmed
+    # defense — see repro.sim.learn.init_fields) ---
+    poisoned: Any = None         # (N,) bool replica-contamination flag
+    snap_poison: Any = None      # (N,) bool payload flag at connection
+    peer_buf: Any = None         # (N, B, D) recent accepted peer payloads
+    peer_fill: Any = None        # (N,) int32 total accepted peers
 
     def replace(self, **kw) -> "SimState":
         return dataclasses.replace(self, **kw)
@@ -189,4 +198,4 @@ def _learn_fields(cfg, n: int) -> dict:
         return {}
     from repro.sim import learn
 
-    return learn.init_fields(lc, n)
+    return learn.init_fields(lc, n, fc=getattr(cfg, "faults", None))

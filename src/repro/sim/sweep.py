@@ -93,9 +93,14 @@ _LIGHT_KEYS = ("availability", "busy_frac", "stored", "model_holders",
 _FAULT_KEYS = ("availability_c", "on_frac_c", "n_in_rz_c")
 
 #: Gossip-learning telemetry (present only when ``cfg.learn`` is an
-#: enabled LearnConfig; all per-sample scalars). Reduced like the light
-#: keys on every reduction mode.
-_LEARN_KEYS = ("test_acc", "test_acc_holders", "learn_obs", "theta_var")
+#: enabled LearnConfig; per-sample scalars except the per-class
+#: contamination split — trailing class axis — which, with
+#: ``poisoned_frac``, is present only under an adversarial FaultConfig).
+#: Reduced like the light keys on every reduction mode; the cumulative
+#: ``merge_stats`` screen counters ride every reduction as their final
+#: sample, like ``fault_events``.
+_LEARN_KEYS = ("test_acc", "test_acc_holders", "learn_obs", "theta_var",
+               "poisoned_frac", "poisoned_frac_c")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +275,9 @@ def _reduce_outs(outs: dict, reduce: str, s0: int, qs, tau, t) -> dict:
     if "fault_events" in outs:
         # cumulative abort/link-fail/crash counters: final sample = run
         red["fault_events"] = outs["fault_events"][:, :, -1]
+    if "merge_stats" in outs:
+        # cumulative merge-screen counters (learning layer): same rule
+        red["merge_stats"] = outs["merge_stats"][:, :, -1]
     return red
 
 
@@ -596,6 +604,9 @@ def _finalize(setup: _SweepSetup, host_chunks: list, *, devices_used: int,
             test_acc_holders=outs.get("test_acc_holders"),
             learn_obs=outs.get("learn_obs"),
             theta_var=outs.get("theta_var"),
+            merge_stats=outs.get("merge_stats"),
+            poisoned_frac=outs.get("poisoned_frac"),
+            poisoned_frac_c=outs.get("poisoned_frac_c"),
             plan=plan, devices_used=devices_used, host_bytes=host_bytes,
             failed_chunks=failed, coverage=coverage,
             quarantined=quarantined, telemetry=telemetry,
